@@ -1,0 +1,74 @@
+"""Q1/Q2/Q3 latency benchmarks (paper Figures 10, 12, 13).
+
+Q1: 2-hop count   — actors who worked with director X
+Q2: 3-hop count   — "actors who played Batman" shape (entity->film->cast)
+Q3: star intersect — films by director X AND starring actor Y (AND genre)
+
+Reports avg and P99 end-to-end latency per query batch, the paper's
+availability metric ("if a system's 80th percentile latency is 100ms, the
+system's effective availability is only 80%").
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.query.executor import QueryCaps, run_queries
+from repro.data.kg import build_film_kg
+
+CAPS = QueryCaps(frontier=2048, expand=16384, results=32)
+
+
+def q1(did):
+    return {"type": "director", "id": int(did),
+            "_out_edge": {"type": "film.director",
+                          "_target": {"type": "film",
+                                      "_out_edge": {"type": "film.actor",
+                                                    "_target": {
+                                                        "type": "actor",
+                                                        "select": "count"}}}}}
+
+
+def q2(aid):
+    return {"type": "actor", "id": int(aid),
+            "_in_edge": {"type": "film.actor",
+                         "_target": {"type": "film",
+                                     "_out_edge": {"type": "film.genre",
+                                                   "_target": {
+                                                       "type": "genre",
+                                                       "select": "count"}}}}}
+
+
+def q3(did, aid):
+    return {"intersect": [
+        {"type": "director", "id": int(did),
+         "_out_edge": {"type": "film.director",
+                       "_target": {"type": "film"}}},
+        {"type": "actor", "id": int(aid),
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+
+
+def run(kg=None):
+    kg = kg or build_film_kg(n_films=150, n_actors=200, n_directors=30)
+    db = kg.db
+    rng = np.random.default_rng(0)
+    B = 16
+
+    for name, mk in [
+        ("Q1_2hop_count", lambda: [q1(d) for d in
+                                   rng.choice(kg.director_keys, B)]),
+        ("Q2_3hop_count", lambda: [q2(a) for a in
+                                   rng.choice(kg.actor_keys[:100], B)]),
+        ("Q3_star_intersect", lambda: [q3(d, a) for d, a in zip(
+            rng.choice(kg.director_keys, B),
+            rng.choice(kg.actor_keys[:100], B))]),
+    ]:
+        queries = mk()
+        avg, p99, _ = timeit(lambda: run_queries(db, queries, CAPS),
+                             warmup=1, iters=5)
+        emit(name, avg / B * 1e6,
+             f"batch={B};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f}")
+    return db
+
+
+if __name__ == "__main__":
+    run()

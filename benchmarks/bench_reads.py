@@ -1,0 +1,42 @@
+"""Read-time vs read-count (paper Figure 11 analogue).
+
+The paper plots total RDMA read time against the number of reads a worker
+performs (roughly linear, ~17us average per read).  Our analogue: batched
+snapshot vertex reads of increasing count against the storage layer — the
+linearity (and the per-read constant) is the property being reproduced;
+the absolute constant is CPU-bound here and TPU-gather-bound in production.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.store import gather_data
+from repro.data.kg import build_film_kg
+
+
+def run(kg=None):
+    kg = kg or build_film_kg(n_films=150, n_actors=200, n_directors=30)
+    db = kg.db
+    rng = np.random.default_rng(0)
+    rts = jnp.int32(db.snapshot_ts())
+    rows = []
+    for n_reads in (64, 256, 1024, 4096, 16384):
+        gids = jnp.asarray(rng.integers(0, 1024, n_reads).astype(np.int32))
+
+        def read():
+            f, i, alive = gather_data(db.store, db.cfg, gids, rts)
+            f.block_until_ready()
+
+        avg, p99, _ = timeit(read, warmup=1, iters=5)
+        rows.append((n_reads, avg))
+        emit(f"batched_reads_{n_reads}", avg * 1e6,
+             f"us_per_read={avg/n_reads*1e6:.3f}")
+    # linearity check: time(16384)/time(64) should be << 256x (batching wins)
+    ratio = rows[-1][1] / rows[0][1]
+    emit("read_batching_gain", 0.0,
+         f"t16384/t64={ratio:.1f}x;ideal_serial=256x")
+    return db
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Latency vs load vs cluster size (paper Figure 14).
+
+The paper sweeps clusters of 10/15/35/55 machines under increasing query
+load: below saturation latency is flat, and usable throughput grows with
+cluster size.  We reproduce the *protocol* on logical shard counts
+(1/2/4/8 shards on the CPU substrate): per-batch latency at increasing
+offered batch sizes per shard count.
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.query.executor import QueryCaps, run_queries
+from repro.data.kg import build_film_kg
+from repro.core.addressing import StoreConfig
+
+
+def q1(did):
+    return {"type": "director", "id": int(did),
+            "_out_edge": {"type": "film.director",
+                          "_target": {"type": "film",
+                                      "_out_edge": {"type": "film.actor",
+                                                    "_target": {
+                                                        "type": "actor",
+                                                        "select": "count"}}}}}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for shards in (1, 2, 4, 8):
+        cfg = StoreConfig(n_shards=shards, cap_v=max(2048 // shards, 512),
+                          cap_e=max(16384 // shards, 2048),
+                          cap_delta=512, cap_idx=max(4096 // shards, 512),
+                          cap_idx_delta=256, d_f32=2, d_i32=2)
+        kg = build_film_kg(n_films=100, n_actors=150, n_directors=24,
+                           cfg=cfg)
+        db = kg.db
+        caps = QueryCaps(frontier=1024, expand=8192, results=16)
+        for load in (4, 16):
+            queries = [q1(d) for d in rng.choice(kg.director_keys, load)]
+            avg, p99, _ = timeit(lambda: run_queries(db, queries, caps),
+                                 warmup=1, iters=3)
+            emit(f"scaling_s{shards}_load{load}", avg / load * 1e6,
+                 f"batch_ms={avg*1e3:.2f};qps={load/avg:.0f}")
+
+
+if __name__ == "__main__":
+    run()

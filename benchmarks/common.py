@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def timeit(fn, *, warmup: int = 2, iters: int = 10):
+    """Returns (avg_s, p99_s, all_times)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    a = np.asarray(ts)
+    return float(a.mean()), float(np.percentile(a, 99)), a
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")

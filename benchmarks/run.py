@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only queries,throughput,...]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_queries, bench_reads, bench_scaling,
+                            bench_throughput)
+    from repro.data.kg import build_film_kg
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    kg = None
+    if only is None or {"queries", "throughput", "reads"} & only:
+        kg = build_film_kg(n_films=150, n_actors=200, n_directors=30)
+    if only is None or "queries" in only:
+        bench_queries.run(kg)
+    if only is None or "throughput" in only:
+        bench_throughput.run(kg)
+    if only is None or "reads" in only:
+        bench_reads.run(kg)
+    if only is None or "scaling" in only:
+        bench_scaling.run()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Train a ~100M-parameter LM with the full production loop.
+
+Uses the real substrate stack: data pipeline with prefetch, AdamW with
+cosine schedule, checkpoint/restart (kill it mid-run and re-launch — it
+resumes), and the same step builder the dry-run lowers at 405B scale.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 20 --d-model 128  # demo
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.tokens import token_pipeline
+from repro.launch.mesh import make_test_mesh
+from repro.models.transformer import LMConfig, init_params, loss_fn
+from repro.optim.optimizers import AdamWConfig, init_opt_state, opt_update
+from repro.optim.schedules import linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=768)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = LMConfig(
+        name="lm-100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=args.d_model // 64, n_kv_heads=args.d_model // 128,
+        d_head=64, d_ff=4 * args.d_model, vocab=32768,
+        dtype=jnp.float32, remat=False)
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+
+    ocfg = AdamWConfig(lr=3e-4)
+    params = init_params(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params, ocfg)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if mgr.latest_step() is not None:
+        (params, opt_state), manifest = mgr.restore((params, opt_state))
+        start = manifest["step"]
+        print(f"resumed from checkpoint at step {start}")
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, targets):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, tokens, targets)
+        lr_scale = linear_warmup_cosine(opt_state.step, warmup_steps=20,
+                                        total_steps=args.steps)
+        params, opt_state, gnorm = opt_update(params, grads, opt_state,
+                                              ocfg, lr_scale)
+        return params, opt_state, loss, gnorm
+
+    data = token_pipeline(batch=args.batch, seq=args.seq, vocab=cfg.vocab)
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        toks, tgts = next(data)
+        params, opt_state, loss, gnorm = step_fn(params, opt_state, toks,
+                                                 tgts)
+        losses.append(float(loss))
+        if step % 10 == 0:
+            rate = args.batch * args.seq / ((time.time() - t0)
+                                            / max(step - start + 1, 1))
+            print(f"step {step:4d}  loss={float(loss):.4f} "
+                  f"gnorm={float(gnorm):.2f}  {rate/1e3:.1f}k tok/s")
+        if (step + 1) % 50 == 0:
+            mgr.save(step + 1, (params, opt_state), meta={"loss": float(loss)})
+    mgr.wait()
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f}); "
+          f"checkpoints at {args.ckpt_dir}")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

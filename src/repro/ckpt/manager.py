@@ -1,0 +1,141 @@
+"""Training checkpoint/restart with elastic resume.
+
+Fault-tolerance contract for the training driver:
+  * async save (a worker thread serializes off the critical path — the step
+    loop never blocks on disk);
+  * atomic publish (write to tmp dir, rename) so a crash mid-save never
+    corrupts the latest checkpoint;
+  * keep-N retention;
+  * **elastic resume**: checkpoints store unsharded logical arrays + the
+    pytree structure; ``restore`` re-device_puts onto whatever mesh/sharding
+    the *new* job uses — restarting 512-chip training on 256 chips (or vice
+    versa) is a sharding change, not a format change.
+
+bf16 is serialized via ml_dtypes (numpy-compatible).  No orbax/tensorstore
+in this environment — this manager IS the substrate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, *, meta: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write to disk async."""
+        self.wait()                      # one in-flight save at a time
+        host_leaves = jax.tree.map(np.asarray, tree)   # D2H copy now
+
+        def work():
+            try:
+                self._write(step, host_leaves, meta or {})
+                self._retain()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _write(self, step: int, tree, meta: dict) -> None:
+        paths, leaves, _ = _flatten_with_paths(tree)
+        tmp = os.path.join(self.dir, f".tmp_ckpt_{step}")
+        final = os.path.join(self.dir, f"ckpt_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "meta": meta, "leaves": []}
+        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+            arr = np.asarray(leaf)
+            fn = f"leaf_{i}.npy"
+            dtype_name = arr.dtype.name
+            if dtype_name == "bfloat16":
+                np.save(os.path.join(tmp, fn), arr.view(np.uint16))
+            else:
+                np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append(
+                {"path": p, "file": fn, "dtype": dtype_name,
+                 "shape": list(arr.shape)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic publish
+
+    def _retain(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"ckpt_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("ckpt_"):
+                out.append(int(fn.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, *, step: Optional[int] = None,
+                shardings=None):
+        """Rebuild the pytree.  ``template`` provides structure; values come
+
+        from disk.  ``shardings`` (same structure) re-shards onto the new
+        mesh — the elastic-resume path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        d = os.path.join(self.dir, f"ckpt_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        paths, leaves, treedef = _flatten_with_paths(template)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        out = []
+        shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                      else [None] * len(leaves))
+        import ml_dtypes
+        for p, tmpl, sh in zip(paths, leaves, shard_flat):
+            e = by_path[p]
+            arr = np.load(os.path.join(d, e["file"]))
+            if e["dtype"] == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out), manifest

@@ -1,0 +1,23 @@
+"""gcn-cora [arXiv:1609.02907; paper]
+
+2 layers, d_hidden 16, mean/sym aggregation — the classic Kipf & Welling
+citation-network configuration.
+"""
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, gnn_shapes, register
+from repro.models.gnn.gcn import GCNConfig
+
+FULL = GCNConfig(name="gcn-cora", n_layers=2, d_in=1433, d_hidden=16,
+                 n_classes=7, norm="sym", dtype=jnp.float32)
+
+REDUCED = GCNConfig(name="gcn-reduced", n_layers=2, d_in=64, d_hidden=8,
+                    n_classes=7, norm="sym", dtype=jnp.float32)
+
+SPEC = register(ArchSpec(
+    arch_id="gcn-cora", family="gnn", model=FULL, reduced=REDUCED,
+    shapes=gnn_shapes(d_feat_sm=1433, n_classes=7),
+    source="arXiv:1609.02907; verified-tier: paper",
+    note="full-graph SpMM over the A1 CSR store (segment_sum message "
+         "passing; segment_spmm Pallas kernel on TPU).",
+))

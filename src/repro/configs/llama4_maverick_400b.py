@@ -1,0 +1,34 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts
+top-1, early fusion.  Llama-4 interleaves dense and MoE layers; we model
+the assigned config as ("dense","moe") cycles with per-expert d_ff=8192
+(~400B total, ~17B active with top-1).  The modality frontend of the
+early-fusion stack is a stub per the assignment (input_specs provides
+token/patch embeddings).
+"""
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, lm_shapes, register
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="llama4-maverick-400b-a17b",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+    d_ff=8192, vocab=202048,
+    block_pattern=("dense", "moe"), n_experts=128, top_k=1,
+    expert_d_ff=8192, dtype=jnp.bfloat16, remat=True)
+
+REDUCED = LMConfig(
+    name="llama4-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=512, block_pattern=("dense", "moe"), n_experts=8,
+    top_k=1, expert_d_ff=128, dtype=jnp.float32, remat=False)
+
+SPEC = register(ArchSpec(
+    arch_id="llama4-maverick-400b-a17b", family="lm", model=FULL,
+    reduced=REDUCED, shapes=lm_shapes(window=0, accum_train=16),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    note="top-1 routing; dense|moe interleave; early-fusion frontend "
+         "stubbed (precomputed patch embeddings).",
+))

@@ -1,0 +1,29 @@
+"""qwen1.5-32b [hf:Qwen/Qwen1.5-0.5B; hf]
+
+64L d_model=5120 40H (GQA kv=40 = full MHA) d_ff=27392 vocab=152064,
+QKV bias (the Qwen1.5 signature).
+"""
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, lm_shapes, register
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="qwen1.5-32b",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, d_head=128,
+    d_ff=27392, vocab=152064, qkv_bias=True,
+    block_pattern=("dense",), dtype=jnp.bfloat16, remat=True)
+
+REDUCED = LMConfig(
+    name="qwen15-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=8, d_head=16,
+    d_ff=256, vocab=512, qkv_bias=True, block_pattern=("dense",),
+    dtype=jnp.float32, remat=False)
+
+SPEC = register(ArchSpec(
+    arch_id="qwen1.5-32b", family="lm", model=FULL, reduced=REDUCED,
+    shapes=lm_shapes(window=0, accum_train=8),
+    source="hf:Qwen/Qwen1.5-0.5B (family layout); verified-tier: hf",
+    note="QKV bias; kv_heads == heads (MHA); A1 technique inapplicable "
+         "(dense).",
+))

@@ -1,0 +1,107 @@
+"""Addressing: the FaRM 64-bit (region, offset) pointer, adapted to TPU shards.
+
+A1/FaRM addresses are ``(region_id:32, offset:32)`` pairs; the Configuration
+Manager maps region -> machine.  On a TPU mesh the "machine" is a mesh shard,
+and we encode the mapping *arithmetically* so that pointer -> owner resolution
+is a pure local computation (the paper's "mapping pointers to physical hosts is
+a local metadata operation with no remote accesses"):
+
+    gid   = slot * n_shards + shard        (global vertex id, int32)
+    owner = gid %  n_shards                (which shard holds the record)
+    slot  = gid // n_shards                (offset within the shard)
+
+Sequential allocation round-robins shards, reproducing A1's "vertices are
+placed randomly across the whole cluster".  Allocation *hints* (FaRM's
+``Alloc(size, hint)``) are honored by allocating in the hint's shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Sentinels
+# ---------------------------------------------------------------------------
+NULL = np.int32(-1)            # null pointer / empty slot marker
+TS_INF = np.int32(2**31 - 1)   # "live forever" delete timestamp
+TS_ZERO = np.int32(0)
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def owner_of(gid, n_shards: int):
+    """Shard that owns a global id.  Works on ints or arrays."""
+    return gid % n_shards
+
+
+def slot_of(gid, n_shards: int):
+    """Local slot of a global id within its owner shard."""
+    return gid // n_shards
+
+
+def gid_of(shard, slot, n_shards: int):
+    """Compose a global id from (shard, slot)."""
+    return slot * n_shards + shard
+
+
+def hash_route(key, salt, n_shards: int):
+    """Route a primary key to an index shard (A1 routes through the BTree;
+
+    we hash-partition the sorted index).  Knuth multiplicative mix keeps
+    adjacent keys from landing on the same shard.
+    """
+    h = (key * np.int32(-1640531527)) ^ (salt * np.int32(97))  # 2654435769 as i32
+    return (h % n_shards + n_shards) % n_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """Static layout of a sharded graph store (the FaRM region geometry).
+
+    Capacities are *per shard*.  All device arrays derived from this config
+    have static shapes; running out of capacity is surfaced as a fast-fail
+    flag (the paper fast-fails queries whose working set outgrows memory).
+    """
+
+    n_shards: int = 1            # number of storage shards (devices)
+    cap_v: int = 1024            # vertex slots per shard
+    cap_e: int = 8192            # out-edge CSR pool entries per shard
+    cap_delta: int = 1024        # edge delta-log entries per shard
+    cap_idx: int = 2048          # primary-index entries per shard
+    cap_idx_delta: int = 512     # primary-index delta entries per shard
+    d_f32: int = 4               # float32 attribute columns per vertex
+    d_i32: int = 4               # int32 attribute columns per vertex
+    d_ef32: int = 0              # float32 attribute columns per edge
+    with_in_edges: bool = True   # maintain incoming half-edges (reverse CSR)
+    replication: int = 1         # in-pod replica groups (fault domains)
+
+    @property
+    def total_v(self) -> int:
+        return self.n_shards * self.cap_v
+
+    @property
+    def total_e(self) -> int:
+        return self.n_shards * self.cap_e
+
+    def row_of_gid(self, gid):
+        """Row index into the flat (shard-major) vertex arrays."""
+        return (gid % self.n_shards) * self.cap_v + gid // self.n_shards
+
+    def indptr_row(self, gid):
+        """Row into the flat indptr array (shard-major, cap_v+1 per shard)."""
+        shard = gid % self.n_shards
+        slot = gid // self.n_shards
+        return shard * (self.cap_v + 1) + slot
+
+    def validate(self) -> None:
+        assert self.n_shards >= 1
+        assert self.cap_v >= 1 and self.cap_e >= 1
+        assert self.cap_v * self.n_shards < 2**31, "gid space overflow"
+
+
+def ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

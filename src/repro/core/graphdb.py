@@ -1,0 +1,510 @@
+"""GraphDB: the A1 database facade (data-plane + control-plane APIs, §3).
+
+The host process plays the role of an A1 *backend machine acting as
+coordinator*: it owns the catalog, the global clock, allocation metadata, and
+drives jitted device programs for everything data-touching.  The device arrays
+are "the cluster's memory"; the host never holds vertex data (only allocation
+bookkeeping), matching the coprocessor split of §2.2.
+
+Data-plane ops stage into :class:`Transaction` objects and are committed in
+batches (see txn.py).  If no transaction is supplied, each call runs under an
+implicit transaction committed immediately (§3: "a transaction is implicitly
+created for that operation").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edges as edges_mod
+from repro.core import index as index_mod
+from repro.core import txn as txn_mod
+from repro.core.addressing import NULL, TS_INF, StoreConfig, gid_of
+from repro.core.catalog import Catalog, EdgeType, VertexType
+from repro.core.store import (GraphStore, gather_data, gather_headers,
+                              make_store)
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+class GraphDB:
+    """One graph's storage + transactional data plane."""
+
+    def __init__(self, cfg: StoreConfig, *, catalog: Optional[Catalog] = None,
+                 tenant: str = "default", graph: str = "g",
+                 caps: Optional[txn_mod.BatchCaps] = None,
+                 replication_log=None):
+        cfg.validate()
+        self.cfg = cfg
+        self.caps = caps or txn_mod.BatchCaps()
+        self.store: GraphStore = make_store(cfg)
+        self.catalog = catalog or Catalog()
+        if tenant not in self.catalog.tenants:
+            self.catalog.create_tenant(tenant)
+        if graph not in self.catalog.tenants[tenant]:
+            self.catalog.create_graph(tenant, graph)
+        self.tenant, self.graph = tenant, graph
+
+        # -- coordinator metadata (host-side, checkpointed) -------------------
+        self.clock: int = 1                          # FaRMv2 global clock
+        S = cfg.n_shards
+        self.v_next = np.zeros(S, np.int64)          # next fresh slot per shard
+        self.v_free: list[list[int]] = [[] for _ in range(S)]   # vacuumed slots
+        self._rr = 0                                 # round-robin shard cursor
+        self.dl_count = np.zeros(S, np.int64)        # delta-log fill mirrors
+        self.il_count = np.zeros(S, np.int64)
+        self.xd_count = np.zeros(S, np.int64)
+        self.replication_log = replication_log       # recovery hook (§4)
+        self.stats = {"commits": 0, "aborts": 0, "compactions": 0}
+        self.active_query_ts: list[int] = []         # pins for GC (§2.2)
+
+    # ------------------------------------------------------------------
+    # schema (control plane; each call = its own implicit txn, §3)
+    # ------------------------------------------------------------------
+    def vertex_type(self, name: str, f_attrs=(), i_attrs=()) -> VertexType:
+        return self.catalog.create_vertex_type(
+            self.tenant, self.graph, name, f_attrs, i_attrs,
+            max_f_cols=self.cfg.d_f32, max_i_cols=self.cfg.d_i32)
+
+    def edge_type(self, name: str) -> EdgeType:
+        return self.catalog.create_edge_type(self.tenant, self.graph, name)
+
+    def vt(self, name: str) -> VertexType:
+        return self.catalog.proxy(self.tenant, self.graph, "v", name)
+
+    def et(self, name: str) -> EdgeType:
+        return self.catalog.proxy(self.tenant, self.graph, "e", name)
+
+    # ------------------------------------------------------------------
+    # transactions
+    # ------------------------------------------------------------------
+    def create_transaction(self) -> txn_mod.Transaction:
+        return txn_mod.Transaction(read_ts=self.clock)
+
+    def snapshot_ts(self) -> int:
+        return self.clock
+
+    # ------------------------------------------------------------------
+    # allocation (FaRM Alloc with locality hint)
+    # ------------------------------------------------------------------
+    def _alloc_vertex(self, hint_gid: Optional[int] = None) -> int:
+        S = self.cfg.n_shards
+        if hint_gid is not None and hint_gid >= 0:
+            order = [int(hint_gid) % S] + [s for s in range(S)
+                                           if s != int(hint_gid) % S]
+        else:
+            order = [(self._rr + i) % S for i in range(S)]
+            self._rr = (self._rr + 1) % S
+        for s in order:
+            if self.v_free[s]:
+                return gid_of(s, self.v_free[s].pop(), S)
+            if self.v_next[s] < self.cfg.cap_v:
+                slot = int(self.v_next[s])
+                self.v_next[s] += 1
+                return gid_of(s, slot, S)
+        raise CapacityError("vertex store full on all shards")
+
+    # ------------------------------------------------------------------
+    # data plane (stage into txn; commit immediately when txn is None)
+    # ------------------------------------------------------------------
+    def create_vertex(self, vtype: str, key: int, attrs: Optional[dict] = None,
+                      txn: Optional[txn_mod.Transaction] = None,
+                      hint: Optional[int] = None) -> int:
+        t, implicit = self._txn(txn)
+        vt = self.vt(vtype)
+        # uniqueness: probe the primary index inside the transaction
+        g, found = self.lookup_vertex(vtype, key, read_ts=t.read_ts)
+        if found:
+            raise ValueError(f"vertex ({vtype}, {key}) already exists")
+        f, i = self._encode_attrs(vt, attrs or {})
+        gid = self._alloc_vertex(hint)
+        t.create_v.append((gid, vt.type_id, int(key), f, i))
+        if implicit:
+            self.commit(t)
+        return gid
+
+    def update_vertex(self, gid: int, vtype: str, attrs: dict,
+                      txn: Optional[txn_mod.Transaction] = None) -> None:
+        t, implicit = self._txn(txn)
+        vt = self.vt(vtype)
+        cur_f, cur_i = self._read_data_host(gid, t.read_ts)
+        t.record_read(gid)
+        f, i = self._encode_attrs(vt, attrs, base_f=cur_f, base_i=cur_i)
+        t.update_v.append((gid, f, i))
+        if implicit:
+            self.commit(t)
+
+    def delete_vertex(self, gid: int, txn: Optional[txn_mod.Transaction] = None
+                      ) -> None:
+        """Delete a vertex and all its half-edges (the paper's §3.2 cascade:
+
+        the incoming edge list tells us every source vertex whose outgoing
+        half-edge must also be retired)."""
+        t, implicit = self._txn(txn)
+        vtid, key, alive = self._read_header_host(gid, t.read_ts)
+        t.record_read(gid)
+        if not alive:
+            raise ValueError(f"vertex {gid} not found")
+        outs = self.get_edges(gid, direction="out", read_ts=t.read_ts)
+        ins = self.get_edges(gid, direction="in", read_ts=t.read_ts)
+        for nbr, et in outs:
+            t.delete_e.append((gid, int(nbr), int(et)))
+        for nbr, et in ins:
+            t.delete_e.append((int(nbr), gid, int(et)))
+        t.delete_v.append((gid, int(vtid), int(key)))
+        if implicit:
+            self.commit(t)
+
+    def create_edge(self, src: int, dst: int, etype: str,
+                    txn: Optional[txn_mod.Transaction] = None,
+                    check: bool = True) -> None:
+        """``check=False`` skips the endpoint/duplicate reads — the bulk-load
+
+        fast path (the paper's daily map-reduce KG build bypasses the
+        read-validate round-trips too; uniqueness is then the loader's
+        contract)."""
+        t, implicit = self._txn(txn)
+        et = self.et(etype)
+        if check:
+            # endpoints must exist; reads recorded for OCC
+            for g in (src, dst):
+                _, _, alive = self._read_header_host(g, t.read_ts)
+                t.record_read(g)
+                if not alive:
+                    raise ValueError(f"endpoint {g} not found")
+            # single-edge-per-(src,type,dst) invariant (§3)
+            existing = self.get_edges(src, direction="out",
+                                      read_ts=t.read_ts, etype=et.type_id)
+            t.reads.append((int(src), "e"))
+            if any(int(n) == int(dst) for n, _ in existing):
+                raise ValueError("edge already exists")
+        t.create_e.append((int(src), int(dst), et.type_id))
+        if implicit:
+            self.commit(t)
+
+    def delete_edge(self, src: int, dst: int, etype: str,
+                    txn: Optional[txn_mod.Transaction] = None) -> None:
+        t, implicit = self._txn(txn)
+        et = self.et(etype)
+        t.reads.append((int(src), "e"))
+        t.delete_e.append((int(src), int(dst), et.type_id))
+        if implicit:
+            self.commit(t)
+
+    # ------------------------------------------------------------------
+    # reads (host conveniences; bulk reads go through the query engine)
+    # ------------------------------------------------------------------
+    def lookup_vertex(self, vtype: str, key: int, read_ts: Optional[int] = None
+                      ) -> tuple[int, bool]:
+        vt = self.vt(vtype)
+        rts = self.clock if read_ts is None else read_ts
+        g, found = index_mod.lookup(
+            self.store, self.cfg,
+            jnp.asarray([vt.type_id], jnp.int32),
+            jnp.asarray([int(key)], jnp.int32),
+            jnp.asarray([True]), jnp.int32(rts))
+        return int(g[0]), bool(found[0])
+
+    def get_vertex(self, vtype: str, key: int) -> Optional[dict]:
+        vt = self.vt(vtype)
+        gid, found = self.lookup_vertex(vtype, key)
+        if not found:
+            return None
+        f, i = self._read_data_host(gid, self.clock)
+        out = {"gid": gid, "key": key}
+        for a in vt.attrs:
+            out[a.name] = float(f[a.col]) if a.kind == "f32" else int(i[a.col])
+        return out
+
+    def get_edges(self, gid: int, *, direction: str = "out",
+                  read_ts: Optional[int] = None, etype: int = -1,
+                  cap: int = 4096) -> list[tuple[int, int]]:
+        rts = self.clock if read_ts is None else read_ts
+        q, n, v, ovf = edges_mod.expand(
+            self.store, self.cfg,
+            jnp.zeros((1,), jnp.int32), jnp.asarray([gid], jnp.int32),
+            jnp.asarray([True]), etype=jnp.int32(etype), direction=direction,
+            read_ts=jnp.int32(rts), cap_out=cap)
+        if bool(ovf):
+            raise CapacityError("edge enumeration overflow; raise cap")
+        # recover edge types by re-expanding per type is wasteful; instead
+        # return (nbr, etype) pairs from a typed expansion
+        nbrs = np.asarray(n)
+        valid = np.asarray(v)
+        types = np.asarray(self._expand_types(gid, direction, rts, cap))
+        out = []
+        for nbr, ok, et in zip(nbrs, valid, types):
+            if ok:
+                out.append((int(nbr), int(et)))
+        return out
+
+    def _expand_types(self, gid, direction, rts, cap):
+        """Edge types aligned with expand()'s output layout."""
+        st, cfg = self.store, self.cfg
+        S, cap_v, cap_e = cfg.n_shards, cfg.cap_v, cfg.cap_e
+        if direction == "out":
+            indptr, typ = st.oe_indptr, st.oe_type
+            dslot, dtyp, dnbr = st.dl_slot, st.dl_type, st.dl_nbr
+        else:
+            indptr, typ = st.ie_indptr, st.ie_type
+            dslot, dtyp, dnbr = st.il_slot, st.il_type, st.il_nbr
+        sh, sl = gid % S, gid // S
+        start = int(indptr[sh * (cap_v + 1) + sl]) + sh * cap_e
+        k = np.arange(cap)
+        csr_t = np.asarray(typ)[np.minimum(start + k, S * cap_e - 1)]
+        D = dslot.shape[0]
+        d_shard = np.arange(D) // cfg.cap_delta
+        d_gid = np.asarray(dslot) * S + d_shard
+        dt = np.where(d_gid == gid, np.asarray(dtyp), -1)
+        return np.concatenate([csr_t, dt])
+
+    # ------------------------------------------------------------------
+    # commit
+    # ------------------------------------------------------------------
+    def commit(self, txn: txn_mod.Transaction) -> str:
+        return self.commit_many([txn])[0]
+
+    def commit_many(self, txns: Sequence[txn_mod.Transaction]) -> list[str]:
+        """Validate + apply a commit batch.  Returns per-txn status."""
+        caps = self.caps
+        # 1) OCC validation against committed state -------------------------
+        gids, kinds, owner = [], [], []
+        for i, t in enumerate(txns):
+            for g, kind in t.reads:
+                gids.append(g)
+                kinds.append(1 if kind == "e" else 0)
+                owner.append(i)
+        status = ["COMMITTED"] * len(txns)
+        R = self.caps.reads
+        for off in range(0, len(gids), R):
+            lw = np.asarray(txn_mod.last_write_ts(
+                self.store, self.cfg,
+                txn_mod.pad_i32(gids[off:off + R], R),
+                txn_mod.pad_i32(kinds[off:off + R], R, fill=0)))
+            for g, k, i, w in zip(gids[off:off + R], kinds[off:off + R],
+                                  owner[off:off + R], lw):
+                if int(w) > txns[i].read_ts:
+                    status[i] = "ABORTED"
+        # 2) intra-batch conflicts, first-wins: a later txn aborts if it
+        #    writes an object an earlier winner wrote, or reads an object an
+        #    earlier winner wrote (so every winner reads pre-batch state and
+        #    the batch serializes in any order).
+        taken: set = set()
+        for i, t in enumerate(txns):
+            if status[i] == "ABORTED":
+                continue
+            wk = t.write_keys()
+            if (wk & taken) or (t.read_keys() & taken):
+                status[i] = "ABORTED"
+            else:
+                taken |= wk
+        winners = [t for i, t in enumerate(txns) if status[i] == "COMMITTED"]
+        for i, t in enumerate(txns):
+            t.status = status[i]
+        if not winners:
+            self.stats["aborts"] += len(txns)
+            return status
+
+        # 3) capacity management: compact if the logs would overflow ----------
+        n_ce = sum(len(t.create_e) for t in winners)
+        n_cv = sum(len(t.create_v) for t in winners)
+        n_dv = sum(len(t.delete_v) for t in winners)
+        if (self.dl_count.max(initial=0) + n_ce > self.cfg.cap_delta
+                or self.il_count.max(initial=0) + n_ce > self.cfg.cap_delta):
+            self.run_compaction()
+        if self.xd_count.max(initial=0) + n_cv + n_dv > self.cfg.cap_idx_delta:
+            self.run_index_compaction()
+
+        # 4) apply winners, chunked under the static batch caps.  Winners are
+        #    mutually conflict-free, so chunked application at increasing
+        #    timestamps preserves the batch's serializable order.
+        for chunk in self._chunks(winners):
+            ts = self.clock + 1
+            b = self._build_batch(chunk)
+            assert b is not None
+            self.store = txn_mod.apply_batch(self.store, self.cfg,
+                                             jnp.int32(ts), *b)
+            self.clock = ts
+            if self.replication_log is not None:
+                self.replication_log.append(ts, chunk)
+        self.stats["commits"] += len(winners)
+        self.stats["aborts"] += len(txns) - len(winners)
+        return status
+
+    def _chunks(self, winners):
+        caps = self.caps
+        out, acc = [], []
+        ncv = nuv = ndv = nce = nde = 0
+        for t in winners:
+            if acc and (ncv + len(t.create_v) > caps.create_v
+                        or nuv + len(t.update_v) > caps.update_v
+                        or ndv + len(t.delete_v) > caps.delete_v
+                        or nce + len(t.create_e) > caps.create_e
+                        or nde + len(t.delete_e) > caps.delete_e):
+                out.append(acc)
+                acc, ncv, nuv, ndv, nce, nde = [], 0, 0, 0, 0, 0
+            acc.append(t)
+            ncv += len(t.create_v)
+            nuv += len(t.update_v)
+            ndv += len(t.delete_v)
+            nce += len(t.create_e)
+            nde += len(t.delete_e)
+            if (len(t.create_v) > caps.create_v or len(t.update_v) > caps.update_v
+                    or len(t.delete_v) > caps.delete_v
+                    or len(t.create_e) > caps.create_e
+                    or len(t.delete_e) > caps.delete_e):
+                raise CapacityError(
+                    "single transaction exceeds batch caps; raise BatchCaps")
+        if acc:
+            out.append(acc)
+        return out
+
+    def _build_batch(self, winners):
+        caps, cfg = self.caps, self.cfg
+        S = cfg.n_shards
+        cv, uv, dv, ce, de = [], [], [], [], []
+        for t in winners:
+            cv += t.create_v
+            uv += t.update_v
+            dv += t.delete_v
+            ce += t.create_e
+            de += t.delete_e
+        if (len(cv) > caps.create_v or len(uv) > caps.update_v
+                or len(dv) > caps.delete_v or len(ce) > caps.create_e
+                or len(de) > caps.delete_e):
+            return None
+
+        # index-delta positions for creates (host-assigned, per index shard)
+        xpos = []
+        for gid, vtid, key, f, i in cv:
+            sh = index_mod.route_host(vtid, key, S)
+            xpos.append(sh * cfg.cap_idx_delta + int(self.xd_count[sh]))
+            self.xd_count[sh] += 1
+        # delta-log positions for edge creates
+        opos, ipos = [], []
+        for s, d, et in ce:
+            so, sd = s % S, d % S
+            opos.append(so * cfg.cap_delta + int(self.dl_count[so]))
+            self.dl_count[so] += 1
+            ipos.append(sd * cfg.cap_delta + int(self.il_count[sd]))
+            self.il_count[sd] += 1
+
+        p32 = txn_mod.pad_i32
+        b = (
+            p32([x[0] for x in cv], caps.create_v),
+            p32([x[1] for x in cv], caps.create_v),
+            p32([x[2] for x in cv], caps.create_v),
+            txn_mod.pad_f32([x[3] for x in cv], caps.create_v, cfg.d_f32),
+            txn_mod.pad_i32_2d([x[4] for x in cv], caps.create_v, cfg.d_i32),
+            p32(xpos, caps.create_v),
+            p32([x[0] for x in uv], caps.update_v),
+            txn_mod.pad_f32([x[1] for x in uv], caps.update_v, cfg.d_f32),
+            txn_mod.pad_i32_2d([x[2] for x in uv], caps.update_v, cfg.d_i32),
+            p32([x[0] for x in dv], caps.delete_v),
+            p32([x[1] for x in dv], caps.delete_v),
+            p32([x[2] for x in dv], caps.delete_v),
+            p32([x[0] for x in ce], caps.create_e),
+            p32([x[1] for x in ce], caps.create_e),
+            p32([x[2] for x in ce], caps.create_e),
+            p32(opos, caps.create_e),
+            p32(ipos, caps.create_e),
+            p32([x[0] for x in de], caps.delete_e),
+            p32([x[1] for x in de], caps.delete_e),
+            p32([x[2] for x in de], caps.delete_e),
+            jnp.asarray(self.dl_count, jnp.int32),
+            jnp.asarray(self.il_count, jnp.int32),
+            jnp.asarray(self.xd_count, jnp.int32),
+        )
+        return b
+
+    # ------------------------------------------------------------------
+    # maintenance (invoked by the Task framework)
+    # ------------------------------------------------------------------
+    def gc_ts(self) -> int:
+        """Records with delete_ts <= gc_ts are invisible to every running or
+
+        future query (visibility is ``rts < delete_ts``), so they may be
+        reclaimed — the paper GC's versions once no query pins them (§2.2)."""
+        pins = self.active_query_ts
+        return min(pins) if pins else self.clock
+
+    def run_compaction(self) -> None:
+        self.store = edges_mod.compact(self.store, self.cfg,
+                                       jnp.int32(self.gc_ts()))
+        self.dl_count[:] = 0
+        self.il_count[:] = 0
+        self.stats["compactions"] += 1
+
+    def run_index_compaction(self) -> None:
+        self.store = index_mod.compact_index(self.store, self.cfg,
+                                             jnp.int32(self.gc_ts()))
+        self.xd_count[:] = 0
+
+    def vacuum(self) -> int:
+        """Reclaim vertex slots dead before gc_ts (offline GC of tombstones)."""
+        gc = self.gc_ts()
+        v_delete = np.asarray(self.store.v_delete)
+        vtype = np.asarray(self.store.vtype)
+        S, cap_v = self.cfg.n_shards, self.cfg.cap_v
+        n = 0
+        for s in range(S):
+            blk = slice(s * cap_v, (s + 1) * cap_v)
+            dead = np.where((v_delete[blk] <= gc) & (vtype[blk] >= 0))[0]
+            for slot in dead:
+                if int(slot) < self.v_next[s]:
+                    self.v_free[s].append(int(slot))
+                    n += 1
+        if n:
+            # wipe headers so reclaimed slots read as empty
+            rows = []
+            for s in range(S):
+                rows += [s * cap_v + sl for sl in self.v_free[s]]
+            r = jnp.asarray(rows, jnp.int32)
+            self.store = dataclasses.replace(
+                self.store,
+                vtype=self.store.vtype.at[r].set(NULL),
+                v_create=self.store.v_create.at[r].set(TS_INF),
+                v_delete=self.store.v_delete.at[r].set(TS_INF))
+        return n
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _txn(self, txn):
+        if txn is None:
+            return self.create_transaction(), True
+        if txn.status != "OPEN":
+            raise txn_mod.Aborted(f"transaction is {txn.status}")
+        return txn, False
+
+    def _encode_attrs(self, vt: VertexType, attrs: dict,
+                      base_f=None, base_i=None):
+        f = np.zeros(self.cfg.d_f32, np.float32) if base_f is None \
+            else np.array(base_f, np.float32)
+        i = np.zeros(self.cfg.d_i32, np.int32) if base_i is None \
+            else np.array(base_i, np.int32)
+        for name, val in attrs.items():
+            a = vt.attr(name)
+            if a.kind == "f32":
+                f[a.col] = float(val)
+            else:
+                i[a.col] = int(val)
+        return f, i
+
+    def _read_header_host(self, gid: int, rts: int):
+        vt, key, alive = gather_headers(
+            self.store, self.cfg, jnp.asarray([gid], jnp.int32),
+            jnp.int32(rts))
+        return int(vt[0]), int(key[0]), bool(alive[0])
+
+    def _read_data_host(self, gid: int, rts: int):
+        f, i, alive = gather_data(
+            self.store, self.cfg, jnp.asarray([gid], jnp.int32),
+            jnp.int32(rts))
+        return np.asarray(f[0]), np.asarray(i[0])

@@ -1,0 +1,165 @@
+"""A1QL: the MQL-like JSON traversal language (§3.4, Fig. 8).
+
+A query is a nested JSON document; each nesting level is one traversal step.
+Example (the paper's "actors who worked with Steven Spielberg", Fig. 8):
+
+    {"type": "director", "id": 4242,
+     "_out_edge": {"type": "film.director",
+                   "_target": {"type": "film",
+                               "_out_edge": {"type": "film.actor",
+                                             "_target": {"select": "count"}}}}}
+
+Supported constructs:
+  * ``type`` / ``id``           — start vertex via primary index
+  * ``_out_edge`` / ``_in_edge``— traverse typed (or any: type "*") edges
+  * ``_target``                 — the next level; may carry ``type`` (target
+                                  vertex type check) and ``filter``
+  * ``filter``                  — {"attr": name, "op": ..., "value": v}
+  * ``select``                  — "count" | "*" | [attr, ...]  (terminal)
+  * ``{"intersect": [q1, q2, ...], "select": ...}`` — star pattern (Q3):
+    vertices reached by *every* branch.
+
+The parser resolves names against the catalog and produces a :class:`Plan`
+(the paper's logical plan; A1 has no optimizer — "most queries are
+straightforward and executed without any optimization", and optional hints
+map 1:1 onto our static capacity knobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+_OPS = ("==", "!=", "<", "<=", ">", ">=")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    kind: str        # 'f32' | 'i32' | 'key'
+    col: int
+    op: str
+    val: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    direction: str               # 'out' | 'in'
+    etype: int                   # resolved edge-type id, -1 = any
+    target_vtype: int = -1       # -1 = unchecked
+    pred: Optional[Pred] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    start_vtype: int
+    hops: tuple[Hop, ...]
+    terminal: str                        # 'count' | 'select'
+    select_kind: tuple = ()              # per col: 'f32'|'i32'|'key'
+    select_cols: tuple = ()              # column ids (parallel to kinds)
+    branches: tuple["Plan", ...] = ()    # intersect-of-branches when set
+    final_pred: Optional[Pred] = None
+
+    @property
+    def is_intersect(self) -> bool:
+        return bool(self.branches)
+
+    def signature(self):
+        """Structural key for the compiled-executor cache."""
+        if self.is_intersect:
+            return ("intersect", tuple(b.signature() for b in self.branches),
+                    self.terminal, self.select_kind, self.select_cols,
+                    _psig(self.final_pred))
+        return ("chain", tuple((h.direction, _psig(h.pred)) for h in self.hops),
+                self.terminal, self.select_kind, self.select_cols,
+                _psig(self.final_pred))
+
+
+def _psig(p: Optional[Pred]):
+    return None if p is None else (p.kind, p.op)
+
+
+class ParseError(ValueError):
+    pass
+
+
+def _parse_pred(db, vtype_name: Optional[str], node) -> Pred:
+    attr, op, val = node.get("attr"), node.get("op", "=="), node.get("value")
+    if op not in _OPS:
+        raise ParseError(f"bad op {op!r}")
+    if attr == "key" or vtype_name is None:
+        return Pred("key", 0, op, float(val))
+    a = db.vt(vtype_name).attr(attr)
+    return Pred(a.kind, a.col, op, float(val))
+
+
+def parse(db, q: dict) -> tuple[Plan, int]:
+    """Parse one A1QL document.  Returns (plan, start_key)."""
+    if "intersect" in q:
+        parsed = [parse(db, b) for b in q["intersect"]]
+        plans = tuple(p for p, _ in parsed)
+        keys = [k for _, k in parsed]
+        term, kinds, cols = _parse_select(db, q)
+        fp = None
+        if "filter" in q:
+            fp = _parse_pred(db, q.get("type"), q["filter"])
+        plan = Plan(start_vtype=-1, hops=(), terminal=term,
+                    select_kind=kinds, select_cols=cols, branches=plans,
+                    final_pred=fp)
+        return plan, keys          # list of per-branch start keys
+    if "type" not in q or "id" not in q:
+        raise ParseError("query must start with {'type', 'id'}")
+    vt = db.vt(q["type"])
+    hops = []
+    node = q
+    vtype_name = q["type"]
+    term, kinds, cols, fp = "count", (), (), None
+    while True:
+        edge_key = ("_out_edge" if "_out_edge" in node
+                    else "_in_edge" if "_in_edge" in node else None)
+        if edge_key is None:
+            term, kinds, cols = _parse_select(db, node,
+                                              vtype_name=vtype_name)
+            if "filter" in node and node is not q:
+                fp = _parse_pred(db, vtype_name, node["filter"])
+            break
+        e = node[edge_key]
+        et_name = e.get("type", "*")
+        etid = -1 if et_name == "*" else db.et(et_name).type_id
+        tgt = e.get("_target", {})
+        t_name = tgt.get("type")
+        t_id = db.vt(t_name).type_id if t_name else -1
+        pred = (_parse_pred(db, t_name, tgt["filter"])
+                if "filter" in tgt else None)
+        hops.append(Hop(direction="out" if edge_key == "_out_edge" else "in",
+                        etype=etid, target_vtype=t_id, pred=pred))
+        node = tgt
+        vtype_name = t_name
+    if not hops:
+        raise ParseError("query needs at least one traversal step")
+    plan = Plan(start_vtype=vt.type_id, hops=tuple(hops), terminal=term,
+                select_kind=kinds, select_cols=cols, final_pred=fp)
+    return plan, int(q["id"])
+
+
+def _parse_select(db, node, vtype_name: Optional[str] = None):
+    sel = node.get("select", "count")
+    if sel == "count":
+        return "count", (), ()
+    if sel == "*" or sel == ["*"]:
+        if vtype_name is None:
+            return "select", ("key",), (0,)
+        vt = db.vt(vtype_name)
+        kinds = ("key",) + tuple(a.kind for a in vt.attrs)
+        cols = (0,) + tuple(a.col for a in vt.attrs)
+        return "select", kinds, cols
+    if isinstance(sel, (list, tuple)):
+        kinds, cols = [], []
+        for name in sel:
+            if name == "key":
+                kinds.append("key")
+                cols.append(0)
+            else:
+                a = db.vt(vtype_name).attr(name)
+                kinds.append(a.kind)
+                cols.append(a.col)
+        return "select", tuple(kinds), tuple(cols)
+    raise ParseError(f"bad select {sel!r}")

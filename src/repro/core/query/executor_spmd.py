@@ -1,0 +1,407 @@
+"""Distributed query execution: query shipping on a TPU mesh (§3.4).
+
+This is the paper's coordinator/worker protocol compiled into one SPMD
+program.  Per hop:
+
+  1. *map pointers -> hosts*: each shard buckets its live frontier pairs by
+     ``owner = gid % S`` — pure local arithmetic, like A1's CM metadata;
+  2. *batched RPCs*: one ``all_to_all`` ships every bucket to its owner
+     (operators move, not data);
+  3. *worker step*: the owner checks arrived vertices (liveness, type,
+     predicate — A1's "predicate evaluation" operator), enumerates edges from
+     its local CSR block + delta log ("edge enumeration"), and emits
+     (qid, dst) pairs;
+  4. *repartition*: emitted pairs stay put — the next hop's routing step is
+     exactly the paper's "repartitioned by pointer address".
+
+Dedup happens shard-locally after routing (each gid has one owner, so local
+dedup is global dedup — the coordinator's "duplicates removed" with no extra
+collective).  Counts aggregate with one psum.  Capacity overflow anywhere
+raises the fast-fail flag (§3.4: no spill, the query is discarded).
+
+The local executor (executor.py) defines the semantics; tests assert this
+program produces identical results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core.addressing import NULL, TS_INF, StoreConfig
+from repro.core.query.a1ql import Hop, Plan, Pred
+from repro.core.query.executor import (I32MAX, QueryCaps, QueryResult,
+                                       eval_pred, sort_pairs, dedup_compact)
+from repro.core.store import GraphStore, visible
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# local-block primitives (the "worker" operators)
+# ---------------------------------------------------------------------------
+
+def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
+                  read_ts):
+    """Primary-index probe against *my* index block.  Only queries whose key
+
+    routes to me produce a gid; everyone else emits NULL (they find it on
+    their own shard)."""
+    S, cap_x, cap_xd = cfg.n_shards, cfg.cap_idx, cfg.cap_idx_delta
+    mine = valid & (index_mod.route(vtypes, keys, S) == me)
+    h = index_mod.mix32(vtypes, keys)
+    ix_h = jnp.where(st.ix_gid >= 0, index_mod.mix32(st.ix_vtype, st.ix_key),
+                     I32MAX)
+
+    def probe(hq, vt, k, ok):
+        pos = jnp.searchsorted(ix_h, hq, side="left").astype(jnp.int32)
+        best_g, best_ts = jnp.int32(NULL), jnp.int32(-1)
+        for w in range(16):
+            p = jnp.minimum(pos + w, cap_x - 1)
+            hit = ((st.ix_gid[p] >= 0) & (st.ix_vtype[p] == vt)
+                   & (st.ix_key[p] == k)
+                   & visible(st.ix_create[p], st.ix_delete[p], read_ts))
+            newer = hit & (st.ix_create[p] > best_ts)
+            best_g = jnp.where(newer, st.ix_gid[p], best_g)
+            best_ts = jnp.where(newer, st.ix_create[p], best_ts)
+        return jnp.where(ok, best_g, NULL), best_ts
+
+    g_main, ts_main = jax.vmap(probe)(h, vtypes, keys, mine)
+    # delta scan
+    m = (mine[:, None]
+         & (st.xd_vtype[None, :] == vtypes[:, None])
+         & (st.xd_key[None, :] == keys[:, None])
+         & (st.xd_gid >= 0)[None, :]
+         & visible(st.xd_create, st.xd_delete, read_ts)[None, :])
+    ts_d = jnp.where(m, st.xd_create[None, :], -1)
+    best_d = jnp.argmax(ts_d, axis=1)
+    ts_delta = jnp.max(ts_d, axis=1)
+    g_delta = jnp.where(ts_delta >= 0, st.xd_gid[best_d], NULL)
+    return jnp.where(ts_delta > ts_main, g_delta, g_main)
+
+
+def _expand_local(st: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
+                  etype: int, direction: str, read_ts, cap_out: int):
+    """Edge enumeration from my CSR block + delta log (gids owned by me)."""
+    S = cfg.n_shards
+    if direction == "out":
+        indptr, nbr, typ, ecre, edel = (st.oe_indptr, st.oe_dst, st.oe_type,
+                                        st.oe_create, st.oe_delete)
+        dslot, dnbr, dtyp, dcre, ddel = (st.dl_slot, st.dl_nbr, st.dl_type,
+                                         st.dl_create, st.dl_delete)
+    else:
+        indptr, nbr, typ, ecre, edel = (st.ie_indptr, st.ie_src, st.ie_type,
+                                        st.ie_create, st.ie_delete)
+        dslot, dnbr, dtyp, dcre, ddel = (st.il_slot, st.il_nbr, st.il_type,
+                                         st.il_create, st.il_delete)
+    slot = jnp.where(valid, gids // S, 0)
+    start = indptr[slot]
+    deg = (indptr[slot + 1] - indptr[slot]) * valid
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    overflow = total > cap_out
+    k = jnp.arange(cap_out, dtype=jnp.int32)
+    item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+    item_c = jnp.minimum(item, deg.shape[0] - 1)
+    base = cum[item_c] - deg[item_c]
+    epos = jnp.where(k < total, start[item_c] + (k - base), 0)
+    et = jnp.int32(etype)
+    e_ok = ((k < total)
+            & visible(ecre[epos], edel[epos], read_ts)
+            & ((et < 0) | (typ[epos] == et))
+            & (nbr[epos] >= 0))
+    out_q = jnp.where(e_ok, qids[item_c], NULL)
+    out_n = jnp.where(e_ok, nbr[epos], NULL)
+
+    # ---- delta merge (tier 2), §Perf a1-kg iter 1 --------------------------
+    # The naive (frontier x delta) match matrix flattens to F*cap_delta
+    # entries (134M at serving caps) that the dedup then has to SORT —
+    # measured 40GB/device/batch of pure memory traffic.  Instead sort the
+    # frontier by slot once and binary-search each delta entry into it,
+    # emitting at most MULTI_Q frontier matches per entry (more than
+    # MULTI_Q concurrent queries parked on one hot vertex fast-fails, the
+    # paper's §3.4 capacity contract).  Output: cap_delta*MULTI_Q entries.
+    MULTI_Q = 8
+    D = dslot.shape[0]
+    slot_key = jnp.where(valid, slot, I32MAX)
+    slot_s, qid_s = jax.lax.sort((slot_key, qids), num_keys=1)
+    d_ok = ((dnbr >= 0) & visible(dcre, ddel, read_ts)
+            & ((et < 0) | (dtyp == et)))
+    d_slot_q = jnp.where(d_ok, dslot, I32MAX)
+    lo = jnp.searchsorted(slot_s, d_slot_q, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(slot_s, d_slot_q, side="right").astype(jnp.int32)
+    overflow = overflow | jnp.any(d_ok & (hi - lo > MULTI_Q))
+    w = jnp.arange(MULTI_Q, dtype=jnp.int32)
+    pos = jnp.minimum(lo[:, None] + w[None, :],
+                      slot_s.shape[0] - 1)                  # (D, MULTI_Q)
+    hit = (lo[:, None] + w[None, :] < hi[:, None]) & d_ok[:, None]
+    dq = jnp.where(hit, qid_s[pos], NULL).reshape(-1)
+    dn = jnp.where(hit, jnp.broadcast_to(dnbr[:, None], hit.shape),
+                   NULL).reshape(-1)
+    return (jnp.concatenate([out_q, dq]), jnp.concatenate([out_n, dn]),
+            overflow)
+
+
+def _check_local(st: GraphStore, cfg: StoreConfig, gids, valid, read_ts,
+                 target_vtype: int, pred: Optional[Pred]):
+    """Liveness/type/predicate of vertices I own (arrived via routing)."""
+    S = cfg.n_shards
+    rows = jnp.where(valid, gids // S, 0)
+    alive = valid & visible(st.v_create[rows], st.v_delete[rows], read_ts)
+    if target_vtype >= 0:
+        alive = alive & (st.vtype[rows] == jnp.int32(target_vtype))
+    if pred is not None:
+        use_cur = st.vdata_ts[rows] <= read_ts
+        f = jnp.where(use_cur[:, None], st.vdata_f[rows], st.vprev_f[rows])
+        i = jnp.where(use_cur[:, None], st.vdata_i[rows], st.vprev_i[rows])
+        alive = alive & eval_pred(pred, f, i, st.vkey[rows])
+    return alive
+
+
+def _route(qids, gids, valid, S: int, B: int, axes):
+    """Bucket by owner + one all_to_all (the batched per-machine RPCs)."""
+    N = qids.shape[0]
+    owner = jnp.where(valid, gids % S, S)
+    o_s, q_s, g_s = jax.lax.sort((owner, qids, gids), num_keys=1)
+    starts = jnp.searchsorted(o_s, jnp.arange(S, dtype=jnp.int32),
+                              side="left").astype(jnp.int32)
+    idx = jnp.arange(N, dtype=jnp.int32)
+    ow = jnp.minimum(o_s, S - 1)
+    col = idx - starts[ow]
+    ok = o_s < S
+    overflow = jnp.any(ok & (col >= B))
+    row = jnp.where(ok & (col < B), o_s, I32MAX)
+    colc = jnp.where(ok & (col < B), col, I32MAX)
+    bq = jnp.full((S, B), NULL, jnp.int32).at[row, colc].set(q_s, mode="drop")
+    bg = jnp.full((S, B), NULL, jnp.int32).at[row, colc].set(g_s, mode="drop")
+    rq = jax.lax.all_to_all(bq, axes, split_axis=0, concat_axis=0, tiled=True)
+    rg = jax.lax.all_to_all(bg, axes, split_axis=0, concat_axis=0, tiled=True)
+    return rq.reshape(-1), rg.reshape(-1), overflow
+
+
+# ---------------------------------------------------------------------------
+# the SPMD program
+# ---------------------------------------------------------------------------
+
+def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts):
+    """Index scan + hops; returns local (qids, gids, valid, pending, failed).
+
+    ``pending`` is the (vtype, pred) check owed to the *next* routing step —
+    vertex predicates are evaluated at the vertex's owner (query shipping).
+    """
+    S, F, B = cfg.n_shards, caps.frontier, caps.bucket
+    Q = keys.shape[0]
+    me = jax.lax.axis_index(axes).astype(jnp.int32)
+    vt = jnp.full((Q,), plan.start_vtype, jnp.int32)
+    g0 = _lookup_local(st, cfg, me, vt, keys, valid, read_ts)
+    qids = jnp.where(g0 >= 0, jnp.arange(Q, dtype=jnp.int32), NULL)
+    pad = F - Q
+    if pad < 0:
+        raise ValueError("frontier capacity below query batch")
+    qids = jnp.concatenate([qids, jnp.full((pad,), NULL, jnp.int32)])
+    gids = jnp.concatenate([jnp.where(g0 >= 0, g0, NULL),
+                            jnp.full((pad,), NULL, jnp.int32)])
+    vmask = gids >= 0
+    failed = jnp.zeros((), bool)
+    pending = (plan.start_vtype, None)
+
+    for hop in plan.hops:
+        rq, rg, ovf = _route(qids, gids, vmask, S, B, axes)
+        failed = failed | ovf
+        rq, rg, rv, ovf2 = dedup_compact(rq, rg, rg >= 0, F)
+        failed = failed | ovf2
+        alive = _check_local(st, cfg, rg, rv, read_ts, pending[0], pending[1])
+        oq, on, ovf3 = _expand_local(st, cfg, rq, rg, rv & alive,
+                                     etype=hop.etype,
+                                     direction=hop.direction,
+                                     read_ts=read_ts, cap_out=caps.expand)
+        failed = failed | ovf3
+        qids, gids, vmask, ovf4 = dedup_compact(oq, on, on >= 0, F)
+        failed = failed | ovf4
+        pending = (hop.target_vtype, hop.pred)
+    return qids, gids, vmask, pending, failed
+
+
+def _finalize(st, cfg, plan, caps, axes, qids, gids, vmask, pending, read_ts,
+              Q: int, failed):
+    """Final route -> owner-side checks -> dedup -> aggregate."""
+    S, F, B = cfg.n_shards, caps.frontier, caps.bucket
+    rq, rg, ovf = _route(qids, gids, vmask, S, B, axes)
+    failed = failed | ovf
+    rq, rg, rv, ovf2 = dedup_compact(rq, rg, rg >= 0, F)
+    failed = failed | ovf2
+    alive = _check_local(st, cfg, rg, rv, read_ts, pending[0], pending[1])
+    if plan.final_pred is not None:
+        alive = alive & _check_local(st, cfg, rg, rv, read_ts, -1,
+                                     plan.final_pred)
+    rv = rv & alive
+    rq = jnp.where(rv, rq, NULL)
+    rg = jnp.where(rv, rg, NULL)
+    failed_global = jax.lax.psum(failed.astype(jnp.int32), axes) > 0
+
+    if plan.terminal == "count":
+        counts = jax.ops.segment_sum(
+            rv.astype(jnp.int32), jnp.where(rv, rq, Q), num_segments=Q + 1)[:Q]
+        counts = jax.lax.psum(counts, axes)
+        return {"counts": counts, "failed": failed_global}
+
+    # ---- select: globally consistent row positions ------------------------
+    K = caps.results
+    q_s, g_s, v_s, first = sort_pairs(rq, rg, rv)    # local already dedup'd
+    local_counts = jax.ops.segment_sum(
+        v_s.astype(jnp.int32), jnp.where(v_s, q_s, Q), num_segments=Q + 1)[:Q]
+    all_counts = jax.lax.all_gather(local_counts, axes)     # (S, Q)
+    me = jax.lax.axis_index(axes)
+    mask_before = (jnp.arange(all_counts.shape[0]) < me)[:, None]
+    base = jnp.sum(all_counts * mask_before, axis=0)        # (Q,)
+    q_srch = jnp.where(v_s, q_s, I32MAX)
+    run_start = jnp.searchsorted(q_srch, q_srch, side="left").astype(jnp.int32)
+    excl = jnp.cumsum(v_s.astype(jnp.int32)) - v_s.astype(jnp.int32)
+    pos_local = excl - excl[run_start]
+    qsafe = jnp.where(v_s, q_s, 0)
+    pos = base[qsafe] + pos_local
+    over = v_s & (pos >= K)
+    row = jnp.where(v_s & ~over, q_s, I32MAX)
+    col = jnp.where(v_s & ~over, pos, I32MAX)
+
+    rows_gid = jnp.zeros((Q, K), jnp.int32).at[row, col].set(
+        g_s + 1, mode="drop")
+    trunc = jnp.zeros((Q,), jnp.int32).at[
+        jnp.where(over, q_s, I32MAX)].set(1, mode="drop")
+    rows_gid = jax.lax.psum(rows_gid, axes) - 1      # 0 -> NULL
+    trunc = jax.lax.psum(trunc, axes) > 0
+
+    out_attrs = {}
+    rows_local = jnp.where(v_s, g_s // S, 0)
+    use_cur = st.vdata_ts[rows_local] <= read_ts
+    for kind, colid in zip(plan.select_kind, plan.select_cols):
+        if kind == "key":
+            vals = st.vkey[rows_local]
+            acc = jnp.zeros((Q, K), jnp.int32)
+        elif kind == "f32":
+            vals = jnp.where(use_cur, st.vdata_f[rows_local][:, colid],
+                             st.vprev_f[rows_local][:, colid])
+            acc = jnp.zeros((Q, K), jnp.float32)
+        else:
+            vals = jnp.where(use_cur, st.vdata_i[rows_local][:, colid],
+                             st.vprev_i[rows_local][:, colid])
+            acc = jnp.zeros((Q, K), jnp.int32)
+        summed = jax.lax.psum(acc.at[row, col].set(vals, mode="drop"), axes)
+        if kind == "key":     # empty cells must read NULL like the local path
+            summed = jnp.where(rows_gid >= 0, summed, NULL)
+        out_attrs[(kind, colid)] = summed
+    return {"rows_gid": rows_gid, "attrs": out_attrs, "truncated": trunc,
+            "failed": failed_global}
+
+
+_CACHE: dict = {}
+
+
+def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
+                       n_queries: int, mesh,
+                       storage_axes=("data", "model"),
+                       query_axis: Optional[str] = None):
+    """Build the jitted SPMD query program for one plan shape."""
+    key = (cfg, plan, caps, n_queries, id(mesh), storage_axes, query_axis)
+    if key in _CACHE:
+        return _CACHE[key]
+    axes = storage_axes
+    store_spec = P(axes)
+    qspec = P(query_axis) if query_axis else P()
+    # intersect keys are (branches, Q): the query axis is axis 1
+    kspec = (P(None, query_axis) if (query_axis and plan.is_intersect)
+             else qspec)
+
+    def body(store, keys, valid, read_ts):
+        if plan.is_intersect:
+            B = len(plan.branches)
+            allq, allg, allv = [], [], []
+            failed = jnp.zeros((), bool)
+            pendings = []
+            for bi, br in enumerate(plan.branches):
+                q, g, v, pend, f = _spmd_chain(store, cfg, br, caps, axes,
+                                               keys[bi], valid, read_ts)
+                # resolve each branch fully: route + check before intersect
+                S, F, Bk = cfg.n_shards, caps.frontier, caps.bucket
+                rq, rg, ovf = _route(q, g, v, S, Bk, axes)
+                rq, rg, rv, ovf2 = dedup_compact(rq, rg, rg >= 0, F)
+                alive = _check_local(store, cfg, rg, rv, read_ts,
+                                     pend[0], pend[1])
+                rv = rv & alive
+                failed = failed | f | ovf | ovf2
+                allq.append(jnp.where(rv, rq, NULL))
+                allg.append(jnp.where(rv, rg, NULL))
+                allv.append(rv)
+            qids = jnp.concatenate(allq)
+            gids = jnp.concatenate(allg)
+            vmask = jnp.concatenate(allv)
+            # intersection is local: every branch's copy of a gid lives on
+            # the gid's owner shard (ownership routing = equi-join locality)
+            q_s, g_s, v_s, first = sort_pairs(qids, gids, vmask)
+            run_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+            run_id = jnp.where(v_s, run_id, q_s.shape[0] - 1)
+            run_len = jax.ops.segment_sum(v_s.astype(jnp.int32), run_id,
+                                          num_segments=q_s.shape[0])
+            keep = first & (run_len[run_id] == B)
+            kq = jnp.where(keep, q_s, NULL)
+            kg = jnp.where(keep, g_s, NULL)
+            out = _finalize(store, cfg, plan, caps, axes, kq, kg, keep,
+                            (-1, None), read_ts, n_queries, failed)
+        else:
+            q, g, v, pend, failed = _spmd_chain(store, cfg, plan, caps,
+                                                axes, keys, valid, read_ts)
+            out = _finalize(store, cfg, plan, caps, axes, q, g, v, pend,
+                            read_ts, n_queries, failed)
+        if query_axis:
+            # scalars can't shard over the pod axis; lift to (1,) per pod
+            out["failed"] = out["failed"][None]
+        return out
+
+    store_specs = jax.tree.map(lambda _: store_spec, GraphStore(
+        **{f.name: 0 for f in dataclasses.fields(GraphStore)}))
+    out_specs = {"failed": qspec if query_axis else P()}
+    if plan.terminal == "count":
+        out_specs["counts"] = qspec
+    else:
+        out_specs.update(rows_gid=qspec, truncated=qspec,
+                         attrs={(k, c): qspec for k, c in
+                                zip(plan.select_kind, plan.select_cols)})
+
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(store_specs, kspec, qspec, P()),
+        out_specs=out_specs, check_vma=False))
+    _CACHE[key] = fn
+    return fn
+
+
+def run_queries_spmd(db, queries: list[dict], mesh,
+                     caps: Optional[QueryCaps] = None,
+                     storage_axes=("data", "model")) -> QueryResult:
+    """Host entry point mirroring executor.run_queries on a mesh."""
+    from repro.core.query.a1ql import parse
+    from repro.core.query.executor import _to_result
+    caps = caps or QueryCaps()
+    read_ts = db.snapshot_ts()
+    db.active_query_ts.append(read_ts)
+    try:
+        plans = [parse(db, q) for q in queries]
+        plan0 = plans[0][0]
+        assert all(p == plan0 for p, _ in plans[1:]), \
+            "spmd batch must share one plan shape"
+        Q = len(queries)
+        fn = compile_query_spmd(db.cfg, plan0, caps, Q, mesh, storage_axes)
+        if plan0.is_intersect:
+            keys = jnp.asarray(np.array(
+                [[k[bi] for _, k in plans]
+                 for bi in range(len(plan0.branches))], np.int32))
+        else:
+            keys = jnp.asarray(np.array([k for _, k in plans], np.int32))
+        out = fn(db.store, keys, jnp.ones((Q,), bool), jnp.int32(read_ts))
+        return _to_result(plan0, out)
+    finally:
+        db.active_query_ts.remove(read_ts)

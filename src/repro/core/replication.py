@@ -1,0 +1,236 @@
+"""Replication to durable storage (§4): replication log + ObjectStore.
+
+Faithful reproduction of the paper's pipeline:
+
+  * every committed update transactionally appends a *logical* entry to the
+    replication log (vertices as (vtype, key) -> columns, edges as endpoint
+    keys — physical gids don't survive recovery, logical identities do);
+  * the log is shipped to ObjectStore synchronously with the request; on
+    failure an asynchronous *sweeper* flushes FIFO (§4 "replication sweeper");
+  * ObjectStore holds two tables per graph (vertices, edges) in both
+    encodings at once:
+      - best-effort: last-writer-wins rows keyed by identity, with
+        timestamped tombstones (GC'd after a retention window);
+      - consistent: versioned rows keyed (identity, ts), plus the t_R
+        watermark — "all writes below t_R are durable";
+  * shipping is idempotent (both encodings tolerate replay, §4).
+
+ObjectStore persistence is an append-only msgpack WAL per table; load()
+replays.  Failure injection (``fail_next``) lets tests cut the pipeline
+mid-transaction to reproduce the paper's partial-replication scenarios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+
+TOMBSTONE = "__tombstone__"
+
+
+class ObjectStore:
+    """Durable KV tables with timestamp-conditional upsert (Bing ObjectStore
+
+    analogue).  Keys/values are msgpack-serializable."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.tables: dict[str, dict] = {}
+        self.meta: dict = {}
+        self._fail = 0
+        self._lock = threading.Lock()
+        if path:
+            os.makedirs(path, exist_ok=True)
+            self._load()
+
+    # -- failure injection (tests / chaos) -----------------------------------
+    def fail_next(self, n: int = 1) -> None:
+        self._fail = n
+
+    def _maybe_fail(self) -> None:
+        if self._fail > 0:
+            self._fail -= 1
+            raise IOError("objectstore write failed (injected)")
+
+    # -- persistence -----------------------------------------------------------
+    def _wal(self, table: str):
+        return os.path.join(self.path, f"{table}.wal") if self.path else None
+
+    def _append_wal(self, table: str, record) -> None:
+        wal = self._wal(table)
+        if wal:
+            with open(wal, "ab") as f:
+                f.write(msgpack.packb(record, use_bin_type=True))
+
+    def _load(self) -> None:
+        for fn in os.listdir(self.path):
+            if not fn.endswith(".wal") or fn == "meta.wal":
+                continue
+            table = fn[:-4]
+            t = self.tables.setdefault(table, {})
+            with open(os.path.join(self.path, fn), "rb") as f:
+                unp = msgpack.Unpacker(f, raw=False, strict_map_key=False)
+                for key, value, ts in unp:
+                    self._apply(t, tuple(key), value, ts)
+        metaf = os.path.join(self.path, "meta.wal")
+        if os.path.exists(metaf):
+            with open(metaf, "rb") as f:
+                unp = msgpack.Unpacker(f, raw=False)
+                for k, v in unp:
+                    self.meta[k] = v
+
+    # -- the single-roundtrip conditional upsert (§4) ------------------------
+    @staticmethod
+    def _apply(table: dict, key: tuple, value, ts: int) -> None:
+        cur = table.get(key)
+        if cur is None or ts >= cur[1]:
+            table[key] = (value, ts)
+
+    def upsert(self, table: str, key: tuple, value, ts: int) -> None:
+        """LWW upsert: newer timestamp wins; idempotent on replay."""
+        with self._lock:
+            self._maybe_fail()
+            t = self.tables.setdefault(table, {})
+            self._apply(t, key, value, ts)
+            self._append_wal(table, [list(key), value, ts])
+
+    def put_meta(self, key: str, value) -> None:
+        with self._lock:
+            self.meta[key] = value
+            if self.path:
+                with open(os.path.join(self.path, "meta.wal"), "ab") as f:
+                    f.write(msgpack.packb([key, value], use_bin_type=True))
+
+    def get_meta(self, key: str, default=None):
+        return self.meta.get(key, default)
+
+    def scan(self, table: str):
+        return dict(self.tables.get(table, {}))
+
+    def gc_tombstones(self, table: str, older_than_ts: int) -> int:
+        """Offline tombstone GC (the paper's week-old cleanup)."""
+        t = self.tables.get(table, {})
+        dead = [k for k, (v, ts) in t.items()
+                if v == TOMBSTONE and ts < older_than_ts]
+        for k in dead:
+            del t[k]
+        return len(dead)
+
+
+@dataclasses.dataclass
+class LogEntry:
+    ts: int
+    kind: str          # 'v_upsert' | 'v_delete' | 'e_insert' | 'e_delete'
+    key: tuple         # logical identity
+    value: Any = None
+
+
+class ReplicationLog:
+    """The FaRM-resident replication log + sweeper (§4)."""
+
+    def __init__(self, objectstore: ObjectStore, *, graph: str = "g"):
+        self.os = objectstore
+        self.graph = graph
+        self.entries: list[LogEntry] = []    # FIFO, unshipped
+        self.db = None                       # backref set by GraphDB owner
+        self.shipped_ts = 0                  # t_R candidate
+
+    # -- called transactionally with the commit (GraphDB.commit_many) --------
+    def append(self, ts: int, winners) -> None:
+        assert self.db is not None, "attach with log.db = db"
+        db = self.db
+        for t in winners:
+            for gid, vtype, key, f, i in t.create_v:
+                self.entries.append(LogEntry(
+                    ts, "v_upsert", (int(vtype), int(key)),
+                    [np.asarray(f).tolist(), np.asarray(i).tolist()]))
+            for gid, f, i in t.update_v:
+                vt, key, _ = db._read_header_host(gid, ts)
+                self.entries.append(LogEntry(
+                    ts, "v_upsert", (int(vt), int(key)),
+                    [np.asarray(f).tolist(), np.asarray(i).tolist()]))
+            for gid, vtype, key in t.delete_v:
+                self.entries.append(LogEntry(
+                    ts, "v_delete", (int(vtype), int(key))))
+            for src, dst, et in t.create_e:
+                sk = self._ident(src, ts)
+                dk = self._ident(dst, ts)
+                self.entries.append(LogEntry(
+                    ts, "e_insert", (*sk, int(et), *dk)))
+            for src, dst, et in t.delete_e:
+                sk = self._ident(src, ts)
+                dk = self._ident(dst, ts)
+                self.entries.append(LogEntry(
+                    ts, "e_delete", (*sk, int(et), *dk)))
+        # synchronous ship attempt (§4: "synchronously with the customer
+        # request"); failures leave entries for the sweeper
+        try:
+            self.sweep()
+        except IOError:
+            pass
+
+    def _ident(self, gid: int, ts: int) -> tuple:
+        vt, key, alive = self.db._read_header_host(gid, ts)
+        if not alive:     # deleted in the same batch: read pre-delete state
+            vt, key, _ = self.db._read_header_host(gid, ts - 1)
+        return (int(vt), int(key))
+
+    # -- shipping --------------------------------------------------------------
+    def _ship_one(self, e: LogEntry) -> None:
+        g = self.graph
+        if e.kind == "v_upsert":
+            self.os.upsert(f"{g}.vertices", e.key, e.value, e.ts)
+            self.os.upsert(f"{g}.vertices.versions", (*e.key, e.ts),
+                           e.value, e.ts)
+        elif e.kind == "v_delete":
+            self.os.upsert(f"{g}.vertices", e.key, TOMBSTONE, e.ts)
+            self.os.upsert(f"{g}.vertices.versions", (*e.key, e.ts),
+                           TOMBSTONE, e.ts)
+        elif e.kind == "e_insert":
+            self.os.upsert(f"{g}.edges", e.key, True, e.ts)
+            self.os.upsert(f"{g}.edges.versions", (*e.key, e.ts), True, e.ts)
+        elif e.kind == "e_delete":
+            self.os.upsert(f"{g}.edges", e.key, TOMBSTONE, e.ts)
+            self.os.upsert(f"{g}.edges.versions", (*e.key, e.ts), TOMBSTONE,
+                           e.ts)
+
+    def sweep(self, budget: Optional[int] = None) -> int:
+        """Flush unshipped entries FIFO (the async sweeper).  Returns the
+
+        number shipped.  Updates the durable t_R watermark."""
+        shipped = 0
+        while self.entries and (budget is None or shipped < budget):
+            e = self.entries[0]
+            self._ship_one(e)          # raises on (injected) failure
+            self.entries.pop(0)
+            shipped += 1
+            self.shipped_ts = max(self.shipped_ts, e.ts)
+        # t_R: all writes <= t_R are durable iff the log has no older entry
+        oldest_unshipped = self.entries[0].ts if self.entries else None
+        t_r = (oldest_unshipped - 1 if oldest_unshipped is not None
+               else self.shipped_ts)
+        self.os.put_meta(f"{self.graph}.t_R", int(t_r))
+        return shipped
+
+    def lag(self) -> int:
+        return len(self.entries)
+
+
+def sweeper_task(log: ReplicationLog, *, budget: int = 128):
+    """Task-framework wrapper: reschedules itself while the log is nonempty
+
+    (the paper's low-priority background sweeper)."""
+    from repro.core.tasks import Task
+
+    def run(db, task):
+        try:
+            log.sweep(budget)
+        except IOError:
+            pass
+        return [task] if log.lag() else []
+
+    return Task("replication-sweeper", run, priority=20)

@@ -1,0 +1,147 @@
+"""Task framework: asynchronous workflows (§3.3).
+
+A1 runs long maintenance work (DeleteGraph cascades, GC) as *tasks* on a
+global FaRM-resident queue, executed by low-priority workers on any backend
+machine; big tasks reschedule themselves or spawn subtasks.
+
+Host adaptation: the queue is coordinator state (checkpointed); ``pump()`` is
+the cooperative low-priority worker — the serving loop calls it between query
+batches, so maintenance never preempts foreground work.  Tasks return a list
+of follow-up tasks (possibly themselves) to model rescheduling/spawning.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class Task:
+    """A unit of deferred work.  ``fn(db, task) -> list[Task]`` spawns more."""
+    name: str
+    fn: Callable
+    state: dict = dataclasses.field(default_factory=dict)
+    priority: int = 10          # lower = sooner; foreground never waits on it
+    task_id: int = -1
+
+
+class TaskQueue:
+    """Global task queue + stateless worker pool (cooperative)."""
+
+    def __init__(self, db):
+        self.db = db
+        self._q: list[Task] = []
+        self._ids = itertools.count()
+        self.completed: list[str] = []
+
+    def enqueue(self, task: Task) -> int:
+        task.task_id = next(self._ids)
+        self._q.append(task)
+        self._q.sort(key=lambda t: (t.priority, t.task_id))
+        return task.task_id
+
+    def pending(self) -> int:
+        return len(self._q)
+
+    def pump(self, budget: int = 1) -> int:
+        """Run up to ``budget`` tasks (one worker-thread quantum each)."""
+        ran = 0
+        while self._q and ran < budget:
+            task = self._q.pop(0)
+            spawned = task.fn(self.db, task) or []
+            for s in spawned:
+                self.enqueue(s)
+            self.completed.append(task.name)
+            ran += 1
+        return ran
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.pump():
+                return
+        raise RuntimeError("task queue did not drain")
+
+
+# ---------------------------------------------------------------------------
+# Standard maintenance workflows
+# ---------------------------------------------------------------------------
+
+def compaction_task() -> Task:
+    def run(db, task):
+        db.run_compaction()
+        return []
+    return Task("compact-edges", run)
+
+
+def index_compaction_task() -> Task:
+    def run(db, task):
+        db.run_index_compaction()
+        return []
+    return Task("compact-index", run)
+
+
+def vacuum_task() -> Task:
+    def run(db, task):
+        db.vacuum()
+        return []
+    return Task("vacuum", run)
+
+
+def delete_type_task(vtype: str, *, chunk: int = 64) -> Task:
+    """Delete all vertices of a type, chunk by chunk, rescheduling itself
+
+    (the paper's DeleteType: "execute for a long time ... delete all the
+    vertices, edges and indexes associated with the type")."""
+    def run(db, task):
+        import numpy as np
+        vt = db.vt(vtype)
+        vtid = vt.type_id
+        vtypes = np.asarray(db.store.vtype)
+        v_del = np.asarray(db.store.v_delete)
+        S, cap_v = db.cfg.n_shards, db.cfg.cap_v
+        from repro.core.addressing import TS_INF, gid_of
+        todo = []
+        for row in np.where((vtypes == vtid) & (v_del == TS_INF))[0]:
+            shard, slot = int(row) // cap_v, int(row) % cap_v
+            todo.append(gid_of(shard, slot, S))
+            if len(todo) >= chunk:
+                break
+        if not todo:
+            return []
+        for gid in todo:
+            try:
+                db.delete_vertex(gid)
+            except ValueError:
+                pass
+        return [task]       # reschedule until no vertices remain
+    return Task(f"delete-type:{vtype}", run)
+
+
+def delete_graph_task(graph_mgr, tenant: str, graph: str) -> Task:
+    """DeleteGraph workflow: mark Deleting, spawn per-type deletes, then
+
+    free the graph (§3.3)."""
+    def run(db, task):
+        phase = task.state.setdefault("phase", "mark")
+        if phase == "mark":
+            meta = db.catalog.mark_deleting(tenant, graph)
+            task.state["phase"] = "wait"
+            spawned = [delete_type_task(name) for name in list(meta.vtypes)]
+            return spawned + [task]
+        # wait phase: done when no vertices remain
+        import numpy as np
+        from repro.core.addressing import TS_INF
+        live = ((np.asarray(db.store.vtype) >= 0)
+                & (np.asarray(db.store.v_delete) == TS_INF)).sum()
+        if live > 0:
+            return [task]
+        db.run_compaction()
+        db.run_index_compaction()
+        db.vacuum()
+        db.catalog.drop_graph(tenant, graph)
+        if graph_mgr is not None:
+            graph_mgr.release(tenant, graph)
+        return []
+    return Task(f"delete-graph:{graph}", run)

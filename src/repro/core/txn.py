@@ -1,0 +1,392 @@
+"""Transaction engine: FaRMv2-style MVCC + optimistic concurrency (§2.1, §5.2).
+
+Semantics reproduced from the paper:
+
+* A global clock hands out commit timestamps; all transactions are totally
+  ordered by write timestamp (used by disaster recovery, §4).
+* Read-only queries run at a snapshot ``read_ts`` and never conflict with
+  updates (MVCC).
+* Update transactions run under OCC: they record a read set and are validated
+  at commit — if any object read has been overwritten since ``read_ts``,
+  the transaction aborts and the client retries (Fig. 3's retry loop).
+* Opacity comes for free: state is immutable; a doomed transaction can only
+  ever observe a consistent snapshot, never torn pointers.
+
+TPU adaptation ("changed assumptions" #2 in DESIGN.md): instead of per-txn
+two-phase commit we gather transactions into *commit batches*.  A batch gets
+one timestamp; validation is one vectorized gather; intra-batch write-write
+conflicts are resolved deterministically (first transaction wins, later ones
+abort and retry).  Client-visible semantics are unchanged: strict
+serializability, aborts on conflict.
+
+All op arrays are padded to static capacities so the apply step compiles once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as ix
+from repro.core.addressing import NULL, TS_INF, StoreConfig
+from repro.core.store import GraphStore
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchCaps:
+    """Static op capacities of a commit batch (compiled once per value)."""
+    reads: int = 256
+    create_v: int = 256
+    update_v: int = 128
+    delete_v: int = 64
+    create_e: int = 512
+    delete_e: int = 256
+
+
+class Aborted(Exception):
+    """Raised to the caller when a transaction loses OCC validation."""
+
+
+class Transaction:
+    """Client-side transaction: buffered reads + staged writes (Fig. 2 API).
+
+    ``OpenForWrite`` buffering happens implicitly: all mutations are staged
+    host-side and pushed at commit, matching FaRM's local write buffering.
+    """
+
+    __slots__ = ("read_ts", "reads", "create_v", "update_v", "delete_v",
+                 "create_e", "delete_e", "status")
+
+    def __init__(self, read_ts: int):
+        self.read_ts = int(read_ts)
+        self.reads: list[tuple[int, str]] = []      # (gid, kind)
+        self.create_v: list[tuple] = []             # (gid, vtype, key, f, i)
+        self.update_v: list[tuple] = []             # (gid, f, i)
+        self.delete_v: list[int] = []               # gid
+        self.create_e: list[tuple] = []             # (src, dst, etype)
+        self.delete_e: list[tuple] = []             # (src, dst, etype)
+        self.status = "OPEN"
+
+    def record_read(self, gid: int) -> None:
+        if gid is not None and gid >= 0:
+            self.reads.append((int(gid), "v"))
+
+    # key sets for intra-batch conflict detection ----------------------------
+    # vertex object -> ("v", gid); edge-list object -> ("ev", gid): an edge
+    # write touches both endpoints' edge-list objects (FaRM object model).
+    def write_keys(self):
+        ks = set()
+        for g, *_ in self.create_v:
+            ks.add(("v", g))
+        for g, *_ in self.update_v:
+            ks.add(("v", g))
+        for g, *_ in self.delete_v:
+            ks.add(("v", g))
+            ks.add(("ev", g))
+        for s, d, t in self.create_e:
+            ks.add(("ev", s))
+            ks.add(("ev", d))
+        for s, d, t in self.delete_e:
+            ks.add(("ev", s))
+            ks.add(("ev", d))
+        return ks
+
+    def read_keys(self):
+        return {("ev" if kind == "e" else "v", g) for g, kind in self.reads}
+
+
+# ---------------------------------------------------------------------------
+# Jitted validation
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def last_write_ts(store: GraphStore, cfg: StoreConfig, gids, kinds):
+    """Latest write ts of each read object (0 if never written).
+
+    ``kinds``: 0 = vertex header/data read, 1 = edge-list read.  FaRM versions
+    the vertex object and its edge-list object separately; validating per kind
+    avoids false aborts when only the unrelated object changed.
+    """
+    ok = gids >= 0
+    rows = cfg.row_of_gid(jnp.where(ok, gids, 0))
+    cre = jnp.where(store.v_create[rows] == TS_INF, 0, store.v_create[rows])
+    dele = jnp.where(store.v_delete[rows] == TS_INF, 0, store.v_delete[rows])
+    lw_v = jnp.maximum(jnp.maximum(cre, dele), store.vdata_ts[rows])
+    lw_e = jnp.maximum(jnp.maximum(cre, dele), store.v_edgever[rows])
+    return jnp.where(ok, jnp.where(kinds == 1, lw_e, lw_v), 0)
+
+
+# ---------------------------------------------------------------------------
+# Jitted apply
+# ---------------------------------------------------------------------------
+
+def _csr_find(indptr, typ2d, nbr2d, sh, slot, etype, dst, cap_v):
+    """Binary search a CSR span (sorted by (etype, nbr)) for one edge.
+
+    ``typ2d``/``nbr2d`` are (S, cap_e) views; returns the local pool
+    position (int32, < cap_e) or -1.  32 fixed halving steps.  All indices
+    stay shard-local, so paper-scale stores never overflow int32.
+    """
+    lo = indptr[slot]
+    hi = indptr[slot + 1]
+
+    def key_less(m, t, d):
+        tm, dm = typ2d[sh, m], nbr2d[sh, m]
+        return (tm < t) | ((tm == t) & (dm < d))
+
+    def body(_, lohi):
+        lo, hi = lohi
+        m = (lo + hi) // 2
+        go_right = key_less(m, etype, dst) & (lo < hi)
+        return (jnp.where(go_right, m + 1, lo), jnp.where(go_right, hi, m))
+
+    lo, hi = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    found = ((lo < indptr[slot + 1])
+             & (typ2d[sh, lo] == etype) & (nbr2d[sh, lo] == dst))
+    return jnp.where(found, lo, -1)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def apply_batch(store: GraphStore, cfg: StoreConfig, ts,
+                # create vertices
+                cv_gid, cv_vtype, cv_key, cv_f, cv_i, cv_xpos,
+                # update vertices
+                uv_gid, uv_f, uv_i,
+                # delete vertices
+                dv_gid, dv_vtype, dv_key,
+                # create edges
+                ce_src, ce_dst, ce_type, ce_opos, ce_ipos,
+                # delete edges
+                de_src, de_dst, de_type,
+                # new per-shard log counts (host-computed)
+                new_dl_count, new_il_count, new_xd_count):
+    """Apply one validated commit batch.
+
+    All vertex/edge-pool addressing is 2D (shard, local) so paper-scale
+    stores (> 2^31 global slots) never overflow int32 — the FaRM address is
+    (region, offset), not a flat integer, and we keep that split on device.
+    Padded slots use index = INT32_MAX and drop out of every scatter
+    (negative indices WRAP in jax; only out-of-range positive drop).
+    """
+    S, cap_v, cap_e = cfg.n_shards, cfg.cap_v, cfg.cap_e
+    drop = dict(mode="drop")
+    OOB = jnp.int32(2**31 - 1)
+
+    def v2(gid):
+        """(shard, slot) with OOB padding."""
+        ok = gid >= 0
+        g = jnp.where(ok, gid, 0)
+        return jnp.where(ok, g % S, OOB), jnp.where(ok, g // S, OOB)
+
+    def oob(pos):
+        return jnp.where(pos >= 0, pos, OOB)
+
+    def vset(arr, sh, sl, val):
+        shp = arr.shape
+        a2 = arr.reshape((S, cap_v) + shp[1:])
+        return a2.at[sh, sl].set(val, **drop).reshape(shp)
+
+    def vget(arr, sh, sl):
+        shp = arr.shape
+        a2 = arr.reshape((S, cap_v) + shp[1:])
+        return a2[jnp.where(sh == OOB, 0, sh), jnp.where(sl == OOB, 0, sl)]
+
+    # ---- create vertices ---------------------------------------------------
+    sh, sl = v2(cv_gid)
+    store = dataclasses.replace(
+        store,
+        vtype=vset(store.vtype, sh, sl, cv_vtype),
+        vkey=vset(store.vkey, sh, sl, cv_key),
+        v_create=vset(store.v_create, sh, sl, ts),
+        v_delete=vset(store.v_delete, sh, sl, TS_INF),
+        vdata_f=vset(store.vdata_f, sh, sl, cv_f),
+        vdata_i=vset(store.vdata_i, sh, sl, cv_i),
+        vdata_ts=vset(store.vdata_ts, sh, sl, ts),
+        vprev_f=vset(store.vprev_f, sh, sl, cv_f),
+        vprev_i=vset(store.vprev_i, sh, sl, cv_i),
+        vprev_ts=vset(store.vprev_ts, sh, sl, ts),
+        # index delta entries (flat positions host-assigned; the delta is
+        # small enough that S * cap_idx_delta stays well inside int32)
+        xd_vtype=store.xd_vtype.at[oob(cv_xpos)].set(cv_vtype, **drop),
+        xd_key=store.xd_key.at[oob(cv_xpos)].set(cv_key, **drop),
+        xd_gid=store.xd_gid.at[oob(cv_xpos)].set(cv_gid, **drop),
+        xd_create=store.xd_create.at[oob(cv_xpos)].set(ts, **drop),
+        xd_delete=store.xd_delete.at[oob(cv_xpos)].set(TS_INF, **drop),
+    )
+
+    # ---- update vertex data (cur -> prev, new -> cur) ----------------------
+    sh, sl = v2(uv_gid)
+    store = dataclasses.replace(
+        store,
+        vprev_f=vset(store.vprev_f, sh, sl, vget(store.vdata_f, sh, sl)),
+        vprev_i=vset(store.vprev_i, sh, sl, vget(store.vdata_i, sh, sl)),
+        vprev_ts=vset(store.vprev_ts, sh, sl, vget(store.vdata_ts, sh, sl)),
+        vdata_f=vset(store.vdata_f, sh, sl, uv_f),
+        vdata_i=vset(store.vdata_i, sh, sl, uv_i),
+        vdata_ts=vset(store.vdata_ts, sh, sl, ts),
+    )
+
+    # ---- delete vertices ----------------------------------------------------
+    sh, sl = v2(dv_gid)
+    cap_x, cap_xd = cfg.cap_idx, cfg.cap_idx_delta
+    ix_h2 = jnp.where(store.ix_gid >= 0,
+                      ix.mix32(store.ix_vtype, store.ix_key),
+                      jnp.int32(2**31 - 1)).reshape(S, cap_x)
+    ix_gid2 = store.ix_gid.reshape(S, cap_x)
+    ix_vt2 = store.ix_vtype.reshape(S, cap_x)
+    ix_key2 = store.ix_key.reshape(S, cap_x)
+    ix_del2 = store.ix_delete.reshape(S, cap_x)
+
+    def find_ix_row(g, vt, k):
+        """Locate the live main-index (shard, pos) of (vt, k, g), or OOB."""
+        ok = g >= 0
+        ish = ix.route(vt, k, S)
+        blk = jax.lax.dynamic_index_in_dim(ix_h2, ish, 0, keepdims=False)
+        pos = jnp.searchsorted(blk, ix.mix32(vt, k),
+                               side="left").astype(jnp.int32)
+        best = jnp.int32(-1)
+        for w in range(16):
+            pp = jnp.minimum(pos + w, cap_x - 1)
+            hit = ((ix_gid2[ish, pp] == g) & (ix_vt2[ish, pp] == vt)
+                   & (ix_key2[ish, pp] == k) & (ix_del2[ish, pp] == TS_INF))
+            best = jnp.where(hit & (best < 0), pp, best)
+        found = ok & (best >= 0)
+        return (jnp.where(found, ish, OOB), jnp.where(found, best, OOB))
+
+    def find_xd_row(g, vt, k):
+        ok = g >= 0
+        ish = ix.route(vt, k, S)
+        XD = store.xd_gid.shape[0]
+        xsh = jnp.arange(XD, dtype=jnp.int32) // cap_xd
+        m = ((store.xd_gid == g) & (store.xd_vtype == vt)
+             & (store.xd_key == k) & (store.xd_delete == TS_INF)
+             & (xsh == ish))
+        row = jnp.argmax(m).astype(jnp.int32)
+        return jnp.where(ok & m.any(), row, OOB)
+
+    xsh, xpos = jax.vmap(find_ix_row)(dv_gid, dv_vtype, dv_key)
+    xrow_delta = jax.vmap(find_xd_row)(dv_gid, dv_vtype, dv_key)
+    ix_del_new = ix_del2.at[xsh, xpos].set(ts, **drop).reshape(-1)
+    store = dataclasses.replace(
+        store,
+        v_delete=vset(store.v_delete, sh, sl, ts),
+        ix_delete=ix_del_new,
+        xd_delete=store.xd_delete.at[xrow_delta].set(ts, **drop),
+    )
+
+    # ---- create edges (append to both half-edge delta logs) ----------------
+    src_slot = jnp.where(ce_src >= 0, ce_src // S, -1)
+    dst_slot = jnp.where(ce_dst >= 0, ce_dst // S, -1)
+    s_sh, s_sl = v2(ce_src)
+    d_sh, d_sl = v2(ce_dst)
+    ds_sh, ds_sl = v2(de_src)
+    dd_sh, dd_sl = v2(de_dst)
+    ev2 = store.v_edgever.reshape(S, cap_v)
+    ev2 = (ev2.at[s_sh, s_sl].set(ts, **drop)
+              .at[d_sh, d_sl].set(ts, **drop)
+              .at[ds_sh, ds_sl].set(ts, **drop)
+              .at[dd_sh, dd_sl].set(ts, **drop))
+    store = dataclasses.replace(
+        store,
+        dl_slot=store.dl_slot.at[oob(ce_opos)].set(src_slot, **drop),
+        dl_nbr=store.dl_nbr.at[oob(ce_opos)].set(ce_dst, **drop),
+        dl_type=store.dl_type.at[oob(ce_opos)].set(ce_type, **drop),
+        dl_create=store.dl_create.at[oob(ce_opos)].set(ts, **drop),
+        dl_delete=store.dl_delete.at[oob(ce_opos)].set(TS_INF, **drop),
+        il_slot=store.il_slot.at[oob(ce_ipos)].set(dst_slot, **drop),
+        il_nbr=store.il_nbr.at[oob(ce_ipos)].set(ce_src, **drop),
+        il_type=store.il_type.at[oob(ce_ipos)].set(ce_type, **drop),
+        il_create=store.il_create.at[oob(ce_ipos)].set(ts, **drop),
+        il_delete=store.il_delete.at[oob(ce_ipos)].set(TS_INF, **drop),
+        dl_count=new_dl_count, il_count=new_il_count, xd_count=new_xd_count,
+        v_edgever=ev2.reshape(-1),
+    )
+
+    # ---- delete edges (CSR binary search + delta tombstones) ---------------
+    oe_typ2 = store.oe_type.reshape(S, cap_e)
+    oe_dst2 = store.oe_dst.reshape(S, cap_e)
+    ie_typ2 = store.ie_type.reshape(S, cap_e)
+    ie_src2 = store.ie_src.reshape(S, cap_e)
+    ip_o = store.oe_indptr.reshape(S, cap_v + 1)
+    ip_i = store.ie_indptr.reshape(S, cap_v + 1)
+
+    def find_out(s_, d, t):
+        ok = s_ >= 0
+        ss = jnp.where(ok, s_, 0)
+        fsh, fsl = ss % S, ss // S
+        pos = _csr_find(
+            jax.lax.dynamic_index_in_dim(ip_o, fsh, 0, keepdims=False),
+            oe_typ2, oe_dst2, fsh, fsl, t, d, cap_v)
+        found = ok & (pos >= 0)
+        return jnp.where(found, fsh, OOB), jnp.where(found, pos, OOB)
+
+    def find_in(s_, d, t):
+        ok = d >= 0
+        dd = jnp.where(ok, d, 0)
+        fsh, fsl = dd % S, dd // S
+        pos = _csr_find(
+            jax.lax.dynamic_index_in_dim(ip_i, fsh, 0, keepdims=False),
+            ie_typ2, ie_src2, fsh, fsl, t, s_, cap_v)
+        found = ok & (pos >= 0)
+        return jnp.where(found, fsh, OOB), jnp.where(found, pos, OOB)
+
+    osh, opos = jax.vmap(find_out)(de_src, de_dst, de_type)
+    ish_, ipos = jax.vmap(find_in)(de_src, de_dst, de_type)
+
+    # also tombstone matching live delta-log inserts
+    def delta_match(log_slot, log_nbr, log_type, log_del, ent_gid, nbr, t):
+        ok = ent_gid >= 0
+        eg = jnp.where(ok, ent_gid, 0)
+        msh, msl = eg % S, eg // S
+        D = log_slot.shape[0]
+        d_shard = jnp.arange(D, dtype=jnp.int32) // cfg.cap_delta
+        m = (ok[:, None] & (log_slot[None, :] == msl[:, None])
+             & (d_shard[None, :] == msh[:, None])
+             & (log_nbr[None, :] == nbr[:, None])
+             & (log_type[None, :] == t[:, None])
+             & (log_del == TS_INF)[None, :])
+        return m.any(axis=0)   # (D,) mask of entries to tombstone
+
+    m_out = delta_match(store.dl_slot, store.dl_nbr, store.dl_type,
+                        store.dl_delete, de_src, de_dst, de_type)
+    m_in = delta_match(store.il_slot, store.il_nbr, store.il_type,
+                       store.il_delete, de_dst, de_src, de_type)
+
+    store = dataclasses.replace(
+        store,
+        oe_delete=store.oe_delete.reshape(S, cap_e)
+            .at[osh, opos].set(ts, **drop).reshape(-1),
+        ie_delete=store.ie_delete.reshape(S, cap_e)
+            .at[ish_, ipos].set(ts, **drop).reshape(-1),
+        dl_delete=jnp.where(m_out, ts, store.dl_delete),
+        il_delete=jnp.where(m_in, ts, store.il_delete),
+    )
+    return store
+
+
+def pad_i32(xs, cap, fill=-1):
+    a = np.full((cap,), fill, np.int32)
+    n = min(len(xs), cap)
+    if n:
+        a[:n] = np.asarray(xs[:n], np.int32)
+    return jnp.asarray(a)
+
+
+def pad_f32(xs, cap, d):
+    a = np.zeros((cap, d), np.float32)
+    n = min(len(xs), cap)
+    if n:
+        a[:n] = np.asarray(xs[:n], np.float32).reshape(n, d)
+    return jnp.asarray(a)
+
+
+def pad_i32_2d(xs, cap, d):
+    a = np.zeros((cap, d), np.int32)
+    n = min(len(xs), cap)
+    if n:
+        a[:n] = np.asarray(xs[:n], np.int32).reshape(n, d)
+    return jnp.asarray(a)

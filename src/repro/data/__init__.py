@@ -1,0 +1,6 @@
+from repro.data.kg import build_film_kg, FilmKG
+from repro.data.tokens import token_pipeline
+from repro.data.graphs import (synthetic_graph_batch, cora_like, reddit_like,
+                               molecule_batch)
+from repro.data.recsys import bst_batch
+from repro.data.sampler import fanout_sample

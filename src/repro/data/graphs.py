@@ -1,0 +1,111 @@
+"""Synthetic graph datasets shaped like the assigned GNN cells.
+
+  full_graph_sm   cora-like:    2,708 nodes / 10,556 edges / 1,433 features
+  minibatch_lg    reddit-like:  233 k nodes / 115 M edges, fanout-sampled
+  ogb_products    2.45 M nodes / 61.9 M edges / 100 features
+  molecule        30-atom molecular graphs, batch 128
+
+Generators are seeded and power-law-skewed (GNN shape regime D.3).  The
+full-scale geometries are only ever *lowered* (ShapeDtypeStructs in the
+dry-run); tests instantiate reduced versions through the same functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import GraphBatch
+
+
+def synthetic_graph_batch(n_nodes: int, n_edges: int, d_feat: int, *,
+                          n_classes: int = 16, seed: int = 0,
+                          with_positions: bool = False,
+                          undirected: bool = True,
+                          dtype=jnp.float32) -> GraphBatch:
+    rng = np.random.default_rng(seed)
+    # power-law-ish degree: sample endpoints with zipf weights
+    w = 1.0 / np.power(np.arange(1, n_nodes + 1), 0.8)
+    w /= w.sum()
+    half = n_edges // 2 if undirected else n_edges
+    src = rng.choice(n_nodes, size=half, p=w).astype(np.int32)
+    dst = rng.integers(0, n_nodes, size=half).astype(np.int32)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    pad = n_edges - src.shape[0]
+    if pad > 0:
+        src = np.concatenate([src, np.full(pad, -1, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+    feat = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    mask = rng.uniform(size=n_nodes) < 0.3
+    return GraphBatch(
+        node_feat=jnp.asarray(feat, dtype),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        labels=jnp.asarray(labels), train_mask=jnp.asarray(mask),
+        positions=(jnp.asarray(rng.normal(size=(n_nodes, 3)), dtype)
+                   if with_positions else None))
+
+
+def cora_like(scale: float = 1.0, seed: int = 0) -> GraphBatch:
+    n = max(int(2708 * scale), 32)
+    e = max(int(10556 * scale), 64)
+    return synthetic_graph_batch(n, e, max(int(1433 * scale), 16),
+                                 n_classes=7, seed=seed)
+
+
+def reddit_like(scale: float = 1.0, seed: int = 0) -> GraphBatch:
+    n = max(int(232_965 * scale), 64)
+    e = max(int(114_615_892 * scale), 256)
+    return synthetic_graph_batch(n, e, max(int(602 * scale), 16),
+                                 n_classes=41, seed=seed)
+
+
+def molecule_batch(batch: int = 128, n_nodes: int = 30, n_edges: int = 64,
+                   *, n_species: int = 8, seed: int = 0,
+                   dtype=jnp.float32) -> GraphBatch:
+    """Batched small molecules: one flat COO graph with graph_ids."""
+    rng = np.random.default_rng(seed)
+    N = batch * n_nodes
+    srcs, dsts = [], []
+    for g in range(batch):
+        base = g * n_nodes
+        s = rng.integers(0, n_nodes, n_edges // 2)
+        d = rng.integers(0, n_nodes, n_edges // 2)
+        srcs.append(np.concatenate([s, d]) + base)
+        dsts.append(np.concatenate([d, s]) + base)
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    species = rng.integers(0, n_species, N).astype(np.float32)[:, None]
+    pos = rng.normal(size=(N, 3)).astype(np.float32) * 2.0
+    gid = np.repeat(np.arange(batch, dtype=np.int32), n_nodes)
+    energy = rng.normal(size=batch).astype(np.float32)
+    return GraphBatch(
+        node_feat=jnp.asarray(species, dtype),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        labels=jnp.asarray(energy),
+        train_mask=jnp.ones((batch,), bool),
+        positions=jnp.asarray(pos, dtype),
+        graph_ids=jnp.asarray(gid), n_graphs=batch)
+
+
+def graph_batch_shape_dtypes(n_nodes: int, n_edges: int, d_feat: int, *,
+                             with_positions: bool = False,
+                             graph_ids: bool = False, n_graphs: int = 1,
+                             label_shape: Optional[tuple] = None,
+                             dtype=jnp.float32) -> GraphBatch:
+    """ShapeDtypeStruct GraphBatch for dry-run lowering (no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    lbl = label_shape or (n_nodes,)
+    return GraphBatch(
+        node_feat=sds((n_nodes, d_feat), dtype),
+        edge_src=sds((n_edges,), jnp.int32),
+        edge_dst=sds((n_edges,), jnp.int32),
+        labels=sds(lbl, jnp.int32 if len(lbl) == 1 and not graph_ids
+                   else jnp.float32),
+        train_mask=sds(lbl[:1], jnp.bool_),
+        positions=sds((n_nodes, 3), dtype) if with_positions else None,
+        graph_ids=sds((n_nodes,), jnp.int32) if graph_ids else None,
+        n_graphs=n_graphs)

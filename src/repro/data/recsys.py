@@ -1,0 +1,25 @@
+"""Synthetic BST batches (user behavior sequences + CTR labels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bst_batch(*, batch: int, seq_len: int = 20, n_items: int = 1_000_000,
+              n_dense: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    # zipf item popularity (huge_embedding regime)
+    hist = (rng.zipf(1.3, size=(batch, seq_len)) % n_items).astype(np.int32)
+    target = (rng.zipf(1.3, size=(batch,)) % n_items).astype(np.int32)
+    dense = rng.normal(size=(batch, n_dense)).astype(np.float32)
+    labels = (rng.uniform(size=batch) < 0.2).astype(np.float32)
+    return (jnp.asarray(hist), jnp.asarray(target), jnp.asarray(dense),
+            jnp.asarray(labels))
+
+
+def bst_batch_shape_dtypes(*, batch: int, seq_len: int = 20,
+                           n_dense: int = 8):
+    sds = jax.ShapeDtypeStruct
+    return (sds((batch, seq_len), jnp.int32), sds((batch,), jnp.int32),
+            sds((batch, n_dense), jnp.float32), sds((batch,), jnp.float32))

@@ -1,0 +1,122 @@
+"""Fanout neighbor sampler (GraphSAGE-style) — a bounded A1 traversal.
+
+Sampling a 2-hop neighborhood with fanouts (25, 10) *is* an A1 multi-hop
+query with per-hop capacity (§3.4's bounded frontier, sampled instead of
+fast-failed).  Two implementations:
+
+  * :func:`fanout_sample` — jit-able, static-shape, from a CSR held in
+    device arrays: the minibatch_lg training path (a *real* sampler, per
+    the assignment).
+  * :func:`fanout_sample_db` — host path against a live GraphDB, using the
+    same edge-enumeration machinery as the query engine (A1 integration).
+
+Layered layout (static shapes): node slots = [seeds | hop-1 | hop-2 ...],
+hop-k edges connect slot ranges; padding edges carry src = -1.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import GraphBatch
+
+
+def csr_from_coo(n_nodes: int, src, dst):
+    """Host-side CSR build (sorted by src)."""
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = np.asarray(src)[order], np.asarray(dst)[order]
+    counts = np.bincount(src_s, minlength=n_nodes)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return jnp.asarray(indptr), jnp.asarray(dst_s.astype(np.int32))
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def fanout_sample(indptr, indices, seeds, key, *, fanouts: tuple):
+    """Sample a layered neighborhood.  Returns (node_gids, edge_src,
+
+    edge_dst) where edge indices refer to *slot positions*:
+      slots [0, B)                      = seeds
+      slots [B, B + B*f1)               = hop-1 samples
+      slots [.., + B*f1*f2)             = hop-2 samples ...
+    Edges are (hop-k slot) -> (hop-(k-1) slot), src = -1 where the parent
+    had no neighbors (sampled with replacement, GraphSAGE semantics).
+    """
+    B = seeds.shape[0]
+    node_gids = [seeds]
+    e_src, e_dst = [], []
+    frontier = seeds
+    base_prev = 0
+    base_next = B
+    for f in fanouts:
+        n = frontier.shape[0]
+        key, sub = jax.random.split(key)
+        deg = indptr[frontier + 1] - indptr[frontier]
+        r = jax.random.randint(sub, (n, f), 0, 2**31 - 1)
+        r = r % jnp.maximum(deg, 1)[:, None]
+        pos = indptr[frontier][:, None] + r
+        nbr = indices[pos]                               # (n, f)
+        ok = (deg > 0)[:, None] & (frontier >= 0)[:, None]
+        nbr = jnp.where(ok, nbr, -1)
+        okf = jnp.broadcast_to(ok, (n, f)).reshape(-1)
+        src_slots = base_next + jnp.arange(n * f, dtype=jnp.int32)
+        dst_slots = base_prev + jnp.repeat(jnp.arange(n, dtype=jnp.int32), f)
+        e_src.append(jnp.where(okf, src_slots, -1))
+        e_dst.append(dst_slots)
+        node_gids.append(nbr.reshape(-1))
+        frontier = nbr.reshape(-1)
+        base_prev = base_next
+        base_next = base_next + n * f
+    return (jnp.concatenate(node_gids), jnp.concatenate(e_src),
+            jnp.concatenate(e_dst))
+
+
+def build_sampled_batch(features, labels, indptr, indices, seeds, key, *,
+                        fanouts: tuple, n_classes: Optional[int] = None
+                        ) -> GraphBatch:
+    """Assemble a GraphBatch from a fanout sample (features gathered by
+
+    global id; loss is computed on seed slots only)."""
+    gids, es, ed = fanout_sample(indptr, indices, seeds, key,
+                                 fanouts=fanouts)
+    ok = gids >= 0
+    rows = jnp.where(ok, gids, 0)
+    feat = features[rows] * ok[:, None].astype(features.dtype)
+    B = seeds.shape[0]
+    N = gids.shape[0]
+    lbl = jnp.full((N,), -1, jnp.int32).at[:B].set(labels[seeds])
+    mask = jnp.zeros((N,), bool).at[:B].set(True)
+    return GraphBatch(node_feat=feat, edge_src=es, edge_dst=ed,
+                      labels=lbl, train_mask=mask)
+
+
+def fanout_sample_db(db, seed_gids, *, fanouts: tuple, etype: int = -1,
+                     seed: int = 0, cap: int = 4096):
+    """Host-path sampler against a live GraphDB (A1 traversal per hop)."""
+    rng = np.random.default_rng(seed)
+    nodes = [np.asarray(seed_gids, np.int64)]
+    e_src, e_dst = [], []
+    frontier = np.asarray(seed_gids, np.int64)
+    base_prev, base_next = 0, len(frontier)
+    for f in fanouts:
+        layer = []
+        for i, g in enumerate(frontier):
+            nbrs = ([n for n, _ in db.get_edges(int(g), etype=etype)]
+                    if g >= 0 else [])
+            for j in range(f):
+                if nbrs:
+                    layer.append(int(rng.choice(nbrs)))
+                    e_src.append(base_next + i * f + j)
+                else:
+                    layer.append(-1)
+                    e_src.append(-1)
+                e_dst.append(base_prev + i)
+        nodes.append(np.asarray(layer, np.int64))
+        frontier = np.asarray(layer, np.int64)
+        base_prev = base_next
+        base_next += len(layer)
+    return (np.concatenate(nodes), np.asarray(e_src, np.int32),
+            np.asarray(e_dst, np.int32))

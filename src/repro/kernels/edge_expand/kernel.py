@@ -1,0 +1,90 @@
+"""Ragged CSR expansion Pallas TPU kernel (A1 edge enumeration, §3.4).
+
+The paper's edge enumeration walks a vertex's edge list — an (address, size)
+span in FaRM.  The TPU adaptation streams those spans tile-by-tile:
+
+* a host/jnp *plan* (ref.plan) flattens the ragged spans into a dense grid of
+  128-lane tiles: tile i serves frontier item ``item_of_tile[i]``, its
+  ``tw``-th tile;
+* scalar-prefetched span starts feed the BlockSpec index_map, so the Pallas
+  pipeline DMA-streams the right edge-pool tiles (two adjacent tiles per
+  step, because spans are not tile-aligned);
+* the kernel rotates the 2-tile window to the span offset and masks the tail.
+
+Output is tile-padded ragged: lane j of tile i is edge ``tw*T + j`` of item
+``item_of_tile[i]``, or -1.  Downstream (dedup/routing) consumes the mask.
+
+Why not one DMA per edge?  Degree skew (the paper sees degrees > 10M) makes
+per-edge gathers pathological; per-tile streaming keeps the DMA engine at
+line rate for any degree distribution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expand_kernel(item_ref, tw_ref, starts_ref, degs_ref,   # scalar prefetch
+                   *refs, tile: int, n_pools: int, F: int):
+    t = pl.program_id(0)
+    in_refs = refs[:2 * n_pools]
+    out_refs = refs[2 * n_pools:]
+    item = item_ref[t]
+    tw = tw_ref[t]
+    item_c = jnp.minimum(item, F - 1)
+    start = starts_ref[item_c] + tw * tile
+    off = start % tile
+    lane = jax.lax.iota(jnp.int32, tile)
+    valid = (item < F) & (lane < degs_ref[item_c] - tw * tile)
+    for p in range(n_pools):
+        lo = in_refs[2 * p][...]
+        hi = in_refs[2 * p + 1][...]
+        window = jnp.roll(jnp.concatenate([lo, hi]), -off)[:tile]
+        out_refs[p][...] = jnp.where(valid, window, -1)[None, :]
+
+
+def expand(starts, degs, pools, item_of_tile, tw_of_tile, *, tile: int = 128,
+           cap_tiles: int, interpret: bool = False):
+    """See ref.expand; plan arrays are produced by ref.plan (jnp, cheap)."""
+    F = degs.shape[0]
+    E = pools[0].shape[0]
+    n_pools = len(pools)
+    # pad pools by two tiles so the +1 block fetch never leaves the array
+    pools_p = tuple(jnp.pad(p, (0, 2 * tile), constant_values=-1)
+                    for p in pools)
+    n_blocks = (E + 2 * tile) // tile
+
+    def mk_in_spec(plus_one):
+        def index_map(t, item_ref, tw_ref, starts_ref, degs_ref):
+            item = jnp.minimum(item_ref[t], F - 1)
+            blk = (starts_ref[item] + tw_ref[t] * tile) // tile
+            return (jnp.minimum(blk + plus_one, n_blocks - 1),)
+        return pl.BlockSpec((tile,), index_map)
+
+    in_specs = []
+    for _ in range(n_pools):
+        in_specs.append(mk_in_spec(0))
+        in_specs.append(mk_in_spec(1))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(cap_tiles,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, tile), lambda t, *_: (t, 0))
+                   for _ in range(n_pools)],
+    )
+    # inputs interleaved: each pool appears twice (tile t and t+1)
+    args = []
+    for p in pools_p:
+        args += [p, p]
+    outs = pl.pallas_call(
+        functools.partial(_expand_kernel, tile=tile, n_pools=n_pools, F=F),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap_tiles, tile), jnp.int32)
+                   for _ in range(n_pools)],
+        interpret=interpret,
+    )(item_of_tile, tw_of_tile, starts, degs, *args)
+    return tuple(o.reshape(-1) for o in outs)

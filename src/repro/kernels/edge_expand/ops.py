@@ -1,0 +1,30 @@
+"""Jitted ragged CSR expansion: plan (jnp) + gather (Pallas)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_expand import ref as _ref
+from repro.kernels.edge_expand.kernel import expand as _kernel
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "cap_tiles"))
+def edge_expand(starts, degs, pools, *, tile: int = 128, cap_tiles: int):
+    """Expand ragged CSR spans to tile-padded output.
+
+    Returns (outs, item_of_tile, overflow): outs[i] (cap_tiles*tile,) i32
+    with -1 in invalid lanes; item_of_tile (cap_tiles,) maps output tiles
+    back to frontier items (item == F means padding tile).
+    """
+    if _USE_KERNEL:
+        item, tw, n_tiles, overflow = _ref.plan(degs, tile, cap_tiles)
+        outs = _kernel(starts, degs, tuple(pools), item, tw, tile=tile,
+                       cap_tiles=cap_tiles)
+        return outs, item, overflow
+    outs, item, overflow = _ref.expand(starts, degs, tuple(pools), tile,
+                                       cap_tiles)
+    return outs, item, overflow

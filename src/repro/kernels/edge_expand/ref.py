@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for tile-padded ragged CSR expansion."""
+import jax.numpy as jnp
+
+
+def plan(degs, tile: int, cap_tiles: int):
+    """Tile plan for a ragged expansion.
+
+    Returns (item_of_tile, tw_of_tile, n_tiles, overflow): which frontier item
+    and which tile-within-item each output tile serves.  Items with deg 0 get
+    no tiles.  Padding tiles map to item = F (sentinel).
+    """
+    F = degs.shape[0]
+    tiles_per = (degs + tile - 1) // tile
+    cum = jnp.cumsum(tiles_per)
+    n_tiles = cum[-1] if F else jnp.int32(0)
+    k = jnp.arange(cap_tiles, dtype=jnp.int32)
+    item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+    item_c = jnp.minimum(item, F - 1)
+    tw = k - (cum[item_c] - tiles_per[item_c])
+    valid = k < n_tiles
+    return (jnp.where(valid, item_c, F), jnp.where(valid, tw, 0),
+            n_tiles, n_tiles > cap_tiles)
+
+
+def expand(starts, degs, pools, tile: int, cap_tiles: int):
+    """Gather ragged CSR spans into tile-padded output.
+
+    starts/degs: (F,) absolute span offsets/lengths into each pool array.
+    pools: tuple of (E,) i32 arrays gathered with identical indexing.
+    Returns (outs, item_of_tile, overflow); outs[i] has shape
+    (cap_tiles*tile,) with -1 in invalid lanes.
+    """
+    F = degs.shape[0]
+    item, tw, n_tiles, overflow = plan(degs, tile, cap_tiles)
+    lane = jnp.arange(tile, dtype=jnp.int32)
+    item_c = jnp.minimum(item, F - 1)
+    base = starts[item_c] + tw * tile                      # (cap_tiles,)
+    pos = base[:, None] + lane[None, :]                    # (cap_tiles, tile)
+    ok = ((item < F)[:, None]
+          & (lane[None, :] < (degs[item_c] - tw * tile)[:, None]))
+    pos_c = jnp.where(ok, pos, 0)
+    outs = tuple(jnp.where(ok, p[pos_c], -1).reshape(-1) for p in pools)
+    return outs, item, overflow

@@ -1,0 +1,68 @@
+"""Embedding-bag Pallas TPU kernel (batched vertex-data read / recsys tables).
+
+This is the A1 "two consecutive RDMA reads" hot path in kernel form: given a
+bag of row ids, fetch rows from a (huge, HBM-resident) table and pool them.
+
+TPU design: the table block index is *data-dependent* — scalar-prefetched ids
+feed the BlockSpec ``index_map``, so the Pallas pipeline's double-buffered DMA
+engine streams exactly the rows we need (the idiom paged-attention kernels
+use for block tables).  Grid = (bags, slots); the slot axis is innermost and
+accumulates into the output row; padding ids point at a zeroed sentinel row.
+
+The table dtype rides through unchanged; accumulation is f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, counts_ref, row_ref, o_ref, acc_ref, *,
+                mode: str, L: int):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += row_ref[...].astype(jnp.float32)
+
+    @pl.when(l == L - 1)
+    def _fin():
+        acc = acc_ref[...]
+        if mode == "mean":
+            n = jnp.maximum(counts_ref[b], 1).astype(jnp.float32)
+            acc = acc / n
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def embedding_bag(table, ids, *, mode: str = "sum",
+                  interpret: bool = False):
+    """table: (V, D); ids: (B, L) i32 with -1 padding.  Returns (B, D)."""
+    V, D = table.shape
+    B, L = ids.shape
+    # sentinel zero row for padding ids
+    table_x = jnp.concatenate(
+        [table, jnp.zeros((1, D), table.dtype)], axis=0)
+    safe_ids = jnp.where(ids >= 0, ids, V).astype(jnp.int32)
+    counts = jnp.sum((ids >= 0).astype(jnp.int32), axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, L),
+        in_specs=[pl.BlockSpec((1, D), lambda b, l, ids_ref, cnt_ref:
+                               (ids_ref[b, l], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda b, l, *_: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, mode=mode, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(safe_ids, counts, table_x)

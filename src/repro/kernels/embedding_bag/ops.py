@@ -1,0 +1,40 @@
+"""Jitted embedding-bag with custom VJP (Pallas fwd, scatter-add bwd)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag as _kernel
+from repro.kernels.embedding_bag.ref import embedding_bag as _ref
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def embedding_bag(table, ids, mode: str = "sum"):
+    if _USE_KERNEL:
+        return _kernel(table, ids, mode=mode)
+    return _ref(table, ids, mode=mode)
+
+
+def _fwd(table, ids, mode):
+    return embedding_bag(table, ids, mode), (table, ids)
+
+
+def _bwd(mode, res, g):
+    table, ids = res
+    (V, D), dtype = table.shape, table.dtype
+    mask = ids >= 0                                   # (B, L)
+    if mode == "mean":
+        n = jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+        g = g / n.astype(g.dtype)
+    safe = jnp.where(mask, ids, V)                    # OOB -> dropped
+    gl = jnp.broadcast_to(g[:, None, :], ids.shape + (D,))
+    dtable = jnp.zeros((V, D), g.dtype).at[safe.reshape(-1)].add(
+        gl.reshape(-1, D) * mask.reshape(-1, 1), mode="drop")
+    return dtable.astype(dtype), None
+
+
+embedding_bag.defvjp(_fwd, _bwd)

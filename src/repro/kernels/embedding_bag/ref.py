@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for embedding-bag (gather + segment pooling).
+
+JAX has no native nn.EmbeddingBag; the reference composes ``jnp.take`` with a
+masked reduction — exactly the composition the taxonomy (B.6) prescribes.
+"""
+import jax.numpy as jnp
+
+
+def embedding_bag(table, ids, *, mode: str = "sum"):
+    """table: (V, D); ids: (B, L) i32, -1 = padding.  Returns (B, D).
+
+    mode: 'sum' | 'mean' (mean over non-padding entries; empty bag -> 0).
+    """
+    mask = (ids >= 0)
+    safe = jnp.where(mask, ids, 0)
+    rows = jnp.take(table, safe, axis=0)              # (B, L, D)
+    rows = rows * mask[..., None].astype(table.dtype)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        n = jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+        out = out / n.astype(table.dtype)
+    return out

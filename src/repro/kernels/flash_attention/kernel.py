@@ -1,0 +1,250 @@
+"""FlashAttention-2 Pallas TPU kernels: forward + backward.
+
+MXU-aligned streaming attention for the assigned LM architectures:
+  * causal and sliding-window (h2o-danube SWA) masking,
+  * GQA: the kv head for a q head is resolved in the BlockSpec index_map —
+    kv blocks are fetched once per q-head group position, never materialized
+    repeated,
+  * f32 running-softmax state (m, l) and accumulator in VMEM scratch,
+  * backward = two kernels: dkv (grid over k blocks, streaming q) and dq
+    (grid over q blocks, streaming k), with the standard
+    ds = p * (dp - delta) recomputation from the saved LSE.
+
+Block sizes default to (128, 128): MXU-native for head_dim 128.
+Sequence lengths must be multiples of the block sizes (callers pad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK = 128
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _dot_t(a, b):
+    """a @ b.T in f32."""
+    return jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _mask(bq, bk, qi, ki, *, causal, window, q_offset):
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        m &= kpos <= qpos
+    if window and window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                scale, causal, window, q_offset, bq, bk, n_kb):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = _dot_t(q, k) * scale                             # (bq, bk)
+    msk = _mask(bq, bk, qi, ki, causal=causal, window=window,
+                q_offset=q_offset)
+    s = jnp.where(msk, s, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(msk, p, 0.0)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + _dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kb - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l))[:, 0]
+
+
+def flash_fwd(q, k, v, *, causal: bool, window: int, scale: float,
+              q_offset: int = 0, block_q: int = DEFAULT_BLOCK,
+              block_k: int = DEFAULT_BLOCK, interpret: bool = False):
+    """q: (BHq, Sq, D) flattened batch*q-heads; k, v: (BHkv, Sk, D).
+
+    Returns (out (BHq, Sq, D), lse (BHq, Sq)).  Requires Hq % Hkv == 0 in the
+    flattened layout: caller passes group = Hq // Hkv via matching shapes.
+    """
+    BHq, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BHq % BHkv == 0
+    G = BHq // BHkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "pad sequence to block multiple"
+    n_kb = Sk // bk
+    grid = (BHq, Sq // bq, n_kb)
+
+    kv_map = lambda h, qi, ki: (h // G, ki, 0)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                          window=window, q_offset=q_offset, bq=bq, bk=bk,
+                          n_kb=n_kb),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+                  pl.BlockSpec((1, bk, D), kv_map),
+                  pl.BlockSpec((1, bk, D), kv_map)],
+        out_specs=[pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+                   pl.BlockSpec((1, bq), lambda h, qi, ki: (h, qi))],
+        out_shape=[jax.ShapeDtypeStruct((BHq, Sq, D), q.dtype),
+                   jax.ShapeDtypeStruct((BHq, Sq), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward: dkv kernel (grid over kv blocks, streaming q) and dq kernel
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, causal, window, q_offset, bq, bk, G, n_qb):
+    # grid: (BHkv, Tk, G, Tq)
+    ki, g, qi = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+
+    @pl.when((g == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)                   # (bq, d)
+    lse = lse_ref[0]                                     # (bq,)
+    delta = delta_ref[0]                                 # (bq,)
+
+    s = _dot_t(q, k) * scale                             # (bq, bk)
+    msk = _mask(bq, bk, qi, ki, causal=causal, window=window,
+                q_offset=q_offset)
+    p = jnp.where(msk, jnp.exp(s - lse[:, None]), 0.0)   # (bq, bk)
+    dv_acc[...] += _dot(p.T, do)                         # (bk, d)
+    dp = _dot_t(do, v)                                   # (bq, bk) = do @ v.T
+    ds = p * (dp - delta[:, None]) * scale
+    dk_acc[...] += _dot(ds.T, q)                         # (bk, d)
+
+    @pl.when((g == G - 1) & (qi == n_qb - 1))
+    def _fin():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_acc, *, scale, causal, window, q_offset, bq, bk, n_kb):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    s = _dot_t(q, k) * scale
+    msk = _mask(bq, bk, qi, ki, causal=causal, window=window,
+                q_offset=q_offset)
+    p = jnp.where(msk, jnp.exp(s - lse[:, None]), 0.0)
+    dp = _dot_t(do, v)
+    ds = p * (dp - delta[:, None]) * scale
+    dq_acc[...] += _dot(ds, k)
+
+    @pl.when(ki == n_kb - 1)
+    def _fin():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_bwd(q, k, v, out, lse, do, *, causal: bool, window: int,
+              scale: float, q_offset: int = 0,
+              block_q: int = DEFAULT_BLOCK, block_k: int = DEFAULT_BLOCK,
+              interpret: bool = False):
+    """Returns (dq, dk, dv) with q/k/v's flattened-head layout."""
+    BHq, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    G = BHq // BHkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    n_qb, n_kb = Sq // bq, Sk // bk
+    delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32),
+                    axis=-1)                              # (BHq, Sq)
+
+    # ---- dkv: grid (BHkv, Tk, G, Tq); q-head = kvh*G + g -------------------
+    def qmap(kvh, ki, g, qi):
+        return (kvh * G + g, qi, 0)
+
+    def qmap2(kvh, ki, g, qi):
+        return (kvh * G + g, qi)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, q_offset=q_offset, bq=bq, bk=bk,
+                          G=G, n_qb=n_qb),
+        grid=(BHkv, n_kb, G, n_qb),
+        in_specs=[pl.BlockSpec((1, bq, D), qmap),
+                  pl.BlockSpec((1, bk, D), lambda kvh, ki, g, qi: (kvh, ki, 0)),
+                  pl.BlockSpec((1, bk, D), lambda kvh, ki, g, qi: (kvh, ki, 0)),
+                  pl.BlockSpec((1, bq, D), qmap),
+                  pl.BlockSpec((1, bq), qmap2),
+                  pl.BlockSpec((1, bq), qmap2)],
+        out_specs=[pl.BlockSpec((1, bk, D), lambda kvh, ki, g, qi: (kvh, ki, 0)),
+                   pl.BlockSpec((1, bk, D), lambda kvh, ki, g, qi: (kvh, ki, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BHkv, Sk, D), k.dtype),
+                   jax.ShapeDtypeStruct((BHkv, Sk, D), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # ---- dq: grid (BHq, Tq, Tk) --------------------------------------------
+    kv_map = lambda h, qi, ki: (h // G, ki, 0)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, q_offset=q_offset, bq=bq, bk=bk,
+                          n_kb=n_kb),
+        grid=(BHq, n_qb, n_kb),
+        in_specs=[pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+                  pl.BlockSpec((1, bk, D), kv_map),
+                  pl.BlockSpec((1, bk, D), kv_map),
+                  pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+                  pl.BlockSpec((1, bq), lambda h, qi, ki: (h, qi)),
+                  pl.BlockSpec((1, bq), lambda h, qi, ki: (h, qi))],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

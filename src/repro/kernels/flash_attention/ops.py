@@ -1,0 +1,66 @@
+"""Differentiable attention op: Pallas flash kernels on TPU, ref on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_bwd, flash_fwd
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def mha(q, k, v, causal: bool = True, window: int = 0, q_offset: int = 0):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, Sk, D).  Flash attention."""
+    if not _USE_KERNEL:
+        return _ref.mha(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset)
+    out, _ = _fwd_flat(q, k, v, causal, window, q_offset)
+    return out
+
+
+def _flatten(q, k, v):
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    return (q.reshape(B * Hq, Sq, D), k.reshape(B * Hkv, Sk, D),
+            v.reshape(B * Hkv, Sk, D))
+
+
+def _fwd_flat(q, k, v, causal, window, q_offset):
+    B, Hq, Sq, D = q.shape
+    qf, kf, vf = _flatten(q, k, v)
+    out, lse = flash_fwd(qf, kf, vf, causal=causal, window=window,
+                         scale=D ** -0.5, q_offset=q_offset)
+    return out.reshape(q.shape), lse.reshape(B, Hq, Sq)
+
+
+def _vjp_fwd(q, k, v, causal, window, q_offset):
+    if not _USE_KERNEL:
+        out = _ref.mha(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset)
+        return out, (q, k, v, out, None)
+    out, lse = _fwd_flat(q, k, v, causal, window, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, window, q_offset, res, g):
+    q, k, v, out, lse = res
+    if not _USE_KERNEL:
+        f = lambda q, k, v: _ref.mha(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+        _, vjp = jax.vjp(f, q, k, v)
+        return vjp(g)
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    qf, kf, vf = _flatten(q, k, v)
+    dq, dk, dv = flash_bwd(
+        qf, kf, vf, out.reshape(B * Hq, Sq, D),
+        lse.reshape(B * Hq, Sq), g.reshape(B * Hq, Sq, D),
+        causal=causal, window=window, scale=D ** -0.5, q_offset=q_offset)
+    return (dq.reshape(q.shape), dk.reshape(k.shape), dv.reshape(v.shape))
+
+
+mha.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for (causal / sliding-window / GQA) attention."""
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(sq: int, sk: int, *, causal: bool, window: int,
+                   q_offset: int = 0):
+    """(sq, sk) bool mask.  ``window > 0`` keeps keys within ``window`` of the
+
+    query (sliding-window attention); ``q_offset`` shifts query positions
+    (used for decode, where the single query sits at position sk-1)."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window and window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _softmax(s):
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return p / jnp.maximum(denom, 1e-30)
+
+
+def mha(q, k, v, *, causal: bool = True, window: int = 0, scale=None,
+        q_offset: int = 0):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); GQA via head repetition.
+
+    Computes softmax(q k^T * scale + mask) v in f32; returns q's dtype.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = (D ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m = attention_mask(Sq, Sk, causal=causal, window=window,
+                       q_offset=q_offset)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = _softmax(s)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

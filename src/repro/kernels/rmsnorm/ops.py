@@ -1,0 +1,44 @@
+"""Jitted RMSNorm op with custom VJP (Pallas forward, analytic backward)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ref import rmsnorm as rmsnorm_ref
+
+_USE_KERNEL = jax.default_backend() == "tpu"   # ref on CPU (incl. dry-run
+                                               # lowering); kernel on TPU.
+                                               # Interpret-mode kernel parity
+                                               # is covered by tests/.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, scale, eps: float = 1e-6):
+    if _USE_KERNEL:
+        return rmsnorm_fwd(x, scale, eps=eps)
+    return rmsnorm_ref(x, scale, eps=eps)
+
+
+def _fwd(x, scale, eps):
+    return rmsnorm(x, scale, eps), (x, scale)
+
+
+def _bwd(eps, res, g):
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = xf * r
+    gs = gf * sf
+    dx = r * (gs - xhat * jnp.mean(gs * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

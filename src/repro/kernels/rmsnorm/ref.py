@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    """y = x / rms(x) * scale, reduced over the last axis in f32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

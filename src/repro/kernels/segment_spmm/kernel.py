@@ -1,0 +1,76 @@
+"""ELL fused gather-GEMM-scale Pallas TPU kernel (GNN message passing).
+
+FusedMM-style (taxonomy B.3): aggregate K scalar-prefetch-gathered neighbor
+rows in a VMEM accumulator, then apply the (resident) weight matrix on the
+MXU at the last slot — the gather never round-trips through HBM.  Padding
+neighbor ids point at a zeroed sentinel row, so no mask math in the loop.
+
+Grid = (rows, K) with K innermost; the row's output block is revisited only
+within its own K-run, so the accumulator scratch carries across steps safely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(ids_ref, norm_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                 K: int, use_norm: bool, use_w: bool):
+    r = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...].astype(jnp.float32)
+
+    @pl.when(k == K - 1)
+    def _fin():
+        acc = acc_ref[...]
+        if use_norm:
+            acc = acc * norm_ref[r]
+        if use_w:
+            acc = jax.lax.dot_general(
+                acc, w_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def segment_spmm(x, ids, w=None, norm=None, *, interpret: bool = False):
+    """x: (N, D); ids: (R, K) i32 (-1 pad); w: (D, Dout)?; norm: (R,)?"""
+    N, D = x.shape
+    R, K = ids.shape
+    use_w, use_norm = w is not None, norm is not None
+    d_out = w.shape[1] if use_w else D
+    x_pad = jnp.concatenate([x, jnp.zeros((1, D), x.dtype)], axis=0)
+    safe = jnp.where(ids >= 0, ids, N).astype(jnp.int32)
+    norm_a = (norm.astype(jnp.float32) if use_norm
+              else jnp.ones((R,), jnp.float32))
+    w_a = w if use_w else jnp.zeros((D, 1), x.dtype)
+
+    in_specs = [pl.BlockSpec((1, D), lambda r, k, ids_ref, n_ref:
+                             (ids_ref[r, k], 0))]
+    if use_w:
+        in_specs.append(pl.BlockSpec((D, d_out), lambda r, k, *_: (0, 0)))
+    else:
+        in_specs.append(pl.BlockSpec((D, 1), lambda r, k, *_: (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, K),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, d_out), lambda r, k, *_: (r, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, K=K, use_norm=use_norm, use_w=use_w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, d_out), x.dtype),
+        interpret=interpret,
+    )(safe, norm_a, x_pad, w_a)

@@ -1,0 +1,47 @@
+"""Jitted fused gather-GEMM with custom VJP."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm.kernel import segment_spmm as _kernel
+from repro.kernels.segment_spmm.ref import segment_spmm as _ref
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@jax.custom_vjp
+def segment_spmm(x, ids, w, norm):
+    """Differentiable wrt x and w (ids/norm are structure)."""
+    if _USE_KERNEL:
+        return _kernel(x, ids, w, norm)
+    return _ref(x, ids, w, norm)
+
+
+def _fwd(x, ids, w, norm):
+    return segment_spmm(x, ids, w, norm), (x, ids, w, norm)
+
+
+def _bwd(res, g):
+    x, ids, w, norm = res
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, x.shape[0])
+    # recompute the aggregation for dw (cheap relative to the gather)
+    rows = x[jnp.where(mask, ids, 0)] * mask[..., None].astype(x.dtype)
+    aggregated = rows.sum(axis=1)
+    if norm is not None:
+        aggregated = aggregated * norm[:, None].astype(x.dtype)
+    dw = aggregated.T @ g
+    gx_rows = g @ w.T                                  # (R, D)
+    if norm is not None:
+        gx_rows = gx_rows * norm[:, None].astype(g.dtype)
+    gl = jnp.broadcast_to(gx_rows[:, None, :], ids.shape + (x.shape[1],))
+    dx = jnp.zeros_like(x, shape=(x.shape[0] + 1, x.shape[1])).at[
+        safe.reshape(-1)].add(gl.reshape(-1, x.shape[1])
+                              * mask.reshape(-1, 1))[:x.shape[0]]
+    return dx.astype(x.dtype), None, dw.astype(w.dtype), None
+
+
+segment_spmm.defvjp(_fwd, _bwd)

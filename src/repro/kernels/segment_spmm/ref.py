@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for ELL-format fused gather-GEMM (GNN message passing)."""
+import jax.numpy as jnp
+
+
+def segment_spmm(x, ids, w=None, norm=None):
+    """y[r] = (sum_k x[ids[r, k]]) * norm[r] @ w.
+
+    x: (N, D) node features; ids: (R, K) i32 neighbor lists, -1 = padding;
+    w: optional (D, Dout); norm: optional (R,) scale (e.g. 1/deg for GCN).
+    Returns (R, Dout or D).
+    """
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, 0)
+    rows = x[safe] * mask[..., None].astype(x.dtype)       # (R, K, D)
+    agg = rows.sum(axis=1)
+    if norm is not None:
+        agg = agg * norm[:, None].astype(x.dtype)
+    if w is not None:
+        agg = agg @ w
+    return agg

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the sorted-index probe."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.sorted_lookup.kernel import searchsorted_left as _kernel
+from repro.kernels.sorted_lookup.ref import searchsorted_left as _ref
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def searchsorted_left(keys, queries, *, block_q: int = 512,
+                      block_k: int = 2048):
+    if _USE_KERNEL:
+        return _kernel(keys, queries, block_q=block_q, block_k=block_k)
+    return _ref(keys, queries)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the sorted-index probe (BTree analogue)."""
+import jax.numpy as jnp
+
+
+def searchsorted_left(keys, queries):
+    """Left insertion point of each query in sorted ``keys``.
+
+    Identical semantics to ``jnp.searchsorted(keys, queries, side='left')``:
+    the number of keys strictly less than the query.
+    """
+    return jnp.searchsorted(keys, queries, side="left").astype(jnp.int32)

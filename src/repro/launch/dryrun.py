@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input-shape) cell on the production
+meshes — 16x16 (single pod, 256 chips) and 2x16x16 (two pods, 512 chips) —
+and records memory_analysis / cost_analysis / collective-schedule roofline
+terms.  This is the proof that the distribution config is coherent without
+real hardware: sharding mismatches, compile-time OOM, or unsupported
+collectives fail HERE.
+
+The device-count override above MUST precede any other import (jax locks
+the device count at first init) and is deliberately NOT set globally —
+tests and benchmarks see the real single CPU device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-moe-235b-a22b --shape train_4k
+    python -m repro.launch.dryrun --arch a1-kg --shape serve_q1 --multipod
+    python -m repro.launch.dryrun --all [--jobs 4] [--multipod]
+    python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    import jax
+
+    from repro.configs import registry
+    from repro.launch import roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    spec = registry.get(arch)
+    cell_meta = spec.cell(shape)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+           "family": spec.family}
+    if cell_meta.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell_meta.skip
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 1
+    for ax in mesh.axis_names:
+        n_dev *= mesh.shape[ax]
+
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh)
+    if cell.in_shardings is not None:
+        fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+    else:
+        fn = cell.fn        # already a jit(shard_map(...))
+    with mesh:
+        lowered = fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis() or {}
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+
+    rl = roofline.analyze(compiled, n_devices=n_dev,
+                          model_flops=cell.model_flops)
+    rec.update(status="ok", lower_s=round(t_lower, 2),
+               compile_s=round(t_compile, 2), n_devices=n_dev,
+               roofline=rl.to_json(), note=cell.note)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+
+    if args.list:
+        for a, s in registry.all_cells():
+            skip = registry.get(a).cell(s).skip
+            print(f"{a:28s} {s:16s}" + (f"  [SKIP: {skip[:40]}...]"
+                                        if skip else ""))
+        return
+
+    if args.all:
+        cells = registry.all_cells()
+        meshes = [False, True] if args.both_meshes else [args.multipod]
+        jobs = []
+        for mp in meshes:
+            for a, s in cells:
+                jobs.append((a, s, mp))
+        procs: list = []
+        results = []
+        while jobs or procs:
+            while jobs and len(procs) < args.jobs:
+                a, s, mp = jobs.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out]
+                if mp:
+                    cmd.append("--multipod")
+                print("launch:", a, s, "multipod" if mp else "pod",
+                      flush=True)
+                procs.append(((a, s, mp), subprocess.Popen(
+                    cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)))
+            done = []
+            for item in procs:
+                (a, s, mp), p = item
+                if p.poll() is not None:
+                    out = p.stdout.read().decode()
+                    ok = p.returncode == 0
+                    results.append((a, s, mp, ok))
+                    print(("PASS" if ok else "FAIL"), a, s,
+                          "multipod" if mp else "pod", flush=True)
+                    if not ok:
+                        print(out[-3000:], flush=True)
+                    done.append(item)
+            for d in done:
+                procs.remove(d)
+            time.sleep(0.5)
+        n_ok = sum(1 for *_, ok in results if ok)
+        print(f"\n{n_ok}/{len(results)} cells passed")
+        sys.exit(0 if n_ok == len(results) else 1)
+
+    rec = run_cell(args.arch, args.shape, args.multipod, args.out)
+    print(json.dumps({k: v for k, v in rec.items() if k != "roofline"},
+                     indent=1))
+    if "roofline" in rec:
+        r = rec["roofline"]
+        print(f"compute_s={r['compute_s']:.4g} memory_s={r['memory_s']:.4g}"
+              f" collective_s={r['collective_s']:.4g}"
+              f" bottleneck={r['bottleneck']}"
+              f" useful_ratio={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Single-pod: 16 x 16 = 256 chips (v5e pod), axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is outer data-parallel / pipeline stages for training and the
+cross-datacenter replica for the A1 graph store (disaster recovery, §4).
+
+A function, not a module constant: importing this module never touches jax
+device state (the dry-run pins the device count *before* first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

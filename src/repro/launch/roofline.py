@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), from the compiled SPMD program:
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory_s     = HLO_bytes_per_device / HBM_bandwidth
+  collective_s = wire_bytes_per_device / ICI_bandwidth
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (the per-device SPMD
+module).  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text and sum result-shape bytes of every collective op, converted to
+per-device ring wire traffic:
+
+  all-reduce      2 * B * (s-1)/s        (ring reduce-scatter + all-gather)
+  all-gather      B_out * (s-1)/s
+  reduce-scatter  B_out * (s-1)           (B_full = B_out * s)
+  all-to-all      B * (s-1)/s
+  collective-permute  B
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we charge one link — conservative; multi-link meshes only improve it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (1 link charged)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<shape>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_ID_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def collective_wire_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective type + totals."""
+    out = defaultdict(float)
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(m.group("shape"))
+        s = max(_group_size(line, n_devices), 1)
+        if s == 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * b * (s - 1) / s
+        elif op == "all-gather":
+            wire = b * (s - 1) / s
+        elif op == "reduce-scatter":
+            wire = b * (s - 1)
+        elif op == "all-to-all":
+            wire = b * (s - 1) / s
+        else:                                  # collective-permute
+            wire = float(b)
+        out[op] += wire
+        counts[op] += 1
+    out_d = dict(out)
+    out_d["total"] = sum(out.values())
+    out_d["counts"] = dict(counts)
+    return out_d
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # global useful flops (6ND-style)
+    useful_ratio: float          # model_flops / (flops * n_devices)
+    coll_detail: dict
+    mem_stats: dict
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float = 0.0,
+            hlo_text: str = None) -> Roofline:
+    from repro.launch.hloanalysis import analyze_hlo
+    ca = compiled.cost_analysis() or {}
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    # loop-aware totals (cost_analysis counts while bodies once — probed)
+    h = analyze_hlo(txt, n_devices)
+    flops = h.flops
+    hbm = max(h.mem_bytes, float(ca.get("bytes accessed", 0.0)))
+    coll = dict(h.coll_detail)
+    coll["total"] = h.wire_bytes
+    wire = h.wire_bytes
+    cs, ms, ls = flops / PEAK_FLOPS, hbm / HBM_BW, wire / ICI_BW
+    bn = max((("compute", cs), ("memory", ms), ("collective", ls)),
+             key=lambda t: t[1])[0]
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = dict(
+            argument_bytes=getattr(ma, "argument_size_in_bytes", 0),
+            output_bytes=getattr(ma, "output_size_in_bytes", 0),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+            alias_bytes=getattr(ma, "alias_size_in_bytes", 0),
+        )
+        mem["peak_hbm_gb"] = (mem["argument_bytes"] + mem["output_bytes"]
+                              + mem["temp_bytes"]
+                              - mem["alias_bytes"]) / 1e9
+    useful = (model_flops / (flops * n_devices)
+              if flops > 0 and n_devices else 0.0)
+    mem["ca_flops_flat"] = float(ca.get("flops", 0.0))
+    mem["ca_bytes_flat"] = float(ca.get("bytes accessed", 0.0))
+    return Roofline(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                    compute_s=cs, memory_s=ms, collective_s=ls,
+                    bottleneck=bn, model_flops=model_flops,
+                    useful_ratio=useful, coll_detail=coll, mem_stats=mem)

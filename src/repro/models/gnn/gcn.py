@@ -1,0 +1,62 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907): sym-normalized SpMM layers.
+
+gcn-cora assigned config: 2 layers, d_hidden 16, mean/sym aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphBatch, spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    norm: str = "sym"
+    dtype: Any = jnp.float32
+
+
+def init_params(cfg: GCNConfig, key):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"w": [(jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5)
+                   ).astype(cfg.dtype)
+                  for k, a, b in zip(ks, dims[:-1], dims[1:])],
+            "b": [jnp.zeros((b,), cfg.dtype) for b in dims[1:]]}
+
+
+def param_shape_dtypes(cfg: GCNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    sds = jax.ShapeDtypeStruct
+    return {"w": [sds((a, b), cfg.dtype) for a, b in zip(dims[:-1], dims[1:])],
+            "b": [sds((b,), cfg.dtype) for b in dims[1:]]}
+
+
+def forward(params, cfg: GCNConfig, batch: GraphBatch):
+    n = batch.node_feat.shape[0]
+    x = batch.node_feat.astype(cfg.dtype)
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = spmm(x @ w, batch, n, norm=cfg.norm) + b
+        if i < len(params["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, cfg: GCNConfig, batch: GraphBatch):
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    labels = jnp.maximum(batch.labels, 0)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.train_mask & (batch.labels >= 0)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+    acc = jnp.sum((logits.argmax(-1) == batch.labels) * mask) \
+        / jnp.maximum(mask.sum(), 1)
+    return loss, {"acc": acc}

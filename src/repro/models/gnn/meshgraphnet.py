@@ -1,0 +1,107 @@
+"""MeshGraphNet (arXiv:2010.03409): encode-process-decode with edge MLPs.
+
+Assigned config: 15 processor blocks, d_hidden 128, sum aggregation,
+2-hidden-layer MLPs with LayerNorm.  Edge features are relative positions +
+norms when ``positions`` are present, else the provided edge_feat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (GraphBatch, gather_src, mlp_apply,
+                                     mlp_init, mlp_shape_dtypes, scatter_dst)
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_in: int = 8
+    d_edge_in: int = 4
+    d_hidden: int = 128
+    d_out: int = 3
+    mlp_layers: int = 2
+    dtype: Any = jnp.float32
+
+
+def _mlp_dims(cfg, d_in):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers + [cfg.d_hidden]
+
+
+def init_params(cfg: MGNConfig, key):
+    ks = jax.random.split(key, 3 + 2 * cfg.n_layers)
+    p = {
+        "enc_node": mlp_init(ks[0], _mlp_dims(cfg, cfg.d_in),
+                             dtype=cfg.dtype, layer_norm=True),
+        "enc_edge": mlp_init(ks[1], _mlp_dims(cfg, cfg.d_edge_in),
+                             dtype=cfg.dtype, layer_norm=True),
+        "dec": mlp_init(ks[2], [cfg.d_hidden] * (cfg.mlp_layers + 1)
+                        + [cfg.d_out], dtype=cfg.dtype),
+        "proc_edge": [], "proc_node": [],
+    }
+    for i in range(cfg.n_layers):
+        p["proc_edge"].append(mlp_init(
+            ks[3 + 2 * i], _mlp_dims(cfg, 3 * cfg.d_hidden),
+            dtype=cfg.dtype, layer_norm=True))
+        p["proc_node"].append(mlp_init(
+            ks[4 + 2 * i], _mlp_dims(cfg, 2 * cfg.d_hidden),
+            dtype=cfg.dtype, layer_norm=True))
+    return p
+
+
+def param_shape_dtypes(cfg: MGNConfig):
+    p = {
+        "enc_node": mlp_shape_dtypes(_mlp_dims(cfg, cfg.d_in),
+                                     dtype=cfg.dtype, layer_norm=True),
+        "enc_edge": mlp_shape_dtypes(_mlp_dims(cfg, cfg.d_edge_in),
+                                     dtype=cfg.dtype, layer_norm=True),
+        "dec": mlp_shape_dtypes([cfg.d_hidden] * (cfg.mlp_layers + 1)
+                                + [cfg.d_out], dtype=cfg.dtype),
+        "proc_edge": [mlp_shape_dtypes(_mlp_dims(cfg, 3 * cfg.d_hidden),
+                                       dtype=cfg.dtype, layer_norm=True)
+                      for _ in range(cfg.n_layers)],
+        "proc_node": [mlp_shape_dtypes(_mlp_dims(cfg, 2 * cfg.d_hidden),
+                                       dtype=cfg.dtype, layer_norm=True)
+                      for _ in range(cfg.n_layers)],
+    }
+    return p
+
+
+def _edge_inputs(cfg: MGNConfig, batch: GraphBatch):
+    if batch.edge_feat is not None:
+        return batch.edge_feat.astype(cfg.dtype)
+    assert batch.positions is not None
+    ok = batch.edge_src >= 0
+    src = jnp.where(ok, batch.edge_src, 0)
+    dst = jnp.where(ok, batch.edge_dst, 0)
+    rel = batch.positions[dst] - batch.positions[src]
+    feat = jnp.concatenate(
+        [rel, jnp.linalg.norm(rel, axis=-1, keepdims=True)], axis=-1)
+    return (feat * ok[:, None]).astype(cfg.dtype)
+
+
+def forward(params, cfg: MGNConfig, batch: GraphBatch):
+    n = batch.node_feat.shape[0]
+    ok = (batch.edge_src >= 0)[:, None].astype(cfg.dtype)
+    v = mlp_apply(params["enc_node"], batch.node_feat.astype(cfg.dtype))
+    e = mlp_apply(params["enc_edge"], _edge_inputs(cfg, batch))
+    src = jnp.where(batch.edge_src >= 0, batch.edge_src, 0)
+    dst = jnp.where(batch.edge_src >= 0, batch.edge_dst, 0)
+    for pe, pn in zip(params["proc_edge"], params["proc_node"]):
+        e_in = jnp.concatenate([e, v[src], v[dst]], axis=-1)
+        e = e + mlp_apply(pe, e_in) * ok
+        agg = scatter_dst(e, batch, n)
+        v = v + mlp_apply(pn, jnp.concatenate([v, agg], axis=-1))
+    return mlp_apply(params["dec"], v)
+
+
+def loss_fn(params, cfg: MGNConfig, batch: GraphBatch):
+    pred = forward(params, cfg, batch).astype(jnp.float32)
+    target = batch.labels.astype(jnp.float32)
+    mask = batch.train_mask[:, None].astype(jnp.float32)
+    mse = jnp.sum(((pred - target) ** 2) * mask) / jnp.maximum(mask.sum(), 1)
+    return mse, {"mse": mse}

@@ -1,0 +1,76 @@
+"""GraphSAGE (arXiv:1706.02216): mean-aggregator, fanout-sampled training.
+
+graphsage-reddit assigned config: 2 layers, d_hidden 128, fanout 25-10.
+The sampled-minibatch path consumes COO subgraphs produced by the A1
+store's fanout sampler (a bounded 2-hop A1 traversal, data/sampler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphBatch, spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str = "graphsage"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    dtype: Any = jnp.float32
+
+
+def init_params(cfg: SageConfig, key):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, 2 * cfg.n_layers)
+    p = {"w_self": [], "w_nbr": [], "b": []}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p["w_self"].append((jax.random.normal(ks[2 * i], (a, b), jnp.float32)
+                            * (a ** -0.5)).astype(cfg.dtype))
+        p["w_nbr"].append((jax.random.normal(ks[2 * i + 1], (a, b),
+                                             jnp.float32)
+                           * (a ** -0.5)).astype(cfg.dtype))
+        p["b"].append(jnp.zeros((b,), cfg.dtype))
+    return p
+
+
+def param_shape_dtypes(cfg: SageConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    sds = jax.ShapeDtypeStruct
+    return {"w_self": [sds((a, b), cfg.dtype)
+                       for a, b in zip(dims[:-1], dims[1:])],
+            "w_nbr": [sds((a, b), cfg.dtype)
+                      for a, b in zip(dims[:-1], dims[1:])],
+            "b": [sds((b,), cfg.dtype) for b in dims[1:]]}
+
+
+def forward(params, cfg: SageConfig, batch: GraphBatch):
+    n = batch.node_feat.shape[0]
+    x = batch.node_feat.astype(cfg.dtype)
+    L = len(params["b"])
+    for i in range(L):
+        nbr = spmm(x, batch, n, norm="mean")
+        x = x @ params["w_self"][i] + nbr @ params["w_nbr"][i] \
+            + params["b"][i]
+        if i < L - 1:
+            x = jax.nn.relu(x)
+            # l2-normalize (SAGE's stability trick)
+            x = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-6)
+    return x
+
+
+def loss_fn(params, cfg: SageConfig, batch: GraphBatch):
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    labels = jnp.maximum(batch.labels, 0)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.train_mask & (batch.labels >= 0)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+    acc = jnp.sum((logits.argmax(-1) == batch.labels) * mask) \
+        / jnp.maximum(mask.sum(), 1)
+    return loss, {"acc": acc}

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer: sort-based token dispatch (GShard semantics,
+
+MegaBlocks-style memory footprint).
+
+The classic GSPMD MoE materializes a (tokens, experts, capacity) one-hot
+dispatch tensor — at prefill scale (1M tokens x 128 experts) that is
+hundreds of GB.  We instead dispatch by sorting (token, k) pairs by expert
+id and scattering into a dense (E, C, D) buffer:
+
+  route -> top-k -> sort by expert -> rank within expert -> capacity clip
+        -> scatter tokens -> per-expert FFN (einsum, experts sharded on
+           'model' = expert parallelism) -> gather back -> weighted combine.
+
+Under GSPMD the scatter/gather lower to the expert all-to-alls; token
+dropping at capacity bounds the skew (straggler mitigation in-graph: no
+expert can run ahead of the capacity budget).  Dropped tokens pass through
+the residual stream untouched (standard Switch behavior).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    c = int(capacity_factor * n_tokens * top_k / n_experts)
+    return max(_round_up(c, 8), 8)
+
+
+def moe_ffn(x, router_w, we1, we3, we2, *, top_k: int,
+            capacity_factor: float = 1.25, dtype=None, groups: int = 0):
+    """x: (T, D) tokens; router_w: (D, E); we*: (E, D, F) / (E, F, D).
+
+    Returns (T, D) output + aux dict (load-balance loss, drop fraction).
+
+    ``groups > 0`` dispatches per token *group* (GShard's G axis): tokens
+    reshape to (G, T/G) aligned with the data-parallel sharding, so the
+    dispatch sort/rank runs shard-local instead of as a global sorted
+    collective — the §Perf iteration that removed the all-to-all storm the
+    baseline global sort compiled to (EXPERIMENTS.md §Perf/qwen3).
+    Capacity is per group, which also bounds *per-shard* skew (in-graph
+    straggler mitigation).
+    """
+    if groups and groups > 1 and x.shape[0] % groups == 0:
+        return _moe_ffn_grouped(x, router_w, we1, we3, we2, top_k=top_k,
+                                capacity_factor=capacity_factor,
+                                groups=groups)
+    T, D = x.shape
+    E = router_w.shape[-1]
+    F = we1.shape[-1]
+    C = expert_capacity(T, E, top_k, capacity_factor)
+    xf = x.astype(jnp.float32)
+
+    logits = xf @ router_w.astype(jnp.float32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, top_k)              # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch eq. 4) ------------------------
+    me = probs.mean(axis=0)                               # (E,)
+    ce = jax.nn.one_hot(eidx[:, 0], E).mean(axis=0)
+    aux_loss = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----------------------------------------------
+    # NB: sort only integer keys + a permutation index; differentiable values
+    # ride through `take` (lax.sort's VJP is unusable in this jaxlib).
+    flat_e = eidx.reshape(-1).astype(jnp.int32)           # (T*k,)
+    flat_t = (jnp.arange(T * top_k, dtype=jnp.int32) // top_k)
+    order = jnp.arange(T * top_k, dtype=jnp.int32)
+    e_s, t_s, perm = jax.lax.sort((flat_e, flat_t, order), num_keys=2)
+    g_s = gate.reshape(-1)[perm]
+    # rank within expert run
+    run_start = jnp.searchsorted(e_s, e_s, side="left").astype(jnp.int32)
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - run_start
+    keep = rank < C
+    slot = jnp.where(keep, e_s * C + rank, E * C)         # OOB drops
+
+    xe = jnp.zeros((E * C, D), x.dtype).at[slot].set(
+        x[t_s], mode="drop").reshape(E, C, D)
+
+    # ---- expert FFN (SwiGLU), experts sharded over 'model' ----------------
+    h = jnp.einsum("ecd,edf->ecf", xe, we1,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, we3,
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), we2,
+                    preferred_element_type=jnp.float32)   # (E, C, F->D)
+
+    # ---- combine back -------------------------------------------------------
+    slot_c = jnp.minimum(slot, E * C - 1)
+    y_tok = ye.reshape(E * C, D)[slot_c]                  # (T*k, D)
+    w = jnp.where(keep, g_s, 0.0)[:, None]
+    y = jnp.zeros((T, D), jnp.float32).at[t_s].add(
+        y_tok.astype(jnp.float32) * w)
+    drop_frac = 1.0 - keep.mean()
+    return y.astype(x.dtype), {"aux_loss": aux_loss, "drop_frac": drop_frac}
+
+
+def _moe_ffn_grouped(x, router_w, we1, we3, we2, *, top_k: int,
+                     capacity_factor: float, groups: int):
+    """Group-local dispatch: all sort/rank work stays inside a data shard."""
+    from repro.dist.sharding import constrain
+    T, D = x.shape
+    E = router_w.shape[-1]
+    G = groups
+    Tg = T // G
+    C = expert_capacity(Tg, E, top_k, capacity_factor)
+    xg = constrain(x.reshape(G, Tg, D), ("batch", None, None))
+    xf = xg.astype(jnp.float32)
+
+    logits = jnp.einsum("gtd,de->gte", xf, router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, top_k)              # (G, Tg, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(eidx[..., 0], E).mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce)
+
+    flat_e = eidx.reshape(G, Tg * top_k).astype(jnp.int32)
+    flat_t = jnp.broadcast_to(
+        (jnp.arange(Tg * top_k, dtype=jnp.int32) // top_k)[None],
+        (G, Tg * top_k))
+    order = jnp.broadcast_to(
+        jnp.arange(Tg * top_k, dtype=jnp.int32)[None], (G, Tg * top_k))
+    # per-group sort (last axis): shard-local under the G -> data sharding
+    e_s, t_s, perm = jax.lax.sort((flat_e, flat_t, order), num_keys=2,
+                                  dimension=1)
+    g_s = jnp.take_along_axis(gate.reshape(G, Tg * top_k), perm, axis=1)
+
+    idx = jnp.arange(Tg * top_k, dtype=jnp.int32)[None]
+    run_start = jax.vmap(
+        lambda es: jnp.searchsorted(es, es, side="left"))(e_s)
+    rank = idx - run_start.astype(jnp.int32)
+    keep = rank < C
+    slot = jnp.where(keep, e_s * C + rank, E * C)
+
+    xe = jax.vmap(
+        lambda xg_, t_, sl_: jnp.zeros((E * C, D), x.dtype)
+        .at[sl_].set(xg_[t_], mode="drop"))(xg, t_s, slot)
+    xe = xe.reshape(G, E, C, D)
+    xe = constrain(xe, ("batch", "expert", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", xe, we1,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", xe, we3,
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("gecf,efd->gecd", h.astype(x.dtype), we2,
+                    preferred_element_type=jnp.float32)
+    ye = constrain(ye.astype(jnp.float32), ("batch", "expert", None, None))
+
+    slot_c = jnp.minimum(slot, E * C - 1)
+    w = jnp.where(keep, g_s, 0.0)
+    y = jax.vmap(
+        lambda ye_, sl_, t_, w_: jnp.zeros((Tg, D), jnp.float32)
+        .at[t_].add(ye_.reshape(E * C, D)[sl_] * w_[:, None]))(
+            ye, slot_c, t_s, w)
+    drop_frac = 1.0 - keep.mean()
+    return (y.reshape(T, D).astype(x.dtype),
+            {"aux_loss": aux_loss, "drop_frac": drop_frac})

@@ -1,0 +1,176 @@
+"""BST: Behavior Sequence Transformer (Alibaba, arXiv:1905.06874).
+
+Assigned config: embed_dim 32, behavior seq_len 20, 1 transformer block,
+8 heads, MLP 1024-512-256, transformer-seq feature interaction.
+
+The item embedding table is the huge-sparse-table regime (10^6-10^9 rows):
+row-sharded over the entire mesh and fetched with the A1 lookup path
+(models/embedding.py).  Four serving shapes:
+
+  train_batch     (B=65536)  CTR training step (BCE)
+  serve_p99       (B=512)    online scoring
+  serve_bulk      (B=262144) offline scoring
+  retrieval_cand  (B=1, 1M candidates) one user tower output dotted
+                  against a million candidate item embeddings (batched
+                  matmul — never a loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.embedding import gspmd_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 1_000_000
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    d_ff: int = 128
+    mlp_dims: tuple = (1024, 512, 256)
+    n_dense: int = 8
+    dtype: Any = jnp.float32
+
+
+def param_shapes(cfg: BSTConfig):
+    d = cfg.embed_dim
+    L = cfg.seq_len + 1
+    shapes = {
+        "item_emb": ((cfg.n_items, d), ("storage", None)),
+        "pos_emb": ((L, d), (None, None)),
+        "dense_proj": ((cfg.n_dense, d), (None, None)),
+        "blocks": [],
+        "mlp_w": [], "mlp_b": [],
+    }
+    for _ in range(cfg.n_blocks):
+        shapes["blocks"].append({
+            "wq": ((d, d), (None, "tensor")),
+            "wk": ((d, d), (None, "tensor")),
+            "wv": ((d, d), (None, "tensor")),
+            "wo": ((d, d), ("tensor", None)),
+            "ln1": ((d,), (None,)),
+            "ln2": ((d,), (None,)),
+            "w1": ((d, cfg.d_ff), (None, "tensor")),
+            "w2": ((cfg.d_ff, d), ("tensor", None)),
+        })
+    dims = ((cfg.seq_len + 2) * d,) + cfg.mlp_dims + (1,)
+    for a, b in zip(dims[:-1], dims[1:]):
+        # tiny output layers (b < TP degree) stay unsharded on that dim
+        shapes["mlp_w"].append(((a, b), ("fsdp",
+                                         "tensor" if b >= 128 else None)))
+        shapes["mlp_b"].append(((b,), (None,)))
+    shp = jax.tree.map(lambda t: t[0], shapes,
+                       is_leaf=lambda x: isinstance(x, tuple)
+                       and isinstance(x[0], tuple))
+    axes = jax.tree.map(lambda t: t[1], shapes,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and isinstance(x[0], tuple))
+    return shp, axes
+
+
+def init_params(cfg: BSTConfig, key):
+    shp, _ = param_shapes(cfg)
+    leaves, tdef = jax.tree.flatten(shp,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    ks = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(ks, leaves):
+        if len(s) == 1:
+            out.append(jnp.ones(s, cfg.dtype) if s[0] == cfg.embed_dim
+                       else jnp.zeros(s, cfg.dtype))
+        else:
+            out.append((jax.random.normal(k, s, jnp.float32)
+                        * (s[0] ** -0.5)).astype(cfg.dtype))
+    return jax.tree.unflatten(tdef, out)
+
+
+def param_shape_dtypes(cfg: BSTConfig):
+    shp, _ = param_shapes(cfg)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, cfg.dtype), shp,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def logical_axes(cfg: BSTConfig):
+    _, axes = param_shapes(cfg)
+    return axes
+
+
+def _ln(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _block(p, cfg: BSTConfig, x):
+    """Post-norm transformer block over the (L+1) behavior sequence."""
+    B, L, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q = (x @ p["wq"]).reshape(B, L, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, L, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, L, h, dh).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * dh ** -0.5
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", a, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, d) @ p["wo"]
+    x = _ln(x + o, p["ln1"])
+    f = jax.nn.relu(x @ p["w1"]) @ p["w2"]          # leaky-relu in paper
+    return _ln(x + f, p["ln2"])
+
+
+def forward(params, cfg: BSTConfig, hist_ids, target_ids, dense):
+    """hist_ids (B, L), target_ids (B,), dense (B, n_dense) -> logits (B,)."""
+    B, L = hist_ids.shape
+    seq = jnp.concatenate([hist_ids, target_ids[:, None]], axis=1)
+    emb = gspmd_lookup(params["item_emb"], seq).astype(cfg.dtype)
+    emb = emb + params["pos_emb"][None, :, :]
+    emb = constrain(emb, ("batch", None, None))
+    for bp in params["blocks"]:
+        emb = _block(bp, cfg, emb)
+    other = dense.astype(cfg.dtype) @ params["dense_proj"]
+    feat = jnp.concatenate([emb.reshape(B, -1), other], axis=-1)
+    x = feat
+    n = len(params["mlp_w"])
+    for i, (w, b) in enumerate(zip(params["mlp_w"], params["mlp_b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = jax.nn.leaky_relu(x)
+    return x[:, 0].astype(jnp.float32)
+
+
+def loss_fn(params, cfg: BSTConfig, hist_ids, target_ids, dense, labels):
+    logits = forward(params, cfg, hist_ids, target_ids, dense)
+    bce = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return bce, {"bce": bce}
+
+
+def user_tower(params, cfg: BSTConfig, hist_ids, dense):
+    """Retrieval: encode the user history into one d-dim vector."""
+    B, L = hist_ids.shape
+    emb = gspmd_lookup(params["item_emb"], hist_ids).astype(cfg.dtype)
+    emb = emb + params["pos_emb"][None, :L, :]
+    for bp in params["blocks"]:
+        emb = _block(bp, cfg, emb)
+    u = emb.mean(axis=1) + dense.astype(cfg.dtype) @ params["dense_proj"]
+    return u
+
+
+def retrieval_scores(params, cfg: BSTConfig, hist_ids, dense, cand_ids):
+    """Score one (or few) users against a large candidate set.
+
+    cand_ids (C,): scores (B, C) = user_vec @ cand_emb^T — a single batched
+    matmul over the gathered candidate rows.
+    """
+    u = user_tower(params, cfg, hist_ids, dense)           # (B, d)
+    ce = gspmd_lookup(params["item_emb"], cand_ids)        # (C, d)
+    return (u @ ce.T.astype(u.dtype)).astype(jnp.float32)

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (AdamWConfig, AdafactorConfig, OptState,
+                                    init_opt_state, opt_update)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_compress_grads)

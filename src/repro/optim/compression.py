@@ -1,0 +1,59 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Distributed-optimization trick for bandwidth-bound data-parallel reductions:
+quantize gradients to int8 with a per-tensor scale before the cross-replica
+all-reduce, and fold the quantization error back into the next step's
+gradient (error feedback keeps SGD convergence unbiased in expectation).
+4x fewer bytes on the DP all-reduce, which is what the collective roofline
+term of the train cells is made of.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """x (f32/bf16) -> (int8 values, f32 scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_grads(grads, error_state, axis_name=None):
+    """Error-feedback int8 compression of a gradient pytree.
+
+    Adds the carried error, quantizes, optionally psums the int8 payload over
+    ``axis_name`` (inside shard_map), and returns (decompressed grads,
+    new_error_state).  With ``axis_name=None`` the psum is the caller's job
+    (GSPMD inserts it from the sharding); the compression still models the
+    wire format and carries the error.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = compress_int8(gf)
+        if axis_name is not None:
+            qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+            deq = (qsum.astype(jnp.float32) * scale) / n.astype(jnp.float32)
+        else:
+            deq = decompress_int8(q, scale)
+        err = gf - decompress_int8(q, scale)
+        return deq.astype(g.dtype), err
+
+    out = jax.tree.map(one, grads, error_state)
+    newg = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newe = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newg, newe
+
+
+def init_error_state(grads_shape):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        grads_shape)

@@ -1,0 +1,149 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+AdamW with configurable state dtype (bf16 m/v for HBM-tight configs: the
+405B-class archs cannot afford fp32 moments on a 16 GB/chip pod — see
+DESIGN.md memory budget), and Adafactor (factored second moment) for the
+largest configs.  Optimizer states inherit the parameter sharding (ZeRO:
+states live wherever the param shard lives, never replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32      # bf16 halves optimizer HBM
+    grad_clip: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128         # factor only big matrices
+    grad_clip: float = 1.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    m: Any          # AdamW first moment, or None-like empty for Adafactor
+    v: Any          # AdamW second moment, or Adafactor (vr, vc) tuples
+
+
+def _is_factored(p, cfg) -> bool:
+    return (p.ndim >= 2 and p.shape[-1] >= cfg.min_dim_factored
+            and p.shape[-2] >= cfg.min_dim_factored)
+
+
+def init_opt_state(params, cfg) -> OptState:
+    if isinstance(cfg, AdamWConfig):
+        zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+    assert isinstance(cfg, AdafactorConfig)
+
+    def vstate(p):
+        if _is_factored(p, cfg):
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                   params),
+                    v=jax.tree.map(vstate, params))
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), grads), g
+
+
+def opt_update(params, grads, state: OptState, cfg, lr_scale=1.0):
+    """One optimizer step.  Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    if isinstance(cfg, AdamWConfig):
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+            return (newp.astype(p.dtype), mf.astype(cfg.state_dtype),
+                    vf.astype(cfg.state_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, OptState(step=step, m=newm, v=newv), gnorm
+
+    assert isinstance(cfg, AdafactorConfig)
+    rho = 1.0 - step.astype(jnp.float32) ** -cfg.decay
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps
+        if isinstance(v, tuple):
+            vr, vc = v
+            vr = rho * vr + (1 - rho) * jnp.mean(g2, axis=-1)
+            vc = rho * vc + (1 - rho) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                                cfg.eps)
+            vhat = vr[..., None] * vc[..., None, :] / denom
+            newv = (vr, vc)
+        else:
+            vhat = rho * v + (1 - rho) * g2
+            newv = vhat
+        update = gf * jax.lax.rsqrt(vhat + cfg.eps)
+        # relative step-size clipping (Adafactor's d=1.0)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32)
+                - cfg.lr * lr_scale * update
+                - cfg.lr * lr_scale * cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), newv
+
+    is_v_leaf = lambda x: isinstance(x, tuple) or not isinstance(
+        x, (dict, list))
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = tdef.flatten_up_to(state.v)
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    newp = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    newv = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return newp, OptState(step=step, m=state.m, v=newv), gnorm

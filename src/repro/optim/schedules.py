@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, total_steps: int, final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return final_frac + (1 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    t = jnp.clip((step.astype(jnp.float32) - warmup_steps)
+                 / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

@@ -1,0 +1,187 @@
+"""Multi-device SPMD programs run by tests/test_spmd.py in subprocesses
+
+(the forced host-device count must precede jax's first init, so these can't
+run inside the main pytest process)."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+
+def prog_query_parity():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.addressing import StoreConfig
+    from repro.core.graphdb import GraphDB
+    from repro.core.query.executor import QueryCaps, run_queries
+    from repro.core.query.executor_spmd import run_queries_spmd
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    cfg = StoreConfig(n_shards=8, cap_v=128, cap_e=1024, cap_delta=128,
+                      cap_idx=256, cap_idx_delta=64, d_f32=2, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("director")
+    db.vertex_type("actor")
+    db.vertex_type("film", i_attrs=("year", "genre"))
+    db.edge_type("film.director")
+    db.edge_type("film.actor")
+    rng = np.random.default_rng(0)
+    d = [db.create_vertex("director", i) for i in range(5)]
+    films = [db.create_vertex("film", 100 + i,
+                              {"year": 1990 + i,
+                               "genre": int(rng.integers(0, 3))})
+             for i in range(20)]
+    actors = [db.create_vertex("actor", 300 + i) for i in range(30)]
+    t = db.create_transaction()
+    for i, f in enumerate(films):
+        db.create_edge(d[i % 5], f, "film.director", txn=t)
+        for a in rng.choice(30, size=int(rng.integers(1, 6)), replace=False):
+            db.create_edge(f, actors[a], "film.actor", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    db.run_compaction()
+    # leave fresh edges in the delta log so both tiers are exercised
+    t = db.create_transaction()
+    for f in films[:3]:
+        try:
+            db.create_edge(f, actors[29], "film.actor", txn=t)
+        except ValueError:
+            pass
+    db.commit(t)
+
+    caps = QueryCaps(frontier=128, expand=512, bucket=64, results=16)
+    q = lambda i: {"type": "director", "id": i,
+                   "_out_edge": {"type": "film.director",
+                                 "_target": {"type": "film",
+                                             "_out_edge": {
+                                                 "type": "film.actor",
+                                                 "_target": {
+                                                     "type": "actor",
+                                                     "select": "count"}}}}}
+    queries = [q(i) for i in range(5)]
+    rl = run_queries(db, queries, caps)
+    rs = run_queries_spmd(db, queries, mesh, caps)
+    assert np.array_equal(rl.counts, rs.counts), (rl.counts, rs.counts)
+
+    # select parity
+    qs = [{"type": "actor", "id": 300 + i,
+           "_in_edge": {"type": "film.actor",
+                        "_target": {"type": "film",
+                                    "select": ["key", "year"]}}}
+          for i in range(8)]
+    rl = run_queries(db, qs, caps)
+    rs = run_queries_spmd(db, qs, mesh, caps)
+    for qi in range(8):
+        kl = sorted(int(x) for x in rl.rows[("key", 0)][qi] if x >= 0)
+        ks = sorted(int(x) for x in rs.rows[("key", 0)][qi] if x >= 0)
+        assert kl == ks, (qi, kl, ks)
+
+    # intersect parity (director 0 AND actor with guaranteed overlap)
+    q3 = {"intersect": [
+        {"type": "director", "id": 0,
+         "_out_edge": {"type": "film.director", "_target": {"type": "film"}}},
+        {"type": "actor", "id": 329,
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+    rl = run_queries(db, [q3], caps)
+    rs = run_queries_spmd(db, [q3], mesh, caps)
+    assert np.array_equal(rl.counts, rs.counts)
+    print("PARITY_OK")
+
+
+def prog_collective_matmul():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.overlap import collective_matmul_ag
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    S, K, O = 16, 32, 24
+    x = jax.random.normal(jax.random.key(0), (S, K), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (K, O), jnp.float32)
+    y = jax.jit(jax.shard_map(
+        lambda xs, wl: collective_matmul_ag(xs, wl, "model"), mesh=mesh,
+        in_specs=(P("model", None), P(None, "model")),
+        out_specs=P(None, "model")))(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=2e-5, atol=1e-4)
+    print("CM_OK")
+
+
+def prog_pipeline():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.pipeline import pipeline_apply
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((4, 2), ("pod", "model"))
+    M, mb, d = 6, 3, 8
+    xin = jax.random.normal(jax.random.key(2), (M, mb, d))
+    ws = jax.random.normal(jax.random.key(3), (4, d, d)) * 0.3
+
+    def stage_fn(w, h):
+        return jnp.tanh(h @ w)
+
+    def pf(x, w):
+        o = pipeline_apply(stage_fn, w[0], x, axis="pod", n_stages=4,
+                           n_microbatches=M)
+        return jax.lax.psum(
+            jnp.where(jax.lax.axis_index("pod") == 3, o, 0.), "pod")
+
+    out = jax.jit(jax.shard_map(pf, mesh=mesh, in_specs=(P(), P("pod")),
+                                out_specs=P(), check_vma=False))(xin, ws)
+    ref = xin
+    for s in range(4):
+        ref = jnp.tanh(ref @ ws[s])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=1e-5)
+    print("PIPE_OK")
+
+
+def prog_a1_ship_lookup():
+    import jax
+    import jax.numpy as jnp
+    from repro.models.embedding import a1_ship_lookup, gspmd_lookup
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    V, D = 64, 16
+    table = jax.random.normal(jax.random.key(0), (V, D))
+    ids = jax.random.randint(jax.random.key(1), (10,), 0, V)
+    got = a1_ship_lookup(table, ids, mesh)
+    want = gspmd_lookup(table, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    print("SHIP_OK")
+
+
+def prog_reduced_cells_lower():
+    """Every (arch x shape) lowers + compiles on an 8-device mesh (reduced)."""
+    import jax
+    from repro.configs import registry
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    n = 0
+    for arch, shape in registry.all_cells():
+        spec = registry.get(arch)
+        if spec.cell(shape).skip:
+            continue
+        cell = build_cell(arch, shape, mesh, reduced=True)
+        if cell.in_shardings is not None:
+            fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        else:
+            fn = cell.fn
+        with mesh:
+            fn.lower(*cell.args).compile()
+        n += 1
+    print(f"LOWER_OK {n}")
+
+
+if __name__ == "__main__":
+    globals()[f"prog_{sys.argv[1]}"]()

@@ -1,0 +1,220 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 128), (3, 17, 256), (64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+    from repro.kernels.rmsnorm.ref import rmsnorm as ref
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    s = jax.random.normal(jax.random.key(1), shape[-1:], dtype)
+    got = rmsnorm_fwd(x, s, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert_allclose(np.asarray(got, np.float32), np.asarray(ref(x, s), np.float32),
+                    rtol=tol, atol=tol)
+
+
+def test_rmsnorm_grad_matches_ref():
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm as ref
+    x = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+    s = jax.random.normal(jax.random.key(1), (128,), jnp.float32)
+    g1 = jax.grad(lambda x, s: rmsnorm(x, s).sum(), argnums=(0, 1))(x, s)
+    g2 = jax.grad(lambda x, s: ref(x, s).sum(), argnums=(0, 1))(x, s)
+    for a, b in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sorted_lookup
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,q", [(100, 37), (1000, 256), (5000, 17)])
+def test_sorted_lookup_sweep(n, q):
+    from repro.kernels.sorted_lookup.kernel import searchsorted_left
+    from repro.kernels.sorted_lookup.ref import searchsorted_left as ref
+    keys = jnp.sort(jax.random.randint(jax.random.key(2), (n,), 0, 4 * n,
+                                       jnp.int32))
+    qs = jax.random.randint(jax.random.key(3), (q,), -10, 4 * n + 10,
+                            jnp.int32)
+    got = searchsorted_left(keys, qs, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(ref(keys, qs)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.lists(st.integers(-10, 1010), min_size=1, max_size=50))
+def test_sorted_lookup_property(keys, queries):
+    from repro.kernels.sorted_lookup.kernel import searchsorted_left
+    keys = jnp.asarray(sorted(keys), jnp.int32)
+    qs = jnp.asarray(queries, jnp.int32)
+    got = np.asarray(searchsorted_left(keys, qs, interpret=True))
+    want = np.searchsorted(np.asarray(keys), np.asarray(qs), side="left")
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("V,D,B,L", [(100, 128, 8, 4), (531, 256, 16, 7)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(V, D, B, L, mode, dtype):
+    from repro.kernels.embedding_bag.kernel import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag as ref
+    tab = jax.random.normal(jax.random.key(0), (V, D), dtype)
+    ids = jax.random.randint(jax.random.key(1), (B, L), -1, V, jnp.int32)
+    got = embedding_bag(tab, ids, mode=mode, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(ref(tab, ids, mode=mode), np.float32),
+                    rtol=tol, atol=tol)
+
+
+def test_embedding_bag_grad():
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag as ref
+    tab = jax.random.normal(jax.random.key(0), (50, 64), jnp.float32)
+    ids = jax.random.randint(jax.random.key(1), (4, 5), -1, 50, jnp.int32)
+    g1 = jax.grad(lambda t: embedding_bag(t, ids, "sum").sum())(tab)
+    g2 = jax.grad(lambda t: ref(t, ids, mode="sum").sum())(tab)
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment_spmm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,D,R,K,Dout", [(64, 64, 16, 4, 32),
+                                          (200, 128, 50, 9, 128)])
+def test_segment_spmm_sweep(N, D, R, K, Dout):
+    from repro.kernels.segment_spmm.kernel import segment_spmm
+    from repro.kernels.segment_spmm.ref import segment_spmm as ref
+    x = jax.random.normal(jax.random.key(0), (N, D), jnp.float32)
+    ids = jax.random.randint(jax.random.key(1), (R, K), -1, N, jnp.int32)
+    w = jax.random.normal(jax.random.key(2), (D, Dout), jnp.float32) * 0.1
+    norm = jax.random.uniform(jax.random.key(3), (R,), jnp.float32)
+    got = segment_spmm(x, ids, w, norm, interpret=True)
+    assert_allclose(np.asarray(got), np.asarray(ref(x, ids, w, norm)),
+                    rtol=3e-5, atol=1e-5)
+
+
+def test_segment_spmm_no_w_no_norm():
+    from repro.kernels.segment_spmm.kernel import segment_spmm
+    from repro.kernels.segment_spmm.ref import segment_spmm as ref
+    x = jax.random.normal(jax.random.key(0), (30, 128), jnp.float32)
+    ids = jax.random.randint(jax.random.key(1), (10, 3), -1, 30, jnp.int32)
+    got = segment_spmm(x, ids, interpret=True)
+    assert_allclose(np.asarray(got), np.asarray(ref(x, ids)), rtol=1e-5)
+
+
+def test_segment_spmm_grads():
+    from repro.kernels.segment_spmm.ops import segment_spmm
+    from repro.kernels.segment_spmm.ref import segment_spmm as ref
+    x = jax.random.normal(jax.random.key(0), (40, 32), jnp.float32)
+    ids = jax.random.randint(jax.random.key(1), (12, 5), -1, 40, jnp.int32)
+    w = jax.random.normal(jax.random.key(2), (32, 16), jnp.float32)
+    norm = jnp.ones((12,), jnp.float32)
+    g1 = jax.grad(lambda x, w: segment_spmm(x, ids, w, norm).sum(),
+                  argnums=(0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: ref(x, ids, w, norm).sum(),
+                  argnums=(0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# edge_expand
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=24),
+       st.integers(0, 3))
+def test_edge_expand_property(degs, seed):
+    from repro.kernels.edge_expand import ref
+    from repro.kernels.edge_expand.kernel import expand
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(degs, np.int32)
+    starts = np.concatenate([[0], np.cumsum(degs)[:-1]]).astype(np.int32)
+    E = max(int(degs.sum()), 1)
+    dst = rng.integers(0, 999, E).astype(np.int32)
+    tile = 128
+    cap_tiles = int(np.ceil(degs / tile).sum() + 2)
+    item, tw, n_tiles, ovf = ref.plan(jnp.asarray(degs), tile, cap_tiles)
+    got = expand(jnp.asarray(starts), jnp.asarray(degs), (jnp.asarray(dst),),
+                 item, tw, tile=tile, cap_tiles=cap_tiles, interpret=True)
+    (want,), item_r, ovf_r = ref.expand(jnp.asarray(starts),
+                                        jnp.asarray(degs),
+                                        (jnp.asarray(dst),), tile, cap_tiles)
+    assert np.array_equal(np.asarray(got[0]), np.asarray(want))
+    assert not bool(ovf_r)
+    # reassembled ragged content equals the original spans
+    o = np.asarray(got[0]).reshape(-1, tile)
+    it = np.asarray(item)
+    for f in range(len(degs)):
+        mine = o[it == f].reshape(-1)
+        mine = mine[mine >= 0]
+        assert np.array_equal(mine, dst[starts[f]:starts[f] + degs[f]])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal,window", [
+    (2, 4, 4, 128, 128, 64, True, 0),
+    (2, 4, 2, 128, 128, 64, True, 0),       # GQA
+    (1, 8, 2, 256, 256, 32, True, 128),     # GQA + SWA
+    (1, 4, 4, 128, 128, 64, False, 0),      # bidirectional
+    (1, 4, 2, 64, 256, 32, True, 0),        # chunked decode (q_offset)
+])
+def test_flash_fwd_bwd_sweep(B, Hq, Hkv, Sq, Sk, D, causal, window):
+    from repro.kernels.flash_attention import ref
+    from repro.kernels.flash_attention.kernel import flash_bwd, flash_fwd
+    ks = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D), jnp.float32)
+    qo = Sk - Sq
+    want = ref.mha(q, k, v, causal=causal, window=window, q_offset=qo)
+    qf, kf, vf = (q.reshape(B * Hq, Sq, D), k.reshape(B * Hkv, Sk, D),
+                  v.reshape(B * Hkv, Sk, D))
+    got, lse = flash_fwd(qf, kf, vf, causal=causal, window=window,
+                         scale=D ** -0.5, q_offset=qo, block_q=64,
+                         block_k=64, interpret=True)
+    assert_allclose(np.asarray(got.reshape(want.shape)), np.asarray(want),
+                    rtol=2e-5, atol=2e-5)
+    g = jax.random.normal(ks[3], want.shape, jnp.float32)
+    _, vjp = jax.vjp(lambda q, k, v: ref.mha(q, k, v, causal=causal,
+                                             window=window, q_offset=qo),
+                     q, k, v)
+    dq_r, dk_r, dv_r = vjp(g)
+    dq, dk, dv = flash_bwd(qf, kf, vf, got, lse, g.reshape(B * Hq, Sq, D),
+                           causal=causal, window=window, scale=D ** -0.5,
+                           q_offset=qo, block_q=64, block_k=64,
+                           interpret=True)
+    assert_allclose(np.asarray(dq.reshape(q.shape)), np.asarray(dq_r),
+                    rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(dk.reshape(k.shape)), np.asarray(dk_r),
+                    rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(dv.reshape(v.shape)), np.asarray(dv_r),
+                    rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    from repro.kernels.flash_attention import ref
+    from repro.kernels.flash_attention.kernel import flash_fwd
+    q = jax.random.normal(jax.random.key(0), (1, 4, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 4, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 4, 128, 64), jnp.bfloat16)
+    want = ref.mha(q, k, v, causal=True, window=0)
+    got, _ = flash_fwd(q.reshape(4, 128, 64), k.reshape(4, 128, 64),
+                       v.reshape(4, 128, 64), causal=True, window=0,
+                       scale=64 ** -0.5, interpret=True)
+    assert_allclose(np.asarray(got, np.float32).reshape(want.shape),
+                    np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
