@@ -20,6 +20,13 @@ def timeit(fn, *, warmup: int = 2, iters: int = 10):
     return float(a.mean()), float(np.percentile(a, 99)), a
 
 
+# every emit() is recorded here so run.py can dump a machine-readable
+# artifact (CI uploads BENCH_<sha>.json per PR — the perf trajectory)
+ROWS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

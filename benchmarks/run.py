@@ -1,31 +1,51 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only queries,throughput,...]
+                                            [--smoke] [--json OUT.json]
 
-Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
+``--json`` additionally writes the rows as a JSON artifact (what CI
+uploads per commit, accumulating the perf trajectory).  ``--smoke`` runs a
+reduced knowledge graph and only the cheap suites — a per-PR signal, not a
+paper-scale number.
 """
 import argparse
+import json
+import os
+import platform
 import sys
 import time
 
-sys.path.insert(0, "src")
+# work as `python -m benchmarks.run` (repo root) or `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced KG + cheap suites (CI per-PR signal)")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this JSON file")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke and only is None:
+        only = {"queries", "reads"}
 
     from benchmarks import (bench_queries, bench_reads, bench_scaling,
                             bench_throughput)
+    from benchmarks import common
     from repro.data.kg import build_film_kg
 
     print("name,us_per_call,derived")
     t0 = time.time()
     kg = None
     if only is None or {"queries", "throughput", "reads"} & only:
-        kg = build_film_kg(n_films=150, n_actors=200, n_directors=30)
+        kg = (build_film_kg(n_films=40, n_actors=60, n_directors=8)
+              if args.smoke else
+              build_film_kg(n_films=150, n_actors=200, n_directors=30))
     if only is None or "queries" in only:
         bench_queries.run(kg)
     if only is None or "throughput" in only:
@@ -34,7 +54,18 @@ def main() -> None:
         bench_reads.run(kg)
     if only is None or "scaling" in only:
         bench_scaling.run()
-    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    wall = time.time() - t0
+    print(f"# total {wall:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.ROWS,
+                       "smoke": args.smoke,
+                       "wall_s": round(wall, 1),
+                       "python": platform.python_version(),
+                       "unix_time": int(time.time())}, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.ROWS)} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

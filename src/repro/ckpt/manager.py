@@ -27,7 +27,10 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    if hasattr(jax.tree, "flatten_with_path"):
+        flat, treedef = jax.tree.flatten_with_path(tree)
+    else:                              # jax 0.4.x spelling
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef

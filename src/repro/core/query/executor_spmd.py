@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import index as index_mod
+from repro.dist import compat
 from repro.core.addressing import NULL, TS_INF, StoreConfig
 from repro.core.query.a1ql import Hop, Plan, Pred
 from repro.core.query.executor import (I32MAX, QueryCaps, QueryResult,
@@ -371,7 +372,7 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                          attrs={(k, c): qspec for k, c in
                                 zip(plan.select_kind, plan.select_cols)})
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         body, mesh=mesh,
         in_specs=(store_specs, kspec, qspec, P()),
         out_specs=out_specs, check_vma=False))

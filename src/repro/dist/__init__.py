@@ -1,0 +1,17 @@
+"""repro.dist — the SPMD substrate: sharding rules, comm overlap, pipeline.
+
+Three layers, mirroring A1's §3.4 split between *placement* (which machine
+owns which data), *shipping* (moving operators/rows between owners), and
+*scheduling* (keeping the wires busy while the cores compute):
+
+  sharding.py   logical-axis rule tables -> PartitionSpecs (placement)
+  overlap.py    collective matmul: ppermute ring all-gather fused with
+                the consuming contraction (shipping overlapped w/ compute)
+  pipeline.py   GPipe-style microbatch pipeline over a mesh axis
+  compat.py     jax version shims (shard_map / make_mesh API drift)
+
+See README.md in this directory for the rule-system contract.
+"""
+from repro.dist import compat  # noqa: F401
+from repro.dist.sharding import (DEFAULT_RULES, constrain, current_mesh,  # noqa: F401
+                                 resolve, rules_context, tree_specs)

@@ -1,0 +1,55 @@
+"""Communication/computation overlap: collective matmul.
+
+A1 §3.4 overlaps shipping with work: while a machine serves one request it
+already has the next on the wire.  The tensor-parallel analogue is the
+*collective matmul* (Wang et al., ASPLOS'23): instead of all-gathering the
+row-sharded activations and then running one big matmul — serializing wire
+and FLOPs — walk the gather as a ``ppermute`` ring and consume each chunk
+the moment it lands.  XLA overlaps step k's ppermute with step k's matmul,
+hiding the wire behind the math whenever FLOPs/chunk >= bytes/bandwidth.
+
+Runs inside ``shard_map``; callers hold per-device shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+
+
+def ring_perm(n: int):
+    """Send-"up" ppermute ring: device i -> i+1 (mod n)."""
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def collective_matmul_ag(x_shard, w_local, axis_name: str):
+    """All-gather(x) @ w, overlapped on a ppermute ring.
+
+    Args (per-device views inside shard_map, ring of size N over
+    ``axis_name``):
+      x_shard: (S/N, K)  — activation rows, sharded over ``axis_name``
+      w_local: (K, O/N)  — weight columns, sharded over ``axis_name``
+
+    Returns (S, O/N): this device's output columns for *all* rows — the
+    result the unfused ``all_gather(x) @ w_local`` would produce, computed
+    as N chunk matmuls with the gather in flight behind them.
+    """
+    n = compat.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    s = x_shard.shape[0]
+    out_dtype = jnp.result_type(x_shard.dtype, w_local.dtype)
+    out = jnp.zeros((n * s, w_local.shape[1]), out_dtype)
+    perm = ring_perm(n)
+
+    chunk = x_shard
+    for step in range(n):
+        # launch the next hop first so XLA can run it under this chunk's
+        # matmul; the ring sends "up" so after k hops we hold chunk me-k
+        nxt = (jax.lax.ppermute(chunk, axis_name, perm)
+               if step != n - 1 else None)
+        src = (me - step) % n
+        out = jax.lax.dynamic_update_slice(
+            out, (chunk @ w_local).astype(out_dtype), (src * s, 0))
+        chunk = nxt
+    return out

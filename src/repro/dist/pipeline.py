@@ -1,0 +1,75 @@
+"""GPipe-style microbatch pipeline over a named mesh axis.
+
+Each device along ``axis`` owns one stage's weights (the A1 analogue:
+each machine owns one region of the graph and work flows through owners).
+Microbatches stream through the ring: at tick t, stage s computes
+microbatch t-s and hands its activation to stage s+1 via ``ppermute``.
+A schedule of M microbatches over S stages takes M+S-1 ticks; the bubble
+fraction (S-1)/(M+S-1) shrinks as M grows.
+
+Runs inside ``shard_map``.  All stages share one activation shape/dtype
+(each stage's output feeds the next stage's input).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+from repro.dist.overlap import ring_perm
+
+
+def pipeline_apply(stage_fn, stage_params, x, *, axis: str, n_stages: int,
+                   n_microbatches: int):
+    """Run ``x`` through ``n_stages`` pipeline stages along ``axis``.
+
+    Args (per-device views inside shard_map):
+      stage_fn:      (stage_params, h) -> h', shape/dtype preserving
+      stage_params:  this device's stage weights
+      x:             (n_microbatches, *mb_shape) — the full input stream,
+                     replicated (only stage 0 reads it)
+      axis:          mesh axis carrying the stages
+      n_stages:      pipeline depth; must equal the axis size
+      n_microbatches: M, the leading dim of ``x``
+
+    Returns (n_microbatches, *mb_shape): on the *last* stage, the outputs;
+    on earlier stages, zeros (callers typically select the last stage's
+    copy, e.g. with a masked psum over ``axis``).
+    """
+    size = compat.axis_size(axis)
+    if size != n_stages:
+        raise ValueError(f"n_stages={n_stages} != |{axis}|={size}")
+    M = n_microbatches
+    if x.shape[0] != M:
+        raise ValueError(f"x leading dim {x.shape[0]} != M={M}")
+    stage = jax.lax.axis_index(axis)
+    out_sds = jax.eval_shape(stage_fn, stage_params,
+                             jax.ShapeDtypeStruct(x.shape[1:], x.dtype))
+    if out_sds.shape != x.shape[1:]:
+        raise ValueError(
+            f"stage_fn must preserve shape: {out_sds.shape} != {x.shape[1:]}")
+    perm = ring_perm(n_stages)
+    h0 = jnp.zeros(x.shape[1:], out_sds.dtype)
+    out0 = jnp.zeros((M,) + x.shape[1:], out_sds.dtype)
+
+    def tick(carry, t):
+        h, out = carry
+        # stage 0 injects microbatch t (clamped: past M it runs garbage
+        # that is never written); later stages consume the handed-off h
+        x_t = jax.lax.dynamic_index_in_dim(x, jnp.clip(t, 0, M - 1), 0,
+                                           keepdims=False)
+        y = stage_fn(stage_params, jnp.where(stage == 0,
+                                             x_t.astype(out_sds.dtype), h))
+        h_next = jax.lax.ppermute(y, axis, perm)
+        # the last stage emits microbatch t-(S-1) once the fill drains
+        o_t = t - (n_stages - 1)
+        idx = jnp.clip(o_t, 0, M - 1)
+        write = (o_t >= 0) & (stage == n_stages - 1)
+        prev = jax.lax.dynamic_index_in_dim(out, idx, 0, keepdims=False)
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, jnp.where(write, y, prev), idx, 0)
+        return (h_next, out), None
+
+    (_, out), _ = jax.lax.scan(tick, (h0, out0),
+                               jnp.arange(M + n_stages - 1))
+    return out

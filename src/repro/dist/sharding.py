@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules: names -> mesh axes -> PartitionSpecs.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"fsdp", ...); a rule table maps each name to zero or more *mesh* axes.
+This indirection is what lets one model implementation serve every
+parallelism plan in configs/ — a plan is just a rule override dict, scoped
+with :func:`rules_context` or passed explicitly to :func:`tree_specs`.
+
+Resolution contract (everything launch/steps.py relies on):
+
+  * a logical name maps to ``None`` (replicate), one mesh axis name, or a
+    tuple of mesh axis names (the dim shards over their product);
+  * mesh axes absent from the target mesh are silently dropped — the same
+    plan resolves on a ("data","model") pod slice and on the full
+    ("pod","data","model") mesh;
+  * a mesh axis is consumed at most once per spec (first dim wins), so an
+    override like ``{"fsdp": ("data","model")}`` composes with defaults
+    that also use "model" without tripping GSPMD's duplicate-axis check;
+  * unknown logical names resolve to the mesh axis of the same name when
+    one exists (so specs can name mesh axes directly), else replicate.
+
+:func:`constrain` applies a rule-resolved ``with_sharding_constraint`` and
+is a **no-op when no mesh is in scope** — pure-CPU unit tests run the
+exact model code the 256-chip mesh runs, constraints and all.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# The repo-wide default plan (Megatron-style TP on 'model', DP/FSDP on
+# 'data', outer DP or pipeline on 'pod').  Logical names are the union of
+# what models/{transformer,attention,moe,recsys,gnn}.py annotate.
+DEFAULT_RULES: dict = {
+    "batch":    ("pod", "data"),   # activations: data-parallel dims
+    "seq":      None,              # sequence-parallel plans override -> model
+    "kv_seq":   "model",           # flash-decoding: KV cache sharded on seq
+    "layers":   None,              # scanned stack dim: never sharded
+    "embed":    None,              # d_model vectors (ln scales): replicated
+    "fsdp":     "data",            # ZeRO-style param/optimizer shard dim
+    "heads":    "model",           # q-head tensor parallelism
+    "kv_heads": None,              # kv heads < TP degree on assigned archs
+    "ff":       "model",           # MLP hidden
+    "vocab":    "model",           # embedding rows / logits
+    "expert":   "model",           # MoE expert parallelism
+    "tensor":   "model",           # generic TP dim (GNN node shards)
+}
+
+
+class _Rules(threading.local):
+    def __init__(self):
+        self.stack: list[dict] = []
+
+
+_SCOPED = _Rules()
+
+
+def _table(rules: Optional[dict] = None) -> dict:
+    t = dict(DEFAULT_RULES)
+    for d in _SCOPED.stack:
+        t.update(d)
+    if rules:
+        t.update(rules)
+    return t
+
+
+@contextmanager
+def rules_context(rules: dict):
+    """Scope a rule-override dict: inner contexts win, exits restore."""
+    _SCOPED.stack.append(dict(rules))
+    try:
+        yield
+    finally:
+        _SCOPED.stack.pop()
+
+
+def is_axes_leaf(x: Any) -> bool:
+    """A logical-axes tuple: all entries are names or None.
+
+    The single definition of the tuple-leaf convention (launch/steps.py
+    imports this); a pair of axes-tuples, e.g. Adafactor's factored second
+    moment, is *not* a leaf and recurses into two specs."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def resolve(axes, *, rules: Optional[dict] = None, mesh=None) -> P:
+    """Logical axes tuple -> PartitionSpec against ``mesh``."""
+    table = _table(rules)
+    mesh_axes = tuple(mesh.axis_names) if mesh is not None else ()
+    used: set = set()
+    parts = []
+    for ax in axes:
+        if ax is None:
+            parts.append(None)
+            continue
+        if isinstance(ax, str):
+            if ax in table:
+                val = table[ax]
+            else:
+                val = ax if ax in mesh_axes else None
+        else:           # already a mesh-axis tuple (explicit spec entry)
+            val = ax
+        if val is None:
+            parts.append(None)
+            continue
+        if isinstance(val, str):
+            val = (val,)
+        keep = tuple(m for m in val if m in mesh_axes and m not in used)
+        used.update(keep)
+        parts.append(keep[0] if len(keep) == 1 else (keep or None))
+    return P(*parts)
+
+
+def tree_specs(tree_axes, *, rules: Optional[dict] = None, mesh=None):
+    """Pytree of logical-axes tuples -> pytree of PartitionSpecs.
+
+    Leaves are axes-tuples per :func:`_is_axes_leaf`; ``()`` (a scalar)
+    resolves to ``P()``.  ``None`` leaves pass through untouched (jax
+    treats them as empty subtrees on both sides)."""
+    return jax.tree.map(lambda a: resolve(a, rules=rules, mesh=mesh),
+                        tree_axes, is_leaf=is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# mesh discovery + constrain
+# ---------------------------------------------------------------------------
+
+def current_mesh():
+    """The mesh in scope (``with mesh:`` / ``jax.sharding.use_mesh``), else
+    None.  Probes the modern abstract-mesh API first, then the classic
+    thread-resources context."""
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        try:
+            am = get_am()
+            if am is not None and not am.empty:
+                return am
+        except Exception:
+            pass
+    try:
+        from jax._src import mesh as _mesh_lib
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, axes, *, rules: Optional[dict] = None):
+    """Rule-aware ``with_sharding_constraint``.
+
+    Resolves ``axes`` against the mesh currently in scope.  With no mesh —
+    eager CPU tests, un-meshed jit — this is the identity, so model code
+    carries its layout contract unconditionally."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve(axes, rules=rules, mesh=mesh)
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)

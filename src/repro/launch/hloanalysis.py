@@ -143,27 +143,36 @@ def _symbols(header: str, lines: list[str]) -> dict:
 
 
 def _operands(line: str, op: str) -> list[str]:
-    """names of the operands of `op(...)` in the line."""
+    """names of the operands of `op(...)` in the line.
+
+    Operands may carry their type (``dot(f32[4,256]{1,0} %x, ...)`` —
+    older HLO printers) or not (``dot(%x, ...)``); split only on commas at
+    bracket depth zero so shape commas don't shred the list."""
     try:
         inner = line.split(op + "(", 1)[1]
     except IndexError:
         return []
     depth = 1
     buf = ""
+    parts = []
     for ch in inner:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
             if depth == 0:
                 break
-        buf += ch
+        if ch == "," and depth == 1:
+            parts.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    parts.append(buf)
     out = []
-    for tok in buf.split(","):
+    for tok in parts:
         tok = tok.strip()
-        if tok.startswith("%"):
-            tok = tok[1:]
-        out.append(tok.split(" ")[-1].lstrip("%"))
+        if tok:
+            out.append(tok.split(" ")[-1].lstrip("%"))
     return out
 
 

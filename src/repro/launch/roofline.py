@@ -123,6 +123,8 @@ def analyze(compiled, *, n_devices: int, model_flops: float = 0.0,
             hlo_text: str = None) -> Roofline:
     from repro.launch.hloanalysis import analyze_hlo
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     txt = hlo_text if hlo_text is not None else compiled.as_text()
     # loop-aware totals (cost_analysis counts while bodies once — probed)
     h = analyze_hlo(txt, n_devices)

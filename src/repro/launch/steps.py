@@ -22,12 +22,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
-from repro.dist.sharding import resolve, rules_context, tree_specs
+from repro.dist.sharding import (is_axes_leaf, resolve, rules_context,
+                                 tree_specs)
 from repro.optim.optimizers import (AdafactorConfig, AdamWConfig, OptState,
                                     init_opt_state, opt_update)
 
-_AXES_LEAF = lambda x: (isinstance(x, tuple)
-                        and all(isinstance(e, (str, type(None))) for e in x))
+_AXES_LEAF = is_axes_leaf       # the shared tuple-leaf convention
 
 
 @dataclasses.dataclass

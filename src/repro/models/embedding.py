@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.dist import compat
+
 I32MAX = jnp.int32(2**31 - 1)
 
 
@@ -35,7 +37,7 @@ def gspmd_lookup(table, ids):
 
 def _ship_lookup_local(table_local, ids, *, axes, bucket: int):
     """Inside shard_map: ids (B,) global; table_local (V/S, D)."""
-    S = jax.lax.axis_size(axes)
+    S = compat.axis_size(axes)
     me = jax.lax.axis_index(axes)
     B = ids.shape[0]
     rows_per = table_local.shape[0]
@@ -68,7 +70,7 @@ def a1_ship_lookup(table, ids, mesh, *, axes=("data", "model"),
     shape = ids.shape
     flat = ids.reshape(-1)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         partial(_ship_lookup_local, axes=axes, bucket=0),
         mesh=mesh,
         in_specs=(P(axes), P()),

@@ -95,6 +95,7 @@ def prog_collective_matmul():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
     from repro.dist.overlap import collective_matmul_ag
     from repro.launch.mesh import make_test_mesh
 
@@ -102,7 +103,7 @@ def prog_collective_matmul():
     S, K, O = 16, 32, 24
     x = jax.random.normal(jax.random.key(0), (S, K), jnp.float32)
     w = jax.random.normal(jax.random.key(1), (K, O), jnp.float32)
-    y = jax.jit(jax.shard_map(
+    y = jax.jit(compat.shard_map(
         lambda xs, wl: collective_matmul_ag(xs, wl, "model"), mesh=mesh,
         in_specs=(P("model", None), P(None, "model")),
         out_specs=P(None, "model")))(x, w)
@@ -115,6 +116,7 @@ def prog_pipeline():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
     from repro.dist.pipeline import pipeline_apply
     from repro.launch.mesh import make_test_mesh
 
@@ -132,8 +134,8 @@ def prog_pipeline():
         return jax.lax.psum(
             jnp.where(jax.lax.axis_index("pod") == 3, o, 0.), "pod")
 
-    out = jax.jit(jax.shard_map(pf, mesh=mesh, in_specs=(P(), P("pod")),
-                                out_specs=P(), check_vma=False))(xin, ws)
+    out = jax.jit(compat.shard_map(pf, mesh=mesh, in_specs=(P(), P("pod")),
+                                   out_specs=P(), check_vma=False))(xin, ws)
     ref = xin
     for s in range(4):
         ref = jnp.tanh(ref @ ws[s])

@@ -1,0 +1,158 @@
+"""Unit tests for the repro.dist.sharding rule system (pure CPU, no mesh
+needed except where a 1-device mesh suffices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (DEFAULT_RULES, constrain, current_mesh,
+                                 resolve, rules_context, tree_specs)
+
+
+class FakeMesh:
+    """Just axis_names — resolve() only consults those."""
+    def __init__(self, *names):
+        self.axis_names = names
+
+
+MESH_DM = FakeMesh("data", "model")
+MESH_PDM = FakeMesh("pod", "data", "model")
+
+
+# ---------------------------------------------------------------------------
+# resolve
+# ---------------------------------------------------------------------------
+
+def test_resolve_default_plan():
+    assert resolve(("layers", "fsdp", "heads"), mesh=MESH_DM) == \
+        P(None, "data", "model")
+    assert resolve(("vocab", "fsdp"), mesh=MESH_DM) == P("model", "data")
+
+
+def test_resolve_drops_axes_missing_from_mesh():
+    # "batch" -> ("pod", "data"): the pod slice mesh has no "pod" axis
+    assert resolve(("batch", None, None), mesh=MESH_DM) == \
+        P("data", None, None)
+    assert resolve(("batch", None, None), mesh=MESH_PDM) == \
+        P(("pod", "data"), None, None)
+    # a rule naming only missing axes replicates
+    assert resolve(("batch",), rules={"batch": "pod"}, mesh=MESH_DM) == P(None)
+
+
+def test_resolve_never_reuses_a_mesh_axis():
+    # fsdp -> (data, model) override + vocab -> model default: the second
+    # "model" use is dropped, not an error
+    spec = resolve(("fsdp", "vocab"), rules={"fsdp": ("data", "model")},
+                   mesh=MESH_DM)
+    assert spec == P(("data", "model"), None)
+
+
+def test_resolve_unknown_name_falls_back_to_mesh_axis_or_replicates():
+    assert resolve(("data", "nonsense"), mesh=MESH_DM) == P("data", None)
+
+
+def test_resolve_empty_axes_is_scalar_spec():
+    assert resolve((), mesh=MESH_DM) == P()
+
+
+# ---------------------------------------------------------------------------
+# rules_context
+# ---------------------------------------------------------------------------
+
+def test_rules_context_override_and_restore():
+    assert resolve(("heads",), mesh=MESH_DM) == P("model")
+    with rules_context({"heads": None}):
+        assert resolve(("heads",), mesh=MESH_DM) == P(None)
+        with rules_context({"heads": "data"}):        # inner wins
+            assert resolve(("heads",), mesh=MESH_DM) == P("data")
+        assert resolve(("heads",), mesh=MESH_DM) == P(None)   # restored
+    assert resolve(("heads",), mesh=MESH_DM) == P("model")    # restored
+
+
+def test_rules_context_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with rules_context({"heads": None}):
+            raise RuntimeError("boom")
+    assert resolve(("heads",), mesh=MESH_DM) == P("model")
+
+
+def test_explicit_rules_beat_context():
+    with rules_context({"ff": None}):
+        assert resolve(("ff",), rules={"ff": "data"}, mesh=MESH_DM) == \
+            P("data")
+
+
+# ---------------------------------------------------------------------------
+# tree_specs
+# ---------------------------------------------------------------------------
+
+def test_tree_specs_nested_pytree_with_tuple_leaves():
+    tree = {
+        "embed": ("vocab", "fsdp"),
+        "blocks": [
+            {"wq": ("layers", "fsdp", "heads"),
+             "ln": ("embed",)},
+            {"we1": ("layers", "expert", "fsdp", None)},
+        ],
+        "step": (),
+    }
+    specs = tree_specs(tree, mesh=MESH_DM)
+    assert specs["embed"] == P("model", "data")
+    assert specs["blocks"][0]["wq"] == P(None, "data", "model")
+    assert specs["blocks"][0]["ln"] == P(None)
+    assert specs["blocks"][1]["we1"] == P(None, "model", "data", None)
+    assert specs["step"] == P()
+
+
+def test_tree_specs_pair_of_tuples_is_two_leaves():
+    # Adafactor's factored v: a pair of axes-tuples must resolve to a pair
+    # of specs (the pair itself is NOT an axes leaf)
+    leaf = (("layers", "fsdp"), ("layers", "heads"))
+    specs = tree_specs({"v": leaf}, mesh=MESH_DM)
+    assert specs["v"] == (P(None, "data"), P(None, "model"))
+
+
+def test_tree_specs_honors_rule_overrides():
+    specs = tree_specs({"w": ("fsdp", "ff")},
+                       rules={"fsdp": None, "ff": ("data", "model")},
+                       mesh=MESH_DM)
+    assert specs["w"] == P(None, ("data", "model"))
+
+
+def test_tree_specs_none_leaf_passthrough():
+    specs = tree_specs({"a": ("batch",), "b": None}, mesh=MESH_DM)
+    assert specs["a"] == P("data") and specs["b"] is None
+
+
+# ---------------------------------------------------------------------------
+# constrain
+# ---------------------------------------------------------------------------
+
+def test_constrain_noop_outside_mesh():
+    assert current_mesh() is None
+    x = jnp.arange(8.0).reshape(2, 4)
+    y = constrain(x, ("batch", "heads"))
+    assert y is x                     # literally the identity, not a copy
+
+
+def test_constrain_noop_under_jit_without_mesh():
+    @jax.jit
+    def f(x):
+        return constrain(x, ("batch", None)) * 2
+    np.testing.assert_allclose(np.asarray(f(jnp.ones((4, 2)))),
+                               2 * np.ones((4, 2)))
+
+
+def test_constrain_applies_under_mesh_context():
+    mesh = jax.make_mesh((1,), ("model",))
+    with mesh:
+        assert current_mesh() is not None
+
+        @jax.jit
+        def f(x):
+            return constrain(x, ("heads", None)) + 1
+
+        out = f(jnp.zeros((4, 4)))
+    np.testing.assert_allclose(np.asarray(out), np.ones((4, 4)))
+    assert current_mesh() is None     # context exited

@@ -74,10 +74,11 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.launch.hloanalysis import analyze_hlo
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.dist import compat
+mesh = compat.make_mesh((8,), ("x",))
 def f(a):
     return jax.lax.psum(a, "x")
-c = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())) \
+c = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())) \
     .lower(jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
 a = analyze_hlo(c.as_text(), 8)
 # per-device shard = 128 floats = 512B; AR wire = 2*512*(7/8) = 896

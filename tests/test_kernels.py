@@ -3,6 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

@@ -5,6 +5,10 @@ match a trivial in-memory reference executed in commit order — the
 serializability oracle for the MVCC/OCC engine.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.addressing import StoreConfig

@@ -2,6 +2,9 @@
 import networkx as nx
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.addressing import StoreConfig
