@@ -24,9 +24,17 @@ def timeit(fn, *, warmup: int = 2, iters: int = 10):
 # artifact (CI uploads BENCH_<sha>.json per PR — the perf trajectory)
 ROWS: list = []
 
+# run-level metadata stamped onto every row (backend, platform, ...) so
+# trajectory points stay comparable across backends and toolchains
+CONTEXT: dict = {}
+
+
+def set_context(**kv) -> None:
+    CONTEXT.update({k: v for k, v in kv.items() if v is not None})
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
     ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
-                 "derived": derived})
+                 "derived": derived, **CONTEXT})
     print(f"{name},{us_per_call:.1f},{derived}")

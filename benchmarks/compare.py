@@ -1,0 +1,85 @@
+"""Compare two BENCH_*.json trajectory points; flag per-row regressions.
+
+    python -m benchmarks.compare PREV.json CUR.json [--threshold 2.0]
+                                                    [--warn-only] [--github]
+
+Rows are joined by benchmark name; rows that carry a ``backend`` field on
+both sides must also agree on it (points from different backends are never
+compared).  A row regresses when ``cur/prev > threshold`` on us_per_call.
+Exit status is 1 when any row regresses, unless ``--warn-only`` (what CI
+uses while the trajectory is short — micro-benchmarks on shared runners are
+noisy).  ``--github`` additionally emits ::warning workflow annotations.
+"""
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        out[row["name"]] = row
+    return out
+
+
+def compare(prev: dict, cur: dict, threshold: float):
+    """Returns (regressions, improvements, report_lines)."""
+    regressions, improvements, lines = [], [], []
+    for name, c in cur.items():
+        p = prev.get(name)
+        if p is None:
+            lines.append(f"  new        {name}: {c['us_per_call']}us")
+            continue
+        pb, cb = p.get("backend"), c.get("backend")
+        if pb is not None and cb is not None and pb != cb:
+            lines.append(f"  skip       {name}: backend {pb} vs {cb}")
+            continue
+        pv, cv = float(p["us_per_call"]), float(c["us_per_call"])
+        if pv <= 0 or cv <= 0:          # derived-only rows emit 0.0
+            continue
+        ratio = cv / pv
+        tag = "ok"
+        if ratio > threshold:
+            tag = "REGRESSION"
+            regressions.append((name, pv, cv, ratio))
+        elif ratio < 1 / threshold:
+            tag = "improved"
+            improvements.append((name, pv, cv, ratio))
+        lines.append(f"  {tag:10s} {name}: {pv} -> {cv}us ({ratio:.2f}x)")
+    for name in prev:
+        if name not in cur:
+            lines.append(f"  dropped    {name}")
+    return regressions, improvements, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("cur")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="flag rows slower than this ratio (default 2.0)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0")
+    ap.add_argument("--github", action="store_true",
+                    help="emit ::warning annotations for regressions")
+    args = ap.parse_args()
+
+    prev, cur = load_rows(args.prev), load_rows(args.cur)
+    regressions, improvements, lines = compare(prev, cur, args.threshold)
+    print(f"# compare {args.prev} -> {args.cur} "
+          f"(threshold {args.threshold}x)")
+    print("\n".join(lines))
+    print(f"# {len(regressions)} regression(s), "
+          f"{len(improvements)} improvement(s)")
+    if args.github:
+        for name, pv, cv, ratio in regressions:
+            print(f"::warning title=bench regression::{name} "
+                  f"{pv}us -> {cv}us ({ratio:.2f}x)")
+    if regressions and not args.warn_only:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

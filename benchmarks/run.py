@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only queries,throughput,...]
                                             [--smoke] [--json OUT.json]
+                                            [--backend auto|ref|pallas]
 
 Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
 ``--json`` additionally writes the rows as a JSON artifact (what CI
@@ -29,15 +30,32 @@ def main() -> None:
                     help="reduced KG + cheap suites (CI per-PR signal)")
     ap.add_argument("--json", default="",
                     help="also write rows to this JSON file")
+    ap.add_argument("--backend", default="", choices=["", "auto", "ref",
+                                                      "pallas"],
+                    help="read-path backend (default: $REPRO_BACKEND/auto)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
         only = {"queries", "reads"}
+    if args.backend:
+        # before any repro import: every suite resolves the env default
+        os.environ["REPRO_BACKEND"] = args.backend
+
+    import jax
 
     from benchmarks import (bench_queries, bench_reads, bench_scaling,
                             bench_throughput)
     from benchmarks import common
+    from repro.core import backend as backend_mod
     from repro.data.kg import build_film_kg
+
+    be = backend_mod.resolve(args.backend or None)
+    meta = {"backend": be.kind,
+            "backend_interpret": be.interpret,
+            "jax": jax.__version__,
+            "jax_platform": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind}
+    common.set_context(backend=be.kind)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -63,7 +81,8 @@ def main() -> None:
                        "smoke": args.smoke,
                        "wall_s": round(wall, 1),
                        "python": platform.python_version(),
-                       "unix_time": int(time.time())}, f, indent=1)
+                       "unix_time": int(time.time()),
+                       **meta}, f, indent=1)
         print(f"# wrote {args.json} ({len(common.ROWS)} rows)",
               file=sys.stderr)
 

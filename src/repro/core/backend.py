@@ -1,0 +1,128 @@
+"""Backend dispatch for the read hot path (edge enumeration + index probes).
+
+A1's headline read throughput comes from a purpose-built RDMA read path
+(§3.4); ours comes from the Pallas kernels under ``repro.kernels``.  This
+module is the seam between the *semantics* layer (``core/edges.py``,
+``core/index.py`` — pure jnp, the oracle) and the *hardware* layer (the
+``edge_expand`` and ``sorted_lookup`` kernels): every hot read operator asks
+the backend which implementation to run.
+
+Contract
+--------
+A :class:`Backend` is a frozen (hashable) value threaded through the jitted
+query programs as part of their cache key:
+
+  * ``kind="ref"``     — the branchless jnp reference path.  Defines the
+    semantics; always available.
+  * ``kind="pallas"``  — the Pallas kernels.  Compiled on TPU; everywhere
+    else they run in interpret mode (bit-identical by the kernel test
+    suites, and by construction here: the kernel output is scattered into
+    the reference layout, see ``edges.expand``).
+
+Selection (first match wins):
+
+  1. an explicit ``backend=`` argument to ``run_queries`` /
+     ``compile_query`` / ``GraphDB(backend=...)``;
+  2. the ``REPRO_BACKEND`` environment variable (``ref``/``pallas``/``auto``);
+  3. ``auto``: ``pallas`` when the default jax backend is TPU (the hardware
+     the kernels were written for), ``ref`` otherwise — CPU CI keeps running
+    the cheap oracle, TPU runs at line rate, no code changes anywhere.
+
+Adding the next kernel: give the op a jnp reference in the semantics layer,
+add a ``Backend``-dispatched helper here, and key any program cache on the
+backend.  See ``src/repro/core/README.md`` for the worked ``segment_spmm``
+example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+
+_VALID = ("ref", "pallas", "auto")
+ENV_VAR = "REPRO_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Resolved backend choice.  Frozen: usable in jit/program cache keys."""
+
+    kind: str                 # 'ref' | 'pallas'
+    interpret: bool = False   # pallas kernels run in interpret mode (no TPU)
+
+    @property
+    def is_pallas(self) -> bool:
+        return self.kind == "pallas"
+
+
+REF = Backend("ref")
+
+
+def resolve(spec: Optional[str] = None) -> Backend:
+    """Resolve a backend name (or None) to a concrete :class:`Backend`.
+
+    ``None`` falls back to ``$REPRO_BACKEND``, then ``auto``.
+    """
+    name = spec or os.environ.get(ENV_VAR, "") or "auto"
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    on_tpu = jax.default_backend() == "tpu"
+    if name == "auto":
+        name = "pallas" if on_tpu else "ref"
+    if name == "ref":
+        return REF
+    return Backend("pallas", interpret=not on_tpu)
+
+
+# ---------------------------------------------------------------------------
+# dispatched primitives
+# ---------------------------------------------------------------------------
+
+def expand_tiles(starts, degs, pools, *, tile: int, cap_tiles: int,
+                 backend: Backend):
+    """Tile-padded ragged CSR span gather (the edge-enumeration primitive).
+
+    Returns (outs, item_of_tile, tw_of_tile, n_tiles): ``outs[i]`` is
+    ``pools[i]`` gathered to (cap_tiles*tile,) with -1 in invalid lanes;
+    lane j of tile t is edge ``tw_of_tile[t]*tile + j`` of frontier item
+    ``item_of_tile[t]`` (item == F marks a padding tile).
+    """
+    from repro.kernels.edge_expand import ref as _ref
+    item, tw, n_tiles, _ = _ref.plan(degs, tile, cap_tiles)
+    if backend.is_pallas:
+        from repro.kernels.edge_expand.kernel import expand as _kernel
+        outs = _kernel(starts, degs, tuple(pools), item, tw, tile=tile,
+                       cap_tiles=cap_tiles, interpret=backend.interpret)
+    else:
+        outs, _, _ = _ref.expand(starts, degs, tuple(pools), tile, cap_tiles)
+    return outs, item, tw, n_tiles
+
+
+def searchsorted_blocked(keys, queries, lo, *, block: int, backend: Backend):
+    """Left insertion position of each query within its own sorted block.
+
+    ``keys`` is a flat block-major array whose slice ``[lo[q], lo[q]+block)``
+    is sorted for every query q.  Returns block-relative positions, exactly
+    ``jnp.searchsorted(keys[lo:lo+block], query, side='left')``.
+    """
+    import jax.numpy as jnp
+    if backend.is_pallas:
+        from repro.kernels.sorted_lookup.kernel import searchsorted_left_ranged
+        return searchsorted_left_ranged(keys, queries, lo, lo + block,
+                                        interpret=backend.interpret)
+    # reference: per-query dynamic slice + binary search
+    def one(q, l):
+        blk = jax.lax.dynamic_slice(keys, (l,), (block,))
+        return jnp.searchsorted(blk, q, side="left").astype(jnp.int32)
+    return jax.vmap(one)(queries, lo)
+
+
+def searchsorted(keys, queries, *, backend: Backend):
+    """Left insertion position of each query in one flat sorted array."""
+    import jax.numpy as jnp
+    if backend.is_pallas:
+        from repro.kernels.sorted_lookup.kernel import searchsorted_left
+        return searchsorted_left(keys, queries, interpret=backend.interpret)
+    return jnp.searchsorted(keys, queries, side="left").astype(jnp.int32)

@@ -18,10 +18,55 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.core.addressing import NULL, TS_INF, StoreConfig
 from repro.core.store import GraphStore, visible
 
 ANY_TYPE = jnp.int32(-1)
+
+TILE = 128          # edge_expand lane width (the TPU vector-lane count)
+
+
+def _tiled_csr_expand(qids, deg, start, pools, etype, read_ts, cap_out: int,
+                      backend: backend_mod.Backend):
+    """Kernel-backed CSR expansion, scattered back to the reference layout.
+
+    The edge_expand kernel streams whole CSR spans tile-by-tile (scalar-
+    prefetched span starts drive the DMA pipeline) instead of the reference
+    path's one searchsorted + 4 gathers *per output slot*.  Its tile-padded
+    output is consumed in place: the edge-visibility/type mask is evaluated
+    directly on the tile buffers and surviving lanes are scattered into the
+    dense (cap_out,) frontier buffer at exactly the position the reference
+    path would have written, so downstream (dedup, checks, results) is
+    bit-identical between backends.  Tile-padding therefore never inflates
+    the dedup sort width — cap_tiles is sized so that any expansion the
+    reference path accepts (total <= cap_out) also fits the tile plan.
+
+    pools = (nbr, typ, create, delete); returns (out_q, out_n) of (cap_out,).
+    """
+    F = deg.shape[0]
+    cap_tiles = F + (cap_out + TILE - 1) // TILE
+    (nbr_t, typ_t, cre_t, del_t), item, tw, _ = backend_mod.expand_tiles(
+        start, deg, pools, tile=TILE, cap_tiles=cap_tiles, backend=backend)
+    item_c = jnp.minimum(item, F - 1)
+    excl = jnp.cumsum(deg) - deg                      # dense span offsets
+    lane = jnp.arange(TILE, dtype=jnp.int32)
+    shape = (cap_tiles, TILE)
+    nbr_t, typ_t = nbr_t.reshape(shape), typ_t.reshape(shape)
+    cre_t, del_t = cre_t.reshape(shape), del_t.reshape(shape)
+    # invalid lanes carry -1 in every pool: visible(-1, -1, ts) is False,
+    # so the reference e_ok predicate needs no extra lane mask here
+    e_ok = (visible(cre_t, del_t, read_ts)
+            & ((etype < 0) | (typ_t == etype))
+            & (nbr_t >= 0))
+    pos = excl[item_c][:, None] + tw[:, None] * TILE + lane[None, :]
+    pos = jnp.where(e_ok, pos, cap_out)               # drop masked lanes
+    out_q = jnp.full((cap_out,), NULL, jnp.int32).at[pos.reshape(-1)].set(
+        jnp.broadcast_to(qids[item_c][:, None], shape).reshape(-1),
+        mode="drop")
+    out_n = jnp.full((cap_out,), NULL, jnp.int32).at[pos.reshape(-1)].set(
+        nbr_t.reshape(-1), mode="drop")
+    return out_q, out_n
 
 
 # ---------------------------------------------------------------------------
@@ -49,7 +94,8 @@ def _delta_arrays(store: GraphStore, direction: str):
 
 
 def expand(store: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
-           etype, direction: str, read_ts, cap_out: int):
+           etype, direction: str, read_ts, cap_out: int,
+           backend: backend_mod.Backend = backend_mod.REF):
     """Enumerate edges of ``gids`` (global-array mode).
 
     Args:
@@ -58,6 +104,8 @@ def expand(store: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
       direction: 'out' or 'in'.
       read_ts: snapshot timestamp.
       cap_out: static capacity for the CSR expansion segment.
+      backend: read-path backend; the pallas path streams spans through the
+        edge_expand kernel and produces bit-identical output (same layout).
 
     Returns:
       (out_qids, out_nbr, out_valid, overflow): the expansion, shape
@@ -77,20 +125,25 @@ def expand(store: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
     total = cum[-1] if deg.shape[0] > 0 else jnp.int32(0)
     overflow = total > cap_out
 
-    k = jnp.arange(cap_out, dtype=jnp.int32)
-    item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
-    item_c = jnp.minimum(item, deg.shape[0] - 1)
-    base = cum[item_c] - deg[item_c]
-    epos = start[item_c] + (k - base)
-    in_range = k < total
-    epos = jnp.where(in_range, epos, 0)
+    if backend.is_pallas:
+        out_q, out_n = _tiled_csr_expand(qids, deg, start,
+                                         (nbr, typ, ecre, edel), etype,
+                                         read_ts, cap_out, backend)
+    else:
+        k = jnp.arange(cap_out, dtype=jnp.int32)
+        item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+        item_c = jnp.minimum(item, deg.shape[0] - 1)
+        base = cum[item_c] - deg[item_c]
+        epos = start[item_c] + (k - base)
+        in_range = k < total
+        epos = jnp.where(in_range, epos, 0)
 
-    e_ok = (in_range
-            & visible(ecre[epos], edel[epos], read_ts)
-            & ((etype < 0) | (typ[epos] == etype))
-            & (nbr[epos] >= 0))
-    out_q = jnp.where(e_ok, qids[item_c], NULL)
-    out_n = jnp.where(e_ok, nbr[epos], NULL)
+        e_ok = (in_range
+                & visible(ecre[epos], edel[epos], read_ts)
+                & ((etype < 0) | (typ[epos] == etype))
+                & (nbr[epos] >= 0))
+        out_q = jnp.where(e_ok, qids[item_c], NULL)
+        out_n = jnp.where(e_ok, nbr[epos], NULL)
 
     # ---- tier 2: delta-log merge (recent, not yet compacted edges) --------
     dslot, dnbr, dtyp, dts, ddel = _delta_arrays(store, direction)

@@ -39,10 +39,14 @@ class GraphDB:
     def __init__(self, cfg: StoreConfig, *, catalog: Optional[Catalog] = None,
                  tenant: str = "default", graph: str = "g",
                  caps: Optional[txn_mod.BatchCaps] = None,
-                 replication_log=None):
+                 replication_log=None, backend: Optional[str] = None):
         cfg.validate()
         self.cfg = cfg
         self.caps = caps or txn_mod.BatchCaps()
+        # read-path backend ('ref'|'pallas'|'auto'|None = env/auto); resolved
+        # by the query executors per call — host conveniences (lookup_vertex,
+        # get_edges) always use the cheap jnp reference path
+        self.backend = backend
         self.store: GraphStore = make_store(cfg)
         self.catalog = catalog or Catalog()
         if tenant not in self.catalog.tenants:

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core.addressing import NULL, TS_INF, StoreConfig
 from repro.core.store import GraphStore, visible
 
@@ -55,13 +56,19 @@ def route_host(vtype: int, key: int, n_shards: int) -> int:
     return mix32_host(vtype, key) % n_shards
 
 
-def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts):
+def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
+           backend: backend_mod.Backend = backend_mod.REF):
     """Batched primary-index probe at a snapshot (global-array mode).
 
     Returns (gids, found): gid of the live vertex for each (vtype, key), or
     NULL.  Two-tier: binary search of the sorted main index + linear scan of
     the delta.  Later (newer create_ts) entries win, so an uncompacted
     re-insert after delete resolves correctly.
+
+    The pallas backend probes every shard block in one streamed pass of the
+    sorted_lookup kernel (window-ranged compare-and-count); the ref backend
+    binary-searches each query's block.  Both produce the same positions, so
+    the window scan below is shared and results are bit-identical.
     """
     S, cap_x, cap_xd = cfg.n_shards, cfg.cap_idx, cfg.cap_idx_delta
     q = vtypes.shape[0]
@@ -74,23 +81,23 @@ def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts):
     ix_h = jnp.where(store.ix_gid >= 0, mix32(store.ix_vtype, store.ix_key),
                      jnp.int32(2**31 - 1))
 
-    def probe_one(hq, vt, k, sh, ok):
-        blk = jax.lax.dynamic_slice(ix_h, (sh * cap_x,), (cap_x,))
-        pos = jnp.searchsorted(blk, hq, side="left").astype(jnp.int32)
-        best_g = jnp.int32(NULL)
-        best_ts = jnp.int32(-1)
-        for w in range(_WINDOW):
-            p = jnp.minimum(pos + w, cap_x - 1)
-            row = sh * cap_x + p
-            hit = ((store.ix_gid[row] >= 0)
-                   & (store.ix_vtype[row] == vt) & (store.ix_key[row] == k)
-                   & visible(store.ix_create[row], store.ix_delete[row], read_ts))
-            newer = hit & (store.ix_create[row] > best_ts)
-            best_g = jnp.where(newer, store.ix_gid[row], best_g)
-            best_ts = jnp.where(newer, store.ix_create[row], best_ts)
-        return jnp.where(ok, best_g, NULL), jnp.where(ok, best_ts, -1)
-
-    g_main, ts_main = jax.vmap(probe_one)(h, vtypes, keys, shard, valid)
+    pos0 = backend_mod.searchsorted_blocked(ix_h, h, base, block=cap_x,
+                                            backend=backend)
+    best_g = jnp.full((q,), NULL, jnp.int32)
+    best_ts = jnp.full((q,), -1, jnp.int32)
+    for w in range(_WINDOW):
+        p = jnp.minimum(pos0 + w, cap_x - 1)
+        row = base + p
+        hit = ((store.ix_gid[row] >= 0)
+               & (store.ix_vtype[row] == vtypes)
+               & (store.ix_key[row] == keys)
+               & visible(store.ix_create[row], store.ix_delete[row],
+                         read_ts))
+        newer = hit & (store.ix_create[row] > best_ts)
+        best_g = jnp.where(newer, store.ix_gid[row], best_g)
+        best_ts = jnp.where(newer, store.ix_create[row], best_ts)
+    g_main = jnp.where(valid, best_g, NULL)
+    ts_main = jnp.where(valid, best_ts, -1)
 
     # delta scan (small): (Q, XD) match matrix, newest visible entry wins
     XD = store.xd_vtype.shape[0]

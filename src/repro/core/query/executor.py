@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import edges as edges_mod
 from repro.core import index as index_mod
 from repro.core.addressing import NULL, TS_INF, StoreConfig
@@ -173,12 +174,14 @@ def build_select(store: GraphStore, cfg: StoreConfig, plan: Plan,
 # ---------------------------------------------------------------------------
 
 def _chain_frontier(store, cfg: StoreConfig, plan: Plan, caps: QueryCaps,
-                    keys, valid, read_ts):
+                    keys, valid, read_ts,
+                    backend: backend_mod.Backend = backend_mod.REF):
     """Run index lookup + all hops; returns final (qids, gids, valid, failed)."""
     Q = keys.shape[0]
     F = caps.frontier
     vt = jnp.full((Q,), plan.start_vtype, jnp.int32)
-    gids, found = index_mod.lookup(store, cfg, vt, keys, valid, read_ts)
+    gids, found = index_mod.lookup(store, cfg, vt, keys, valid, read_ts,
+                                   backend=backend)
     qids = jnp.arange(Q, dtype=jnp.int32)
     ok = valid & found
     pad = F - Q
@@ -194,7 +197,8 @@ def _chain_frontier(store, cfg: StoreConfig, plan: Plan, caps: QueryCaps,
     for hop in plan.hops:
         oq, on, ov, ovf = edges_mod.expand(
             store, cfg, qids, gids, vmask, etype=jnp.int32(hop.etype),
-            direction=hop.direction, read_ts=read_ts, cap_out=caps.expand)
+            direction=hop.direction, read_ts=read_ts, cap_out=caps.expand,
+            backend=backend)
         failed = failed | ovf
         qids, gids, vmask, ovf2 = dedup_compact(oq, on, ov, F)
         failed = failed | ovf2
@@ -226,14 +230,15 @@ def _terminal(store, cfg, plan, caps, qids, gids, vmask, read_ts, Q: int):
 
 
 def _run_intersect(store, cfg, plan: Plan, caps: QueryCaps, keys_b, valid,
-                   read_ts, Q: int):
+                   read_ts, Q: int,
+                   backend: backend_mod.Backend = backend_mod.REF):
     """Star-pattern intersection (Q3): keep vertices reached by all branches."""
     B = len(plan.branches)
     all_q, all_g, all_v = [], [], []
     failed = jnp.zeros((), bool)
     for bi, branch in enumerate(plan.branches):
         q, g, v, f = _chain_frontier(store, cfg, branch, caps,
-                                     keys_b[bi], valid, read_ts)
+                                     keys_b[bi], valid, read_ts, backend)
         failed = failed | f
         all_q.append(q)
         all_g.append(g)
@@ -253,27 +258,33 @@ def _run_intersect(store, cfg, plan: Plan, caps: QueryCaps, keys_b, valid,
 
 
 # compiled-executor cache (the paper parses per query; we compile per plan
-# *shape* so repeated patterns — the common case in serving — are free)
+# *shape* so repeated patterns — the common case in serving — are free).
+# CACHE_STATS is observable so tests/benchmarks can assert no retracing.
 _CACHE: dict = {}
+CACHE_STATS = {"hits": 0, "misses": 0}
 
 
-def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps, n_queries: int):
-    key = (cfg, plan, caps, n_queries, "local")
+def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
+                  n_queries: int,
+                  backend: backend_mod.Backend = backend_mod.REF):
+    key = (cfg, plan, caps, n_queries, backend, "local")
     if key in _CACHE:
+        CACHE_STATS["hits"] += 1
         return _CACHE[key]
+    CACHE_STATS["misses"] += 1
 
     if plan.is_intersect:
         @jax.jit
         def run(store, keys_b, valid, read_ts):
             out, failed = _run_intersect(store, cfg, plan, caps, keys_b,
-                                         valid, read_ts, n_queries)
+                                         valid, read_ts, n_queries, backend)
             out["failed"] = failed
             return out
     else:
         @jax.jit
         def run(store, keys, valid, read_ts):
             q, g, v, failed = _chain_frontier(store, cfg, plan, caps, keys,
-                                              valid, read_ts)
+                                              valid, read_ts, backend)
             out = _terminal(store, cfg, plan, caps, q, g, v, read_ts,
                             n_queries)
             out["failed"] = failed
@@ -283,15 +294,19 @@ def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps, n_queries: int)
     return run
 
 
-def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None
-                ) -> QueryResult:
+def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None,
+                backend: Optional[str] = None) -> QueryResult:
     """Host entry point: parse, group by plan shape, execute, assemble.
 
     All queries in one call execute at one snapshot timestamp (the paper's
     consistent global snapshot across the distributed graph).
+
+    ``backend`` overrides the db's read-path backend ('ref'|'pallas'|'auto';
+    see core/backend.py for resolution).
     """
     from repro.core.query.a1ql import parse
     caps = caps or QueryCaps()
+    be = backend_mod.resolve(backend or getattr(db, "backend", None))
     read_ts = db.snapshot_ts()
     db.active_query_ts.append(read_ts)       # pin versions (GC barrier)
     try:
@@ -300,10 +315,10 @@ def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None
         if any(p.signature() != plan0.signature() or p != plan0
                for p, _ in plans[1:]):
             # mixed batch: execute one by one (frontends route by pattern)
-            outs = [run_queries(db, [q], caps) for q in queries]
+            outs = [run_queries(db, [q], caps, backend) for q in queries]
             return _merge_results(outs)
         Q = len(queries)
-        fn = compile_query(db.cfg, plan0, caps, Q)
+        fn = compile_query(db.cfg, plan0, caps, Q, be)
         if plan0.is_intersect:
             keys_b = jnp.asarray(
                 np.array([[k[bi] for _, k in plans]

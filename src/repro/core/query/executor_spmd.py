@@ -32,7 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import index as index_mod
+from repro.core.edges import _tiled_csr_expand
 from repro.dist import compat
 from repro.core.addressing import NULL, TS_INF, StoreConfig
 from repro.core.query.a1ql import Hop, Plan, Pred
@@ -47,31 +49,32 @@ from jax.sharding import PartitionSpec as P
 # ---------------------------------------------------------------------------
 
 def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
-                  read_ts):
+                  read_ts, backend: backend_mod.Backend = backend_mod.REF):
     """Primary-index probe against *my* index block.  Only queries whose key
 
     routes to me produce a gid; everyone else emits NULL (they find it on
-    their own shard)."""
+    their own shard).  Inside shard_map the local index block is one sorted
+    array, so the pallas backend probes the whole batch with a single
+    sorted_lookup kernel call."""
     S, cap_x, cap_xd = cfg.n_shards, cfg.cap_idx, cfg.cap_idx_delta
     mine = valid & (index_mod.route(vtypes, keys, S) == me)
     h = index_mod.mix32(vtypes, keys)
     ix_h = jnp.where(st.ix_gid >= 0, index_mod.mix32(st.ix_vtype, st.ix_key),
                      I32MAX)
 
-    def probe(hq, vt, k, ok):
-        pos = jnp.searchsorted(ix_h, hq, side="left").astype(jnp.int32)
-        best_g, best_ts = jnp.int32(NULL), jnp.int32(-1)
-        for w in range(16):
-            p = jnp.minimum(pos + w, cap_x - 1)
-            hit = ((st.ix_gid[p] >= 0) & (st.ix_vtype[p] == vt)
-                   & (st.ix_key[p] == k)
-                   & visible(st.ix_create[p], st.ix_delete[p], read_ts))
-            newer = hit & (st.ix_create[p] > best_ts)
-            best_g = jnp.where(newer, st.ix_gid[p], best_g)
-            best_ts = jnp.where(newer, st.ix_create[p], best_ts)
-        return jnp.where(ok, best_g, NULL), best_ts
-
-    g_main, ts_main = jax.vmap(probe)(h, vtypes, keys, mine)
+    pos0 = backend_mod.searchsorted(ix_h, h, backend=backend)
+    best_g = jnp.full(h.shape, NULL, jnp.int32)
+    best_ts = jnp.full(h.shape, -1, jnp.int32)
+    for w in range(16):
+        p = jnp.minimum(pos0 + w, cap_x - 1)
+        hit = ((st.ix_gid[p] >= 0) & (st.ix_vtype[p] == vtypes)
+               & (st.ix_key[p] == keys)
+               & visible(st.ix_create[p], st.ix_delete[p], read_ts))
+        newer = hit & (st.ix_create[p] > best_ts)
+        best_g = jnp.where(newer, st.ix_gid[p], best_g)
+        best_ts = jnp.where(newer, st.ix_create[p], best_ts)
+    g_main = jnp.where(mine, best_g, NULL)
+    ts_main = best_ts
     # delta scan
     m = (mine[:, None]
          & (st.xd_vtype[None, :] == vtypes[:, None])
@@ -86,7 +89,8 @@ def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
 
 
 def _expand_local(st: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
-                  etype: int, direction: str, read_ts, cap_out: int):
+                  etype: int, direction: str, read_ts, cap_out: int,
+                  backend: backend_mod.Backend = backend_mod.REF):
     """Edge enumeration from my CSR block + delta log (gids owned by me)."""
     S = cfg.n_shards
     if direction == "out":
@@ -105,18 +109,23 @@ def _expand_local(st: GraphStore, cfg: StoreConfig, qids, gids, valid, *,
     cum = jnp.cumsum(deg)
     total = cum[-1]
     overflow = total > cap_out
-    k = jnp.arange(cap_out, dtype=jnp.int32)
-    item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
-    item_c = jnp.minimum(item, deg.shape[0] - 1)
-    base = cum[item_c] - deg[item_c]
-    epos = jnp.where(k < total, start[item_c] + (k - base), 0)
     et = jnp.int32(etype)
-    e_ok = ((k < total)
-            & visible(ecre[epos], edel[epos], read_ts)
-            & ((et < 0) | (typ[epos] == et))
-            & (nbr[epos] >= 0))
-    out_q = jnp.where(e_ok, qids[item_c], NULL)
-    out_n = jnp.where(e_ok, nbr[epos], NULL)
+    if backend.is_pallas:
+        out_q, out_n = _tiled_csr_expand(qids, deg, start,
+                                         (nbr, typ, ecre, edel), et,
+                                         read_ts, cap_out, backend)
+    else:
+        k = jnp.arange(cap_out, dtype=jnp.int32)
+        item = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+        item_c = jnp.minimum(item, deg.shape[0] - 1)
+        base = cum[item_c] - deg[item_c]
+        epos = jnp.where(k < total, start[item_c] + (k - base), 0)
+        e_ok = ((k < total)
+                & visible(ecre[epos], edel[epos], read_ts)
+                & ((et < 0) | (typ[epos] == et))
+                & (nbr[epos] >= 0))
+        out_q = jnp.where(e_ok, qids[item_c], NULL)
+        out_n = jnp.where(e_ok, nbr[epos], NULL)
 
     # ---- delta merge (tier 2), §Perf a1-kg iter 1 --------------------------
     # The naive (frontier x delta) match matrix flattens to F*cap_delta
@@ -188,7 +197,8 @@ def _route(qids, gids, valid, S: int, B: int, axes):
 # the SPMD program
 # ---------------------------------------------------------------------------
 
-def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts):
+def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts,
+                backend: backend_mod.Backend = backend_mod.REF):
     """Index scan + hops; returns local (qids, gids, valid, pending, failed).
 
     ``pending`` is the (vtype, pred) check owed to the *next* routing step —
@@ -198,7 +208,7 @@ def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts):
     Q = keys.shape[0]
     me = jax.lax.axis_index(axes).astype(jnp.int32)
     vt = jnp.full((Q,), plan.start_vtype, jnp.int32)
-    g0 = _lookup_local(st, cfg, me, vt, keys, valid, read_ts)
+    g0 = _lookup_local(st, cfg, me, vt, keys, valid, read_ts, backend)
     qids = jnp.where(g0 >= 0, jnp.arange(Q, dtype=jnp.int32), NULL)
     pad = F - Q
     if pad < 0:
@@ -219,7 +229,8 @@ def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts):
         oq, on, ovf3 = _expand_local(st, cfg, rq, rg, rv & alive,
                                      etype=hop.etype,
                                      direction=hop.direction,
-                                     read_ts=read_ts, cap_out=caps.expand)
+                                     read_ts=read_ts, cap_out=caps.expand,
+                                     backend=backend)
         failed = failed | ovf3
         qids, gids, vmask, ovf4 = dedup_compact(oq, on, on >= 0, F)
         failed = failed | ovf4
@@ -300,16 +311,21 @@ def _finalize(st, cfg, plan, caps, axes, qids, gids, vmask, pending, read_ts,
 
 
 _CACHE: dict = {}
+CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                        n_queries: int, mesh,
                        storage_axes=("data", "model"),
-                       query_axis: Optional[str] = None):
+                       query_axis: Optional[str] = None,
+                       backend: backend_mod.Backend = backend_mod.REF):
     """Build the jitted SPMD query program for one plan shape."""
-    key = (cfg, plan, caps, n_queries, id(mesh), storage_axes, query_axis)
+    key = (cfg, plan, caps, n_queries, id(mesh), storage_axes, query_axis,
+           backend)
     if key in _CACHE:
+        CACHE_STATS["hits"] += 1
         return _CACHE[key]
+    CACHE_STATS["misses"] += 1
     axes = storage_axes
     store_spec = P(axes)
     qspec = P(query_axis) if query_axis else P()
@@ -325,7 +341,8 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
             pendings = []
             for bi, br in enumerate(plan.branches):
                 q, g, v, pend, f = _spmd_chain(store, cfg, br, caps, axes,
-                                               keys[bi], valid, read_ts)
+                                               keys[bi], valid, read_ts,
+                                               backend)
                 # resolve each branch fully: route + check before intersect
                 S, F, Bk = cfg.n_shards, caps.frontier, caps.bucket
                 rq, rg, ovf = _route(q, g, v, S, Bk, axes)
@@ -354,7 +371,8 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                             (-1, None), read_ts, n_queries, failed)
         else:
             q, g, v, pend, failed = _spmd_chain(store, cfg, plan, caps,
-                                                axes, keys, valid, read_ts)
+                                                axes, keys, valid, read_ts,
+                                                backend)
             out = _finalize(store, cfg, plan, caps, axes, q, g, v, pend,
                             read_ts, n_queries, failed)
         if query_axis:
@@ -382,11 +400,13 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
 
 def run_queries_spmd(db, queries: list[dict], mesh,
                      caps: Optional[QueryCaps] = None,
-                     storage_axes=("data", "model")) -> QueryResult:
+                     storage_axes=("data", "model"),
+                     backend: Optional[str] = None) -> QueryResult:
     """Host entry point mirroring executor.run_queries on a mesh."""
     from repro.core.query.a1ql import parse
     from repro.core.query.executor import _to_result
     caps = caps or QueryCaps()
+    be = backend_mod.resolve(backend or getattr(db, "backend", None))
     read_ts = db.snapshot_ts()
     db.active_query_ts.append(read_ts)
     try:
@@ -395,7 +415,8 @@ def run_queries_spmd(db, queries: list[dict], mesh,
         assert all(p == plan0 for p, _ in plans[1:]), \
             "spmd batch must share one plan shape"
         Q = len(queries)
-        fn = compile_query_spmd(db.cfg, plan0, caps, Q, mesh, storage_axes)
+        fn = compile_query_spmd(db.cfg, plan0, caps, Q, mesh, storage_axes,
+                                backend=be)
         if plan0.is_intersect:
             keys = jnp.asarray(np.array(
                 [[k[bi] for _, k in plans]

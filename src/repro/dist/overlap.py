@@ -53,3 +53,55 @@ def collective_matmul_ag(x_shard, w_local, axis_name: str):
             out, (chunk @ w_local).astype(out_dtype), (src * s, 0))
         chunk = nxt
     return out
+
+
+# ---------------------------------------------------------------------------
+# opt-in wiring into the transformer TP matmuls
+# ---------------------------------------------------------------------------
+
+def tp_matmul_ag(x, w, *, axis: str = "model", batch_axes=("pod", "data")):
+    """Gather-overlapped tensor-parallel matmul for 3D activations.
+
+    The sequence-parallel TP pattern: ``x (B, S, K)`` arrives sequence-
+    sharded over ``axis``; ``w (K, O)`` is column-sharded over ``axis``.
+    GSPMD lowers ``x @ w`` to all-gather(x over seq) -> matmul, serializing
+    wire and FLOPs; this wraps the same contraction in a shard_map running
+    :func:`collective_matmul_ag`'s ppermute ring instead, so each gather hop
+    hides behind the previous chunk's matmul.
+
+    Falls back to a plain matmul when no mesh is in scope, ``axis`` is
+    absent/size-1, or S doesn't divide — CPU unit tests and decode (S=1)
+    run the identical reference contraction.  Opt in per model via
+    ``LMConfig.use_collective_matmul`` (default off; see ROADMAP wire-model
+    numbers before enabling on a real topology).
+    """
+    from repro.dist import sharding as _sharding
+    mesh = _sharding.current_mesh()
+    if (mesh is None or axis not in mesh.axis_names
+            or mesh.shape[axis] == 1 or x.ndim != 3
+            or x.shape[1] % mesh.shape[axis] != 0):
+        return x @ w
+    n = mesh.shape[axis]
+    from jax.sharding import PartitionSpec as P
+    baxes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_shards = 1
+    for a in baxes:
+        b_shards *= mesh.shape[a]
+    B, S, K = x.shape
+    if B % b_shards != 0 or w.shape[1] % n != 0:
+        # shapes GSPMD handles but the explicit in_specs cannot split evenly
+        return x @ w
+    bspec = (baxes[0] if len(baxes) == 1 else (baxes or None))
+
+    def body(x_l, w_l):
+        b_loc = x_l.shape[0]
+        out = collective_matmul_ag(x_l.reshape(b_loc * (S // n), K), w_l,
+                                   axis)
+        # ring output is chunk-major (src, b, s_loc); restore (b, S)
+        return (out.reshape(n, b_loc, S // n, w_l.shape[1])
+                .transpose(1, 0, 2, 3).reshape(b_loc, S, w_l.shape[1]))
+
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(bspec, axis, None), P(None, axis)),
+                          out_specs=P(bspec, None, axis), check_vma=False)
+    return fn(x, w)

@@ -60,3 +60,57 @@ def searchsorted_left(keys, queries, *, block_q: int = 512,
     )(keys_p, queries_p)
     # padded keys are INT32_MAX: counted as >= any query, so no correction
     return out[:q]
+
+
+def _probe_ranged_kernel(k_ref, q_ref, lo_ref, hi_ref, o_ref, *, bk: int):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    keys = k_ref[...]          # (bk,)
+    qs = q_ref[...]            # (bq,)
+    pos = kb * bk + jax.lax.iota(jnp.int32, bk)            # global key index
+    lt = ((keys[None, :] < qs[:, None])
+          & (pos[None, :] >= lo_ref[...][:, None])
+          & (pos[None, :] < hi_ref[...][:, None]))
+    o_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+def searchsorted_left_ranged(keys, queries, lo, hi, *, block_q: int = 512,
+                             block_k: int = 2048, interpret: bool = False):
+    """Per-query windowed probe over a block-major array of sorted runs.
+
+    The primary index is shard-major: ``keys`` holds S independently sorted
+    blocks back to back.  Each query carries its own window ``[lo, hi)`` (its
+    shard's block); the result is the left insertion position *within* the
+    window, i.e. ``count(keys[lo:hi] < q)`` — one streamed pass over the key
+    array serves every shard at once (the batched analogue of A1 probing S
+    BTrees with one wave of RDMA reads).
+
+    keys: (N,) i32, sorted within each window; queries/lo/hi: (Q,) i32.
+    Returns (Q,) i32 window-relative positions.
+    """
+    n, q = keys.shape[0], queries.shape[0]
+    bq, bk = min(block_q, q), min(block_k, n)
+    padq = pl.cdiv(q, bq) * bq - q
+    padn = pl.cdiv(n, bk) * bk - n
+    keys_p = jnp.pad(keys, (0, padn), constant_values=I32MAX)
+    queries_p = jnp.pad(queries, (0, padq), constant_values=I32MAX)
+    # padded queries get an empty window: count stays 0
+    lo_p = jnp.pad(lo.astype(jnp.int32), (0, padq), constant_values=0)
+    hi_p = jnp.pad(hi.astype(jnp.int32), (0, padq), constant_values=0)
+    grid = (pl.cdiv(q + padq, bq), pl.cdiv(n + padn, bk))
+    out = pl.pallas_call(
+        functools.partial(_probe_ranged_kernel, bk=bk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk,), lambda i, j: (j,)),
+                  pl.BlockSpec((bq,), lambda i, j: (i,)),
+                  pl.BlockSpec((bq,), lambda i, j: (i,)),
+                  pl.BlockSpec((bq,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q + padq,), jnp.int32),
+        interpret=interpret,
+    )(keys_p, queries_p, lo_p, hi_p)
+    return out[:q]

@@ -9,3 +9,16 @@ def searchsorted_left(keys, queries):
     the number of keys strictly less than the query.
     """
     return jnp.searchsorted(keys, queries, side="left").astype(jnp.int32)
+
+
+def searchsorted_left_ranged(keys, queries, lo, hi):
+    """Window-relative left insertion point: ``count(keys[lo:hi] < q)``.
+
+    ``keys`` need only be sorted within each query's ``[lo, hi)`` window
+    (the shard-major primary index).  O(Q*N) reference; the kernel streams
+    the same compare-and-count.
+    """
+    pos = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    lt = ((keys[None, :] < queries[:, None])
+          & (pos[None, :] >= lo[:, None]) & (pos[None, :] < hi[:, None]))
+    return jnp.sum(lt.astype(jnp.int32), axis=1)

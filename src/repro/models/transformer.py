@@ -27,6 +27,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist.overlap import tp_matmul_ag
 from repro.dist.sharding import constrain
 from repro.models.attention import mha
 from repro.kernels.rmsnorm.ops import rmsnorm
@@ -52,6 +53,9 @@ class LMConfig:
     qkv_bias: bool = False
     rope_theta: float = 1e4
     moe_groups: int = 0            # >0: group-local MoE dispatch (§Perf)
+    use_collective_matmul: bool = False   # opt-in: overlap TP all-gathers
+                                   # with the consuming matmuls (qkv, w1/w3)
+                                   # via dist.overlap.tp_matmul_ag
     dtype: Any = jnp.bfloat16
     remat: bool = True
     aux_loss_weight: float = 0.01
@@ -187,9 +191,10 @@ def _attn(p, cfg: LMConfig, x, positions, kv_cache=None, cache_pos=None):
     """x: (B, S, D).  If kv_cache given: decode (append + attend)."""
     B, S, D = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    mm = tp_matmul_ag if cfg.use_collective_matmul else (lambda a, b: a @ b)
+    q = mm(x, p["wq"])
+    k = mm(x, p["wk"])
+    v = mm(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, hq, dh).transpose(0, 2, 1, 3)
@@ -246,8 +251,9 @@ def _decode_attention(q, ck, cv, cache_pos, cfg: LMConfig):
     return out.astype(q.dtype)
 
 
-def _ffn_dense(p, x):
-    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+def _ffn_dense(p, x, cfg: LMConfig):
+    mm = tp_matmul_ag if cfg.use_collective_matmul else (lambda a, b: a @ b)
+    h = jax.nn.silu(mm(x, p["w1"])) * mm(x, p["w3"])
     return h @ p["w2"]
 
 
@@ -259,7 +265,7 @@ def _block(p, cfg: LMConfig, kind: str, x, positions, kv_cache=None,
     x = x + attn_out
     h = rmsnorm(x, p["ln2"])
     if kind == "dense":
-        x = x + _ffn_dense(p, h)
+        x = x + _ffn_dense(p, h, cfg)
         aux = jnp.zeros((), jnp.float32)
     else:
         y, moe_aux = moe_ffn(h.reshape(B * S, D), p["router"], p["we1"],

@@ -88,6 +88,11 @@ def prog_query_parity():
     rl = run_queries(db, [q3], caps)
     rs = run_queries_spmd(db, [q3], mesh, caps)
     assert np.array_equal(rl.counts, rs.counts)
+
+    # pallas backend (interpret on CPU): same program, kernel read path
+    rp = run_queries_spmd(db, queries, mesh, caps, backend="pallas")
+    rl = run_queries(db, queries, caps, backend="ref")
+    assert np.array_equal(rl.counts, rp.counts), (rl.counts, rp.counts)
     print("PARITY_OK")
 
 
@@ -158,6 +163,34 @@ def prog_a1_ship_lookup():
     want = gspmd_lookup(table, ids)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
     print("SHIP_OK")
+
+
+def prog_cm_transformer():
+    """use_collective_matmul=True matches the GSPMD baseline numerically
+    under a sequence-parallel rules table (the plan whose all-gathers the
+    ring overlap replaces)."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.sharding import rules_context
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.transformer import LMConfig, forward, init_params
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    cfg = LMConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_head=16, d_ff=128, vocab=64,
+                   dtype=jnp.float32, remat=False)
+    cfg_cm = dataclasses.replace(cfg, use_collective_matmul=True)
+    params = init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    with mesh:
+        with rules_context({"seq": "model"}):
+            base = jax.jit(lambda p, t: forward(p, cfg, t)[0])(params, tokens)
+            cm = jax.jit(lambda p, t: forward(p, cfg_cm, t)[0])(params,
+                                                                tokens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(cm),
+                               rtol=2e-5, atol=2e-5)
+    print("CMT_OK")
 
 
 def prog_reduced_cells_lower():

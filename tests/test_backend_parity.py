@@ -1,0 +1,188 @@
+"""Backend parity: the Pallas read path must be bit-identical to ref.
+
+The kernels stream the same CSR spans / index blocks the jnp reference path
+gathers, and their output is scattered back into the reference layout
+(core/edges.py, core/index.py) — so every observable of a query must match
+exactly between ``backend='ref'`` and ``backend='pallas'`` (interpret mode
+on CPU), over random graphs, plans, and MVCC timestamps.  This suite is the
+contract that lets the TPU path ship without its own oracle.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import backend as backend_mod
+from repro.core import edges as edges_mod
+from repro.core import index as index_mod
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.query import executor
+from repro.core.query.executor import QueryCaps, run_queries
+
+CAPS = QueryCaps(frontier=128, expand=512, results=16)
+PALLAS = backend_mod.Backend("pallas", interpret=True)
+
+
+def build_db(seed=0, n_dir=3, n_film=10, n_act=12, mutate=True):
+    """Random film KG with both storage tiers and MVCC churn populated."""
+    cfg = StoreConfig(n_shards=4, cap_v=128, cap_e=1024, cap_delta=256,
+                      cap_idx=256, cap_idx_delta=128, d_f32=2, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("director")
+    db.vertex_type("actor")
+    db.vertex_type("film", f_attrs=("gross",), i_attrs=("year", "genre"))
+    db.edge_type("film.director")
+    db.edge_type("film.actor")
+    rng = np.random.default_rng(seed)
+    dirs = [db.create_vertex("director", i) for i in range(n_dir)]
+    films = [db.create_vertex("film", 100 + i,
+                              {"year": 1990 + int(rng.integers(30)),
+                               "genre": int(rng.integers(3))})
+             for i in range(n_film)]
+    acts = [db.create_vertex("actor", 300 + i) for i in range(n_act)]
+    t = db.create_transaction()
+    for f in films:
+        db.create_edge(dirs[int(rng.integers(n_dir))], f, "film.director",
+                       txn=t)
+        for a in rng.choice(n_act, size=int(rng.integers(1, 6)),
+                            replace=False):
+            db.create_edge(f, acts[a], "film.actor", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    if mutate:
+        # push some edges into tier 1, leave fresh ones in the delta log,
+        # and delete/re-create vertices so MVCC intervals matter
+        db.run_compaction()
+        t = db.create_transaction()
+        for f in films[: max(1, n_film // 3)]:
+            try:
+                db.create_edge(f, acts[-1], "film.actor", txn=t)
+            except ValueError:
+                pass
+        db.commit(t)
+        victim = 300 + int(rng.integers(n_act))
+        g, found = db.lookup_vertex("actor", victim)
+        if found:
+            db.delete_vertex(g)
+        if rng.integers(2):
+            db.create_vertex("actor", victim)
+    return db
+
+
+def q_chain(did, genre=None, select="count", direction="out"):
+    tgt = {"type": "film",
+           "_out_edge": {"type": "film.actor",
+                         "_target": {"type": "actor", "select": select}}}
+    if genre is not None:
+        tgt["filter"] = {"attr": "genre", "op": "==", "value": genre}
+    if direction == "out":
+        return {"type": "director", "id": did,
+                "_out_edge": {"type": "film.director", "_target": tgt}}
+    return {"type": "actor", "id": did,
+            "_in_edge": {"type": "film.actor",
+                         "_target": {"type": "film", "select": select}}}
+
+
+def q_star(did, aid):
+    return {"intersect": [
+        {"type": "director", "id": did,
+         "_out_edge": {"type": "film.director", "_target": {"type": "film"}}},
+        {"type": "actor", "id": aid,
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+
+
+def assert_identical(a, b):
+    assert a.failed == b.failed
+    if a.counts is not None or b.counts is not None:
+        assert np.array_equal(a.counts, b.counts)
+    if a.rows_gid is not None or b.rows_gid is not None:
+        assert np.array_equal(a.rows_gid, b.rows_gid)
+        assert np.array_equal(a.truncated, b.truncated)
+        assert sorted(a.rows) == sorted(b.rows)
+        for k in a.rows:
+            assert np.array_equal(a.rows[k], b.rows[k]), k
+
+
+def run_both(db, queries, caps=CAPS):
+    r_ref = run_queries(db, queries, caps, backend="ref")
+    r_pal = run_queries(db, queries, caps, backend="pallas")
+    assert_identical(r_ref, r_pal)
+    return r_ref
+
+
+def test_chain_count_parity():
+    db = build_db(seed=1)
+    res = run_both(db, [q_chain(d) for d in range(3)])
+    assert not res.failed
+
+
+def test_chain_filter_select_parity():
+    db = build_db(seed=2)
+    run_both(db, [q_chain(d, genre=1, select=["key"]) for d in range(3)])
+
+
+def test_reverse_and_star_parity():
+    db = build_db(seed=3)
+    run_both(db, [q_chain(300 + a, direction="in") for a in range(4)])
+    run_both(db, [q_star(0, 301)])
+
+
+def test_overflow_parity():
+    """Fast-fail must trip identically: cap_tiles is sized so the tile plan
+    accepts exactly the expansions the reference path accepts."""
+    db = build_db(seed=4)
+    tiny = QueryCaps(frontier=16, expand=2, results=4)
+    r_ref = run_queries(db, [q_chain(0)], tiny, backend="ref")
+    r_pal = run_queries(db, [q_chain(0)], tiny, backend="pallas")
+    assert r_ref.failed and r_pal.failed
+
+
+def test_compile_cache_no_retrace():
+    """Repeated same-shape run_queries batches reuse the compiled program."""
+    db = build_db(seed=5, mutate=False)
+    queries = [q_chain(d) for d in range(3)]
+    run_queries(db, queries, CAPS, backend="ref")       # warm the cache
+    h0, m0 = executor.CACHE_STATS["hits"], executor.CACHE_STATS["misses"]
+    for _ in range(3):
+        run_queries(db, queries, CAPS, backend="ref")
+    assert executor.CACHE_STATS["hits"] == h0 + 3
+    assert executor.CACHE_STATS["misses"] == m0
+
+
+def test_backend_resolution(monkeypatch):
+    monkeypatch.delenv(backend_mod.ENV_VAR, raising=False)
+    assert backend_mod.resolve("ref") == backend_mod.REF
+    auto = backend_mod.resolve(None)
+    import jax
+    if jax.default_backend() == "tpu":
+        assert auto == backend_mod.Backend("pallas", interpret=False)
+    else:
+        assert auto == backend_mod.REF
+    monkeypatch.setenv(backend_mod.ENV_VAR, "pallas")
+    assert backend_mod.resolve(None).is_pallas
+    with pytest.raises(ValueError):
+        backend_mod.resolve("cuda")
+
+
+def test_snapshot_reads_parity_deterministic():
+    """Primitive-level parity at historical snapshots (see the hypothesis
+    sweep in test_backend_parity_prop.py for the randomized version)."""
+    db = build_db(seed=6)
+    cfg = db.cfg
+    rng = np.random.default_rng(6)
+    gids = jnp.asarray(rng.integers(0, cfg.total_v, 32).astype(np.int32))
+    qids = jnp.arange(32, dtype=jnp.int32)
+    vmask = jnp.asarray(rng.integers(0, 2, 32).astype(bool))
+    for ts in (1, db.clock // 2, db.clock):
+        read_ts = jnp.int32(ts)
+        for direction in ("out", "in"):
+            a = edges_mod.expand(db.store, cfg, qids, gids, vmask,
+                                 etype=jnp.int32(-1), direction=direction,
+                                 read_ts=read_ts, cap_out=512)
+            b = edges_mod.expand(db.store, cfg, qids, gids, vmask,
+                                 etype=jnp.int32(-1), direction=direction,
+                                 read_ts=read_ts, cap_out=512,
+                                 backend=PALLAS)
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y))

@@ -64,6 +64,30 @@ def test_sorted_lookup_property(keys, queries):
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("S,cap,q,bk", [(4, 64, 33, 2048), (7, 100, 16, 128)])
+def test_sorted_lookup_ranged_sweep(S, cap, q, bk):
+    """Windowed probe over a block-major array of independently sorted runs
+    (the shard-major primary index)."""
+    from repro.kernels.sorted_lookup.kernel import searchsorted_left_ranged
+    from repro.kernels.sorted_lookup.ref import (
+        searchsorted_left_ranged as ref)
+    rng = np.random.default_rng(0)
+    keys = np.concatenate([np.sort(rng.integers(0, 500, cap).astype(np.int32))
+                           for _ in range(S)])
+    qs = rng.integers(-10, 510, q).astype(np.int32)
+    shard = rng.integers(0, S, q).astype(np.int32)
+    lo, hi = shard * cap, (shard + 1) * cap
+    got = np.asarray(searchsorted_left_ranged(
+        jnp.asarray(keys), jnp.asarray(qs), jnp.asarray(lo), jnp.asarray(hi),
+        block_k=bk, interpret=True))
+    want_ref = np.asarray(ref(jnp.asarray(keys), jnp.asarray(qs),
+                              jnp.asarray(lo), jnp.asarray(hi)))
+    want = np.array([np.searchsorted(keys[l:h], x, side="left")
+                     for x, l, h in zip(qs, lo, hi)])
+    assert np.array_equal(got, want)
+    assert np.array_equal(want_ref, want)
+
+
 # ---------------------------------------------------------------------------
 # embedding_bag
 # ---------------------------------------------------------------------------

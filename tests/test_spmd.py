@@ -36,6 +36,10 @@ def test_pipeline_parallelism():
     assert "PIPE_OK" in run_prog("pipeline")
 
 
+def test_collective_matmul_transformer():
+    assert "CMT_OK" in run_prog("cm_transformer")
+
+
 def test_a1_ship_lookup():
     assert "SHIP_OK" in run_prog("a1_ship_lookup")
 
