@@ -1,0 +1,86 @@
+"""Multi-query wave amortization (the serving workload, §3.4/§5).
+
+A1's throughput headline comes from amortizing operator waves across many
+concurrent queries.  This suite runs a *heterogeneous* query mix (different
+hop counts, directions, filters — so the per-plan fast path can't apply)
+through ``run_queries_batched`` at batch sizes 1/8/64 and reports per-query
+latency.  The amortization claim is that batch-64 per-query latency lands
+well under batch-1; ``tests/test_planner.py::test_amortization_gate``
+enforces the <= 0.5x gate on the ref backend, while the ``derived`` field
+records the measured speedup so the BENCH_*.json trajectory keeps it
+observable across commits.
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.query.executor import QueryCaps
+from repro.core.query.planner import run_queries_batched
+from repro.data.kg import build_film_kg
+
+CAPS = QueryCaps(frontier=128, expand=512, results=16)
+
+BATCHES = (1, 8, 64)
+
+
+def q_2hop(did):
+    return {"type": "director", "id": int(did),
+            "_out_edge": {"type": "film.director",
+                          "_target": {"type": "film",
+                                      "_out_edge": {"type": "film.actor",
+                                                    "_target": {
+                                                        "type": "actor",
+                                                        "select": "count"}}}}}
+
+
+def q_rev(aid):
+    return {"type": "actor", "id": int(aid),
+            "_in_edge": {"type": "film.actor",
+                         "_target": {"type": "film", "select": "count"}}}
+
+
+def q_filtered(did, genre):
+    return {"type": "director", "id": int(did),
+            "_out_edge": {"type": "film.director",
+                          "_target": {"type": "film",
+                                      "filter": {"attr": "genre", "op": "==",
+                                                 "value": int(genre)},
+                                      "_out_edge": {"type": "film.actor",
+                                                    "_target": {
+                                                        "type": "actor",
+                                                        "select": "count"}}}}}
+
+
+def make_batch(kg, rng, b: int) -> list[dict]:
+    """Heterogeneous mix: cycle three plan shapes with random keys."""
+    out = []
+    for i in range(b):
+        kind = i % 3
+        if kind == 0:
+            out.append(q_2hop(rng.choice(kg.director_keys)))
+        elif kind == 1:
+            out.append(q_rev(rng.choice(kg.actor_keys[:100])))
+        else:
+            out.append(q_filtered(rng.choice(kg.director_keys),
+                                  rng.integers(kg.n_genres)))
+    return out
+
+
+def run(kg=None):
+    kg = kg or build_film_kg(n_films=150, n_actors=200, n_directors=30)
+    db = kg.db
+    rng = np.random.default_rng(0)
+    per_q = {}
+    for b in BATCHES:
+        queries = make_batch(kg, rng, b)
+        avg, p99, _ = timeit(lambda: run_queries_batched(db, queries, CAPS),
+                             warmup=2, iters=10)
+        per_q[b] = avg / b * 1e6
+        speedup = per_q[BATCHES[0]] / per_q[b]
+        emit(f"multiquery_b{b}", per_q[b],
+             f"batch={b};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f};"
+             f"perq_speedup_vs_b1={speedup:.2f}x")
+    return db
+
+
+if __name__ == "__main__":
+    run()

@@ -36,15 +36,15 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        only = {"queries", "reads"}
+        only = {"queries", "reads", "multiquery"}
     if args.backend:
         # before any repro import: every suite resolves the env default
         os.environ["REPRO_BACKEND"] = args.backend
 
     import jax
 
-    from benchmarks import (bench_queries, bench_reads, bench_scaling,
-                            bench_throughput)
+    from benchmarks import (bench_multiquery, bench_queries, bench_reads,
+                            bench_scaling, bench_throughput)
     from benchmarks import common
     from repro.core import backend as backend_mod
     from repro.data.kg import build_film_kg
@@ -60,12 +60,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     kg = None
-    if only is None or {"queries", "throughput", "reads"} & only:
+    if only is None or {"queries", "throughput", "reads", "multiquery"} & only:
         kg = (build_film_kg(n_films=40, n_actors=60, n_directors=8)
               if args.smoke else
               build_film_kg(n_films=150, n_actors=200, n_directors=30))
     if only is None or "queries" in only:
         bench_queries.run(kg)
+    if only is None or "multiquery" in only:
+        bench_multiquery.run(kg)
     if only is None or "throughput" in only:
         bench_throughput.run(kg)
     if only is None or "reads" in only:

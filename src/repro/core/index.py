@@ -65,6 +65,10 @@ def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
     the delta.  Later (newer create_ts) entries win, so an uncompacted
     re-insert after delete resolves correctly.
 
+    ``read_ts`` is a scalar snapshot, or a ``(Q,)`` vector of per-query
+    snapshots (the multi-query planner fuses queries pinned at different
+    MVCC timestamps into one probe wave).
+
     The pallas backend probes every shard block in one streamed pass of the
     sorted_lookup kernel (window-ranged compare-and-count); the ref backend
     binary-searches each query's block.  Both produce the same positions, so
@@ -102,12 +106,14 @@ def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
     # delta scan (small): (Q, XD) match matrix, newest visible entry wins
     XD = store.xd_vtype.shape[0]
     xd_shard = jnp.arange(XD, dtype=jnp.int32) // cap_xd
+    rts_row = read_ts[:, None] if jnp.ndim(read_ts) == 1 else read_ts
     m = (valid[:, None]
          & (store.xd_vtype[None, :] == vtypes[:, None])
          & (store.xd_key[None, :] == keys[:, None])
          & (xd_shard[None, :] == shard[:, None])
          & (store.xd_gid >= 0)[None, :]
-         & visible(store.xd_create, store.xd_delete, read_ts)[None, :])
+         & visible(store.xd_create[None, :], store.xd_delete[None, :],
+                   rts_row))
     ts_d = jnp.where(m, store.xd_create[None, :], -1)
     best_d = jnp.argmax(ts_d, axis=1)
     ts_delta = jnp.max(ts_d, axis=1)

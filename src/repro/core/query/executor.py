@@ -50,6 +50,10 @@ class QueryResult:
     rows: Optional[dict] = None              # attr name -> (Q, K)
     truncated: Optional[np.ndarray] = None   # (Q,) rows overflowed K
     failed: bool = False                     # fast-fail (capacity overflow)
+    failed_q: Optional[np.ndarray] = None    # (Q,) per-query fast-fail flags
+                                             # (set by the multi-query planner;
+                                             # plain run_queries flags the
+                                             # whole batch)
 
 
 # ---------------------------------------------------------------------------
@@ -57,12 +61,15 @@ class QueryResult:
 # ---------------------------------------------------------------------------
 
 def eval_pred(pred: Pred, f_data, i_data, keys):
-    """Vertex predicate evaluation (one of the paper's basic operators)."""
+    """Vertex predicate evaluation (one of the paper's basic operators).
+
+    ``f_data``/``i_data`` may carry any leading batch shape (the planner's
+    fused waves evaluate predicates on ``(Q, F, d)`` row blocks)."""
     if pred.kind == "f32":
-        x = f_data[:, pred.col]
+        x = f_data[..., pred.col]
         v = jnp.float32(pred.val)
     elif pred.kind == "i32":
-        x = i_data[:, pred.col]
+        x = i_data[..., pred.col]
         v = jnp.int32(int(pred.val))
     else:
         x = keys
@@ -295,11 +302,14 @@ def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
 
 
 def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None,
-                backend: Optional[str] = None) -> QueryResult:
+                backend: Optional[str] = None,
+                read_ts: Optional[int] = None) -> QueryResult:
     """Host entry point: parse, group by plan shape, execute, assemble.
 
     All queries in one call execute at one snapshot timestamp (the paper's
-    consistent global snapshot across the distributed graph).
+    consistent global snapshot across the distributed graph); ``read_ts``
+    overrides the snapshot (must be a timestamp whose versions are still
+    pinned or current — the planner's parity suites replay history with it).
 
     ``backend`` overrides the db's read-path backend ('ref'|'pallas'|'auto';
     see core/backend.py for resolution).
@@ -307,16 +317,19 @@ def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None,
     from repro.core.query.a1ql import parse
     caps = caps or QueryCaps()
     be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    read_ts = db.snapshot_ts()
+    read_ts = db.snapshot_ts() if read_ts is None else int(read_ts)
     db.active_query_ts.append(read_ts)       # pin versions (GC barrier)
     try:
         plans = [parse(db, q) for q in queries]
         plan0 = plans[0][0]
         if any(p.signature() != plan0.signature() or p != plan0
                for p, _ in plans[1:]):
-            # mixed batch: execute one by one (frontends route by pattern)
-            outs = [run_queries(db, [q], caps, backend) for q in queries]
-            return _merge_results(outs)
+            # mixed batch: fuse same-operator steps across plan shapes into
+            # shared waves (core/query/planner.py), one program per batch
+            # shape instead of one dispatch per query
+            from repro.core.query.planner import run_queries_batched
+            return run_queries_batched(db, queries, caps, backend=backend,
+                                       read_ts=read_ts, parsed=plans)
         Q = len(queries)
         fn = compile_query(db.cfg, plan0, caps, Q, be)
         if plan0.is_intersect:
@@ -344,13 +357,3 @@ def _to_result(plan: Plan, out: dict) -> QueryResult:
     return res
 
 
-def _merge_results(outs: list[QueryResult]) -> QueryResult:
-    res = QueryResult(failed=any(o.failed for o in outs))
-    if all(o.counts is not None for o in outs):
-        res.counts = np.concatenate([o.counts for o in outs])
-    else:
-        res.rows_gid = np.concatenate(
-            [o.rows_gid for o in outs if o.rows_gid is not None], axis=0)
-        res.truncated = np.concatenate(
-            [o.truncated for o in outs if o.truncated is not None])
-    return res

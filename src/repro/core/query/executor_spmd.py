@@ -55,7 +55,8 @@ def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
     routes to me produce a gid; everyone else emits NULL (they find it on
     their own shard).  Inside shard_map the local index block is one sorted
     array, so the pallas backend probes the whole batch with a single
-    sorted_lookup kernel call."""
+    sorted_lookup kernel call.  ``read_ts`` may be scalar or a per-query
+    ``(Q,)`` vector (fused multi-query waves)."""
     S, cap_x, cap_xd = cfg.n_shards, cfg.cap_idx, cfg.cap_idx_delta
     mine = valid & (index_mod.route(vtypes, keys, S) == me)
     h = index_mod.mix32(vtypes, keys)
@@ -76,11 +77,12 @@ def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
     g_main = jnp.where(mine, best_g, NULL)
     ts_main = best_ts
     # delta scan
+    rts_row = read_ts[:, None] if jnp.ndim(read_ts) == 1 else read_ts
     m = (mine[:, None]
          & (st.xd_vtype[None, :] == vtypes[:, None])
          & (st.xd_key[None, :] == keys[:, None])
          & (st.xd_gid >= 0)[None, :]
-         & visible(st.xd_create, st.xd_delete, read_ts)[None, :])
+         & visible(st.xd_create[None, :], st.xd_delete[None, :], rts_row))
     ts_d = jnp.where(m, st.xd_create[None, :], -1)
     best_d = jnp.argmax(ts_d, axis=1)
     ts_delta = jnp.max(ts_d, axis=1)
@@ -401,19 +403,29 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
 def run_queries_spmd(db, queries: list[dict], mesh,
                      caps: Optional[QueryCaps] = None,
                      storage_axes=("data", "model"),
-                     backend: Optional[str] = None) -> QueryResult:
-    """Host entry point mirroring executor.run_queries on a mesh."""
+                     backend: Optional[str] = None,
+                     read_ts: Optional[int] = None,
+                     parsed: Optional[list] = None) -> QueryResult:
+    """Host entry point mirroring executor.run_queries on a mesh.
+
+    ``read_ts`` overrides the snapshot (still-pinned historical reads);
+    ``parsed`` is an optional pre-parsed ``[(plan, key), ...]`` list."""
     from repro.core.query.a1ql import parse
     from repro.core.query.executor import _to_result
     caps = caps or QueryCaps()
     be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    read_ts = db.snapshot_ts()
+    read_ts = db.snapshot_ts() if read_ts is None else int(read_ts)
     db.active_query_ts.append(read_ts)
     try:
-        plans = [parse(db, q) for q in queries]
+        plans = parsed if parsed is not None else [parse(db, q)
+                                                   for q in queries]
         plan0 = plans[0][0]
-        assert all(p == plan0 for p, _ in plans[1:]), \
-            "spmd batch must share one plan shape"
+        if any(p != plan0 for p, _ in plans[1:]):
+            # mixed batch: fused multi-query waves (mirrors run_queries)
+            from repro.core.query.planner import run_queries_batched_spmd
+            return run_queries_batched_spmd(db, queries, mesh, caps,
+                                            storage_axes, backend,
+                                            read_ts=read_ts, parsed=plans)
         Q = len(queries)
         fn = compile_query_spmd(db.cfg, plan0, caps, Q, mesh, storage_axes,
                                 backend=be)

@@ -1,0 +1,802 @@
+"""Multi-query planner: fused operator waves across plan shapes (§3.4, §5).
+
+A1 reaches 350M+ reads/sec by batching many *concurrent* queries into shared
+operator waves over RDMA: every in-flight query contributes its probes and
+frontier expansions to one batched network round per operator, so per-query
+overhead amortizes across the fleet of users.  The executors in this package
+run one *plan shape* at a time; this module adds the serving-shaped layer on
+top: take a batch of arbitrary A1QL plans, group same-operator steps across
+queries, and execute each group as one fused wave program through the
+``core/backend.py`` seam.
+
+Wave fusion
+-----------
+All chain plans that share a terminal signature fuse into **one** jitted
+program, regardless of hop count, edge types, directions, predicates, or
+per-query MVCC snapshots:
+
+  * **lookup wave** — every query's ``(start_vtype, key)`` probe concatenated
+    into a single ``index.lookup`` call (one ``sorted_lookup`` kernel pass on
+    the pallas backend);
+  * **hop wave k** — every query whose plan has a k-th hop expands its
+    frontier in one ``edge_expand`` tile plan per direction; frontier items
+    carry their query id (the per-query *segment id*), and edge types /
+    snapshot timestamps are per-segment vectors instead of scalars.  Queries
+    whose plans are already exhausted are *parked*: their frontier regions
+    ride along untouched until the terminal wave.
+
+The fused frontier is a ``(Q, frontier)`` matrix — row q is query q's private
+region, holding its sorted-unique frontier gids.  Capacities therefore apply
+**per query** (exactly the budgets a per-query ``run_queries`` call would
+get), so results — including §3.4 fast-fail flags — are bit-identical to
+running each query alone, while MVCC timestamps stay independent per query.
+Star-pattern (intersect) plans are not fused yet; the planner runs each as
+its own single-query program.
+
+Program caches are keyed on the *batch shape* — the tuple of plans (+caps,
+batch size, backend) — and hits/misses are observable via ``CACHE_STATS``,
+so serving loops can assert that a steady query mix never retraces.
+
+The same wave structure runs distributed: ``run_queries_batched_spmd``
+builds one shard_map'd program per batch shape, with per-(query, owner)
+routing buckets, pending vertex checks deferred to the owner shard, and one
+final routing step for parked and active frontiers alike.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_mod
+from repro.core import edges as edges_mod
+from repro.core import index as index_mod
+from repro.core.addressing import NULL, StoreConfig
+from repro.core.edges import TILE
+from repro.core.query.a1ql import Plan, Pred
+from repro.core.query.executor import (I32MAX, QueryCaps, QueryResult,
+                                       eval_pred)
+from repro.core.store import GraphStore, visible
+
+PAD = I32MAX    # empty frontier slot; sorts last, keeps rows ascending
+
+
+# ---------------------------------------------------------------------------
+# static wave tables (host-side, derived from the plan tuple)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Wave:
+    """Per-wave static tables: one entry per query in the batch."""
+    act: np.ndarray        # (Q,) bool  — query has a hop at this wave
+    is_out: np.ndarray     # (Q,) bool  — hop direction (False = 'in')
+    etype: np.ndarray      # (Q,) i32   — edge type to follow (-1 = any)
+    tvt: np.ndarray        # (Q,) i32   — target vtype check (-1 = none)
+    preds: list            # [(Pred, (Q,) bool qmask)] — hop predicates
+    any_out: bool
+    any_in: bool
+
+
+def _pred_groups(entries) -> list:
+    """Group (query_index, Pred) pairs by identical predicate."""
+    groups: dict = {}
+    for qi, pred, n in entries:
+        groups.setdefault(pred, np.zeros(n, bool))[qi] = True
+    return list(groups.items())
+
+
+def _wave_tables(plans: Sequence[Plan]) -> list[_Wave]:
+    Q = len(plans)
+    W = max(len(p.hops) for p in plans)
+    waves = []
+    for w in range(W):
+        act = np.array([len(p.hops) > w for p in plans])
+        is_out = np.array([len(p.hops) > w and p.hops[w].direction == "out"
+                           for p in plans])
+        etype = np.array([p.hops[w].etype if len(p.hops) > w else -1
+                          for p in plans], np.int32)
+        tvt = np.array([p.hops[w].target_vtype if len(p.hops) > w else -1
+                        for p in plans], np.int32)
+        preds = _pred_groups([(qi, p.hops[w].pred, Q)
+                              for qi, p in enumerate(plans)
+                              if len(p.hops) > w and p.hops[w].pred])
+        waves.append(_Wave(act=act, is_out=is_out, etype=etype, tvt=tvt,
+                           preds=preds, any_out=bool((act & is_out).any()),
+                           any_in=bool((act & ~is_out).any())))
+    return waves
+
+
+def _final_pred_groups(plans: Sequence[Plan]) -> list:
+    return _pred_groups([(qi, p.final_pred, len(plans))
+                         for qi, p in enumerate(plans) if p.final_pred])
+
+
+# ---------------------------------------------------------------------------
+# fused wave primitives (shared by the local and SPMD programs)
+# ---------------------------------------------------------------------------
+
+def _dedup_rows(cand_g, cand_v, F: int):
+    """Per-query dedup/compact: (Q, W) candidates -> (Q, F) regions.
+
+    Row q ends up with its first F unique gids in ascending order (PAD
+    beyond), exactly what ``dedup_compact`` produces for query q alone.
+    Returns (gids, valid, overflow_q)."""
+    Q = cand_g.shape[0]
+    key = jnp.where(cand_v, cand_g, PAD)
+    key_s = jax.lax.sort(key, dimension=1)
+    valid_s = key_s != PAD
+    prev = jnp.concatenate(
+        [jnp.full((Q, 1), -1, key_s.dtype), key_s[:, :-1]], axis=1)
+    first = valid_s & (key_s != prev)
+    f32i = first.astype(jnp.int32)
+    n_q = jnp.sum(f32i, axis=1)
+    rank = jnp.cumsum(f32i, axis=1) - 1
+    col = jnp.where(first & (rank < F), rank, F)     # F = out of range, drop
+    rows = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None],
+                            col.shape)
+    g = jnp.full((Q, F), PAD, jnp.int32).at[rows, col].set(key_s, mode="drop")
+    return g, g != PAD, n_q > F
+
+
+def _expand_rows(start, deg, pools, et_q, ts_q, E: int,
+                 backend: backend_mod.Backend):
+    """Fused CSR expansion: (Q, F) spans -> (Q, E) neighbor matrix.
+
+    Row q receives the first E raw span entries of query q's frontier —
+    masked by per-query MVCC visibility (``ts_q``) and edge type (``et_q``)
+    — at exactly the positions the per-query reference path computes, so
+    both backends emit bit-identical buffers (a per-query budget clamp on
+    the tile plan makes even the overflow truncation match).
+    """
+    nbr, typ, ecre, edel = pools
+    Q, F = deg.shape
+    cum = jnp.cumsum(deg, axis=1)
+    excl = cum - deg
+    if backend.is_pallas:
+        # one tile plan for the whole wave; each query's span budget is
+        # clamped to its remaining E so no query can starve another's tiles
+        deg_eff = jnp.clip(E - excl, 0, deg)
+        cap_tiles = Q * (min(F, E) + 1 + (E + TILE - 1) // TILE)
+        (nbr_t, typ_t, cre_t, del_t), item, tw, _ = backend_mod.expand_tiles(
+            start.reshape(-1), deg_eff.reshape(-1), pools,
+            tile=TILE, cap_tiles=cap_tiles, backend=backend)
+        item_c = jnp.minimum(item, Q * F - 1)
+        row = item_c // F
+        lane = jnp.arange(TILE, dtype=jnp.int32)
+        shape = (cap_tiles, TILE)
+        nbr_t, typ_t = nbr_t.reshape(shape), typ_t.reshape(shape)
+        cre_t, del_t = cre_t.reshape(shape), del_t.reshape(shape)
+        et_t = et_q[row][:, None]
+        # invalid lanes carry -1 in every pool: visible(-1,-1,ts) is False
+        e_ok = (visible(cre_t, del_t, ts_q[row][:, None])
+                & ((et_t < 0) | (typ_t == et_t))
+                & (nbr_t >= 0))
+        posq = (excl.reshape(-1)[item_c][:, None] + tw[:, None] * TILE
+                + lane[None, :])
+        pos = jnp.where(e_ok, row[:, None] * E + posq, Q * E)
+        out = jnp.full((Q * E,), NULL, jnp.int32).at[pos.reshape(-1)].set(
+            nbr_t.reshape(-1), mode="drop")
+        return out.reshape(Q, E)
+
+    k = jnp.arange(E, dtype=jnp.int32)
+
+    def one(cum_r, deg_r, start_r, ts, et):
+        item = jnp.searchsorted(cum_r, k, side="right").astype(jnp.int32)
+        item_c = jnp.minimum(item, F - 1)
+        base = cum_r[item_c] - deg_r[item_c]
+        in_range = k < cum_r[-1]
+        epos = jnp.where(in_range, start_r[item_c] + (k - base), 0)
+        e_ok = (in_range & visible(ecre[epos], edel[epos], ts)
+                & ((et < 0) | (typ[epos] == et)) & (nbr[epos] >= 0))
+        return jnp.where(e_ok, nbr[epos], NULL)
+
+    return jax.vmap(one)(cum, deg, start, ts_q, et_q)
+
+
+def _delta_rows(key_rows, m, d_key, dnbr, dtyp, dcre, ddel, et_q, ts_q):
+    """Per-query delta-log matches: (Q, F) regions x (D,) log -> (Q, D).
+
+    Frontier regions hold sorted-unique keys, so each delta entry matches at
+    most one slot per query — a row-wise binary search replaces the
+    (F x D) match matrix the single-query path materializes, with identical
+    per-query match sets."""
+    Q, F = key_rows.shape
+    pos = jax.vmap(lambda row, v: jnp.searchsorted(row, v))(
+        key_rows, jnp.broadcast_to(d_key, (Q,) + d_key.shape))
+    pos_c = jnp.minimum(pos, F - 1).astype(jnp.int32)
+    at_k = jnp.take_along_axis(key_rows, pos_c, axis=1)
+    at_m = jnp.take_along_axis(m, pos_c, axis=1)
+    hit = (at_m & (at_k == d_key[None, :])
+           & (dnbr >= 0)[None, :]
+           & visible(dcre[None, :], ddel[None, :], ts_q[:, None])
+           & ((et_q[:, None] < 0) | (dtyp[None, :] == et_q[:, None])))
+    return jnp.where(hit, jnp.broadcast_to(dnbr[None, :], hit.shape), NULL)
+
+
+def _check_rows(st, rows, valid, ts_q, tvt_q, preds):
+    """Fused liveness/type/predicate check on (Q, F) frontier regions.
+
+    ``rows`` indexes the vertex arrays of ``st`` (global store or a
+    shard_map local block); ``tvt_q``/``preds`` are per-query tables —
+    parked queries carry -1 / no predicate, so only re-(idempotent)
+    liveness applies to them."""
+    ts2 = ts_q[:, None]
+    alive = valid & visible(st.v_create[rows], st.v_delete[rows], ts2)
+    tvt2 = tvt_q[:, None]
+    alive = alive & ((tvt2 < 0) | (st.vtype[rows] == tvt2))
+    if preds:
+        use_cur = (st.vdata_ts[rows] <= ts2)[..., None]
+        f = jnp.where(use_cur, st.vdata_f[rows], st.vprev_f[rows])
+        i = jnp.where(use_cur, st.vdata_i[rows], st.vprev_i[rows])
+        keys = st.vkey[rows]
+        for pred, qmask in preds:
+            pm = jnp.asarray(qmask)[:, None]
+            alive = alive & (~pm | eval_pred(pred, f, i, keys))
+    return alive
+
+
+def _select_rows(st, rows, g, valid, ts_q, select, K: int):
+    """Fused select terminal: (Q, F) regions -> (Q, K) rows + attrs."""
+    Q = g.shape[0]
+    vi = valid.astype(jnp.int32)
+    rank = jnp.cumsum(vi, axis=1) - vi
+    over = valid & (rank >= K)
+    col = jnp.where(valid & ~over, rank, K)
+    rowi = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None],
+                            col.shape)
+    rows_gid = jnp.full((Q, K), NULL, jnp.int32).at[rowi, col].set(
+        jnp.where(valid, g, NULL), mode="drop")
+    safe = jnp.where(rows_gid >= 0, rows_gid, 0)
+    r = rows(safe)
+    use_cur = st.vdata_ts[r] <= ts_q[:, None]
+    attrs = {}
+    for kind, colid in select:
+        if kind == "key":
+            vals = jnp.where(rows_gid >= 0, st.vkey[r], NULL)
+        elif kind == "f32":
+            v = jnp.where(use_cur, st.vdata_f[r][..., colid],
+                          st.vprev_f[r][..., colid])
+            vals = v * (rows_gid >= 0)
+        else:
+            v = jnp.where(use_cur, st.vdata_i[r][..., colid],
+                          st.vprev_i[r][..., colid])
+            vals = v * (rows_gid >= 0)
+        attrs[(kind, colid)] = vals
+    return rows_gid, attrs, jnp.any(over, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# the local fused program
+# ---------------------------------------------------------------------------
+
+# compiled per batch *shape* (tuple of plans); hits mean a steady serving
+# query mix never retraces, observable exactly like the executor caches.
+# Unlike the per-plan executor caches (small fixed cardinality), batch
+# shapes are combinatorial, so this one is LRU-bounded.
+_CACHE: collections.OrderedDict = collections.OrderedDict()
+CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+CACHE_MAX_PROGRAMS = 256
+
+
+def _cache_get(key):
+    fn = _CACHE.get(key)
+    if fn is not None:
+        _CACHE.move_to_end(key)
+        CACHE_STATS["hits"] += 1
+    return fn
+
+
+def _cache_put(key, fn):
+    CACHE_STATS["misses"] += 1
+    _CACHE[key] = fn
+    while len(_CACHE) > CACHE_MAX_PROGRAMS:
+        _CACHE.popitem(last=False)
+        CACHE_STATS["evictions"] += 1
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def delta_window(db) -> int:
+    """Static per-shard delta-log window for the next fused program.
+
+    The delta logs fill prefix-first per shard (host count mirrors are
+    exact), so scanning ``[:W]`` of each shard block sees every live entry.
+    Rounded to a power of two and clamped, so the program-cache key only
+    changes when the fill band crosses a boundary (and compaction resets
+    it) — a steady serving mix keeps hitting the same program."""
+    n = int(max(db.dl_count.max(initial=0), db.il_count.max(initial=0), 1))
+    return min(_pow2ceil(n), db.cfg.cap_delta)
+
+
+def _delta_windowed(arrs, S: int, cap_delta: int, W: int):
+    """Slice shard-major (S*cap_delta,) delta arrays to (S*W,)."""
+    return tuple(a.reshape(S, cap_delta)[:, :W].reshape(-1) for a in arrs)
+
+
+def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
+                  backend: backend_mod.Backend = backend_mod.REF,
+                  dwin: Optional[int] = None):
+    """Build the jitted fused-wave program for one batch shape.
+
+    ``plans`` is a tuple of chain plans sharing a terminal signature; keys
+    and per-query snapshot timestamps stay runtime data, so any same-shape
+    batch reuses the compiled program.  ``dwin`` is the static delta-log
+    window (see :func:`delta_window`)."""
+    dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
+    key = (cfg, plans, caps, len(plans), backend, dwin, "local")
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    Q = len(plans)
+    F, E, K = caps.frontier, caps.expand, caps.results
+    S, cap_v, cap_e = cfg.n_shards, cfg.cap_v, cfg.cap_e
+    waves = _wave_tables(plans)
+    final_preds = _final_pred_groups(plans)
+    start_vt = jnp.asarray([p.start_vtype for p in plans], jnp.int32)
+    terminal = plans[0].terminal
+    select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
+
+    @jax.jit
+    def run(store, keys, valid_in, ts_q):
+        failed_q = jnp.zeros((Q,), bool)
+        # ---- lookup wave: one probe for the whole batch -------------------
+        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
+                                        ts_q, backend=backend)
+        g = jnp.full((Q, F), PAD, jnp.int32).at[:, 0].set(
+            jnp.where(found & valid_in, gids0, PAD))
+        valid = g != PAD
+
+        for wave in waves:
+            act = jnp.asarray(wave.act)
+            is_out = jnp.asarray(wave.is_out)
+            et_q = jnp.asarray(wave.etype)
+            # parked queries carry their finished frontier through the wave
+            parts_g, parts_v = [g], [valid & ~act[:, None]]
+            for direction, dmask, present in (
+                    ("out", is_out, wave.any_out),
+                    ("in", ~is_out, wave.any_in)):
+                if not present:
+                    continue
+                m = valid & act[:, None] & dmask[:, None]
+                indptr, nbr, typ, ecre, edel = edges_mod._csr_arrays(
+                    store, direction)
+                safe_g = jnp.where(m, g, 0)
+                shard = safe_g % S
+                iprow = shard * (cap_v + 1) + safe_g // S
+                start = indptr[iprow] + shard * cap_e
+                deg = (indptr[iprow + 1] - indptr[iprow]) * m
+                failed_q = failed_q | (jnp.sum(deg, axis=1) > E)
+                out_n = _expand_rows(start, deg, (nbr, typ, ecre, edel),
+                                     et_q, ts_q, E, backend)
+                dslot, dnbr, dtyp, dcre, ddel = _delta_windowed(
+                    edges_mod._delta_arrays(store, direction),
+                    S, cfg.cap_delta, dwin)
+                D = dslot.shape[0]
+                d_gid = dslot * S + jnp.arange(D, dtype=jnp.int32) // dwin
+                dn = _delta_rows(g, m, d_gid, dnbr, dtyp, dcre, ddel,
+                                 et_q, ts_q)
+                parts_g += [out_n, dn]
+                parts_v += [out_n >= 0, dn >= 0]
+            g, valid, ovf = _dedup_rows(jnp.concatenate(parts_g, axis=1),
+                                        jnp.concatenate(parts_v, axis=1), F)
+            failed_q = failed_q | ovf
+            rows = cfg.row_of_gid(jnp.where(valid, g, 0))
+            valid = valid & _check_rows(store, rows, valid, ts_q,
+                                        jnp.asarray(wave.tvt), wave.preds)
+
+        # ---- terminal wave ------------------------------------------------
+        if final_preds:
+            rows = cfg.row_of_gid(jnp.where(valid, g, 0))
+            valid = valid & _check_rows(store, rows, valid, ts_q,
+                                        jnp.full((Q,), -1, jnp.int32),
+                                        final_preds)
+        out = {"failed_q": failed_q}
+        if terminal == "count":
+            out["counts"] = jnp.sum(valid.astype(jnp.int32), axis=1)
+        else:
+            rows_gid, attrs, trunc = _select_rows(
+                store, cfg.row_of_gid, g, valid, ts_q, select, K)
+            out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
+        return out
+
+    _cache_put(key, run)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# host entry points
+# ---------------------------------------------------------------------------
+
+def _normalize_ts(db, Q: int, read_ts) -> list[int]:
+    if read_ts is None:
+        return [db.snapshot_ts()] * Q
+    if isinstance(read_ts, (int, np.integer)):
+        return [int(read_ts)] * Q
+    ts = [int(t) for t in read_ts]
+    if len(ts) != Q:
+        raise ValueError(f"read_ts has {len(ts)} entries for {Q} queries")
+    return ts
+
+
+class _Assembly:
+    """Scatter per-group results back into input order."""
+
+    def __init__(self, Q: int, K: int):
+        self.Q, self.K = Q, K
+        self.failed_q = np.zeros(Q, bool)
+        self.counts = None
+        self.rows_gid = None
+        self.truncated = None
+        self.rows: dict = {}
+
+    def _ensure_select(self):
+        if self.rows_gid is None:
+            self.rows_gid = np.full((self.Q, self.K), NULL, np.int32)
+            self.truncated = np.zeros(self.Q, bool)
+
+    def put(self, idxs, out: dict) -> None:
+        self.failed_q[idxs] = np.asarray(out["failed_q"])
+        if "counts" in out:
+            if self.counts is None:
+                self.counts = np.full(self.Q, NULL, np.int32)
+            self.counts[idxs] = np.asarray(out["counts"])
+        else:
+            self._ensure_select()
+            self.rows_gid[idxs] = np.asarray(out["rows_gid"])
+            self.truncated[idxs] = np.asarray(out["truncated"])
+            for k, v in out["attrs"].items():
+                if k not in self.rows:
+                    v0 = np.asarray(v)
+                    fill = NULL if k[0] == "key" else 0
+                    self.rows[k] = np.full((self.Q, self.K), fill, v0.dtype)
+                self.rows[k][idxs] = np.asarray(v)
+
+    def result(self) -> QueryResult:
+        return QueryResult(
+            counts=self.counts, rows_gid=self.rows_gid,
+            rows=self.rows or None, truncated=self.truncated,
+            failed=bool(self.failed_q.any()), failed_q=self.failed_q)
+
+
+def _plan_groups(parsed) -> tuple[list[list[int]], list[int]]:
+    """Fusion groups: chains grouped by terminal signature; stars alone.
+
+    Each group's indices are canonically ordered by plan, so any
+    permutation of the same batch mix resolves to the same plans tuple —
+    one compiled program, not one per arrival order."""
+    chain_groups: dict = {}
+    stars = []
+    for i, (p, _) in enumerate(parsed):
+        if p.is_intersect:
+            stars.append(i)
+        else:
+            key = (p.terminal, p.select_kind, p.select_cols)
+            chain_groups.setdefault(key, []).append(i)
+    groups = [sorted(idxs, key=lambda i: repr(parsed[i][0]))
+              for idxs in chain_groups.values()]
+    return groups, stars
+
+
+def run_queries_batched(db, queries: list[dict],
+                        caps: Optional[QueryCaps] = None,
+                        backend: Optional[str] = None,
+                        read_ts: Union[None, int, Sequence[int]] = None,
+                        parsed: Optional[list] = None) -> QueryResult:
+    """Execute a batch of A1QL queries as fused multi-query waves.
+
+    Unlike :func:`executor.run_queries` (one plan shape, shared working-set
+    budget), every query here gets its *own* §3.4 capacity budget and MVCC
+    snapshot, and arbitrary chain shapes fuse into one program per terminal
+    signature.  Results (and per-query ``failed_q`` flags) are bit-identical
+    to running each query through ``run_queries`` alone.
+
+    ``read_ts``: None (one fresh snapshot), a scalar, or per-query
+    timestamps — mixed-snapshot batches execute in one wave program.
+    ``parsed``: optional pre-parsed ``[(plan, key), ...]`` (callers that
+    already parsed to route here need not pay the parse twice).
+    """
+    from repro.core.query.a1ql import parse
+    from repro.core.query import executor as _ex
+    caps = caps or QueryCaps()
+    be = backend_mod.resolve(backend or getattr(db, "backend", None))
+    Q = len(queries)
+    parsed = parsed if parsed is not None else [parse(db, q)
+                                               for q in queries]
+    ts_list = _normalize_ts(db, Q, read_ts)
+    pins = sorted(set(ts_list))
+    for t in pins:                          # pin versions (GC barrier)
+        db.active_query_ts.append(t)
+    try:
+        groups, stars = _plan_groups(parsed)
+        out = _Assembly(Q, caps.results)
+        dwin = delta_window(db)
+        for idxs in groups:
+            plans_g = tuple(parsed[i][0] for i in idxs)
+            keys = jnp.asarray([parsed[i][1] for i in idxs], jnp.int32)
+            ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
+            fn = compile_batch(db.cfg, plans_g, caps, be, dwin)
+            out.put(idxs, fn(db.store, keys, jnp.ones((len(idxs),), bool),
+                             ts))
+        for i in stars:                     # star patterns: not fused yet
+            plan, keys_b = parsed[i]
+            fn = _ex.compile_query(db.cfg, plan, caps, 1, be)
+            kb = jnp.asarray(np.array([[k] for k in keys_b], np.int32))
+            r = fn(db.store, kb, jnp.ones((1,), bool),
+                   jnp.int32(ts_list[i]))
+            r = dict(r, failed_q=jnp.asarray([r["failed"]]))
+            out.put([i], r)
+        return out.result()
+    finally:
+        for t in pins:
+            db.active_query_ts.remove(t)
+
+
+# ---------------------------------------------------------------------------
+# the SPMD fused program (query shipping, one program per batch shape)
+# ---------------------------------------------------------------------------
+
+def _route_rows(g, m, S: int, B: int, axes):
+    """Fused routing: (Q, F) pairs -> all_to_all -> (Q, S*B) arrivals.
+
+    Buckets are per (query, owner) — B slots each, the per-query analogue of
+    ``caps.bucket`` — so one hot query cannot evict another's RPCs.  Returns
+    (arrived_gids, arrived_mask, overflow_q)."""
+    Q, F = g.shape
+    ow = jnp.where(m, g % S, S)
+    ow_s, g_s = jax.lax.sort((ow, g), dimension=1, num_keys=1)
+    starts = jax.vmap(
+        lambda o: jnp.searchsorted(o, jnp.arange(S, dtype=o.dtype))
+    )(ow_s).astype(jnp.int32)
+    col = (jnp.arange(F, dtype=jnp.int32)[None, :]
+           - jnp.take_along_axis(starts, jnp.minimum(ow_s, S - 1), axis=1))
+    ok = ow_s < S
+    overflow_q = jnp.any(ok & (col >= B), axis=1)
+    keep = ok & (col >= 0) & (col < B)
+    dest = jnp.where(keep, ow_s, S)                     # S = out of range
+    qcol = jnp.arange(Q, dtype=jnp.int32)[:, None] * B \
+        + jnp.clip(col, 0, B - 1)
+    bg = jnp.full((S, Q * B), NULL, jnp.int32).at[dest, qcol].set(
+        g_s, mode="drop")
+    rg = jax.lax.all_to_all(bg, axes, split_axis=0, concat_axis=0,
+                            tiled=True)
+    arr = rg.reshape(S, Q, B).transpose(1, 0, 2).reshape(Q, S * B)
+    return arr, arr >= 0, overflow_q
+
+
+def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
+                       mesh, storage_axes=("data", "model"),
+                       backend: backend_mod.Backend = backend_mod.REF,
+                       dwin: Optional[int] = None):
+    """Fused-wave program on a mesh: the §3.4 coordinator/worker protocol
+    for a whole heterogeneous batch in one SPMD program."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.query.executor_spmd import _lookup_local
+    from repro.dist import compat
+
+    dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
+    key = (cfg, plans, caps, len(plans), id(mesh), storage_axes, backend,
+           dwin, "spmd")
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    Q = len(plans)
+    F, E, B, K = caps.frontier, caps.expand, caps.bucket, caps.results
+    S = cfg.n_shards
+    axes = storage_axes
+    waves = _wave_tables(plans)
+    final_preds = _final_pred_groups(plans)
+    start_vt_np = np.array([p.start_vtype for p in plans], np.int32)
+    terminal = plans[0].terminal
+    select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
+    # pending owner-side checks: wave w validates what wave w-1 emitted
+    # (w=0 validates the index scan's start vertices); queries parked at
+    # wave w keep -1/no-pred entries.  The *last* hop's check runs in the
+    # finalize step, after the final routing — per query.
+    pend_tvt, pend_preds = [], []
+    for w in range(len(waves)):
+        if w == 0:
+            pend_tvt.append(start_vt_np)
+            pend_preds.append([])
+        else:
+            pend_tvt.append(np.array(
+                [p.hops[w - 1].target_vtype if len(p.hops) > w else -1
+                 for p in plans], np.int32))
+            pend_preds.append(_pred_groups(
+                [(qi, p.hops[w - 1].pred, Q) for qi, p in enumerate(plans)
+                 if len(p.hops) > w and p.hops[w - 1].pred]))
+    fin_tvt = np.array([p.hops[-1].target_vtype for p in plans], np.int32)
+    fin_preds = _pred_groups([(qi, p.hops[-1].pred, Q)
+                              for qi, p in enumerate(plans)
+                              if p.hops[-1].pred])
+
+    def _local_rows(st, g, valid):
+        return jnp.where(valid, g // S, 0)
+
+    def body(st, keys, valid_in, ts_q):
+        me = jax.lax.axis_index(axes).astype(jnp.int32)
+        failed_q = jnp.zeros((Q,), bool)
+        g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
+                           valid_in, ts_q, backend)
+        g = jnp.full((Q, F), PAD, jnp.int32).at[:, 0].set(
+            jnp.where(g0 >= 0, g0, PAD))
+        valid = g != PAD
+
+        for w, wave in enumerate(waves):
+            act = jnp.asarray(wave.act)
+            is_out = jnp.asarray(wave.is_out)
+            et_q = jnp.asarray(wave.etype)
+            # 1) batched RPCs: ship active pairs to their owners
+            arr, am, ovf = _route_rows(g, valid & act[:, None], S, B, axes)
+            failed_q = failed_q | ovf
+            ag, am, ovf2 = _dedup_rows(arr, am, F)
+            failed_q = failed_q | ovf2
+            # 2) owner-side pending checks (previous hop's vertex checks)
+            alive = am & _check_rows(st, _local_rows(st, ag, am), am, ts_q,
+                                     jnp.asarray(pend_tvt[w]),
+                                     pend_preds[w])
+            # 3) worker step: enumerate edges from my CSR block + delta log
+            parts_g = [g]
+            parts_v = [valid & ~act[:, None]]       # parked pairs stay put
+            for direction, dmask, present in (
+                    ("out", is_out, wave.any_out),
+                    ("in", ~is_out, wave.any_in)):
+                if not present:
+                    continue
+                m = alive & act[:, None] & dmask[:, None]
+                if direction == "out":
+                    indptr, nbr, typ, ecre, edel = (
+                        st.oe_indptr, st.oe_dst, st.oe_type, st.oe_create,
+                        st.oe_delete)
+                    dslot, dnbr, dtyp, dcre, ddel = (
+                        st.dl_slot, st.dl_nbr, st.dl_type, st.dl_create,
+                        st.dl_delete)
+                else:
+                    indptr, nbr, typ, ecre, edel = (
+                        st.ie_indptr, st.ie_src, st.ie_type, st.ie_create,
+                        st.ie_delete)
+                    dslot, dnbr, dtyp, dcre, ddel = (
+                        st.il_slot, st.il_nbr, st.il_type, st.il_create,
+                        st.il_delete)
+                slot = jnp.where(m, ag // S, 0)
+                start = indptr[slot]
+                deg = (indptr[slot + 1] - indptr[slot]) * m
+                failed_q = failed_q | (jnp.sum(deg, axis=1) > E)
+                out_n = _expand_rows(start, deg, (nbr, typ, ecre, edel),
+                                     et_q, ts_q, E, backend)
+                # inside shard_map the delta block is one shard: window [:W]
+                dslot, dnbr, dtyp, dcre, ddel = (
+                    a[:dwin] for a in (dslot, dnbr, dtyp, dcre, ddel))
+                dn = _delta_rows(ag // S, m, dslot, dnbr, dtyp, dcre, ddel,
+                                 et_q, ts_q)
+                parts_g += [out_n, dn]
+                parts_v += [out_n >= 0, dn >= 0]
+            g, valid, ovf3 = _dedup_rows(jnp.concatenate(parts_g, axis=1),
+                                         jnp.concatenate(parts_v, axis=1), F)
+            failed_q = failed_q | ovf3
+
+        # ---- finalize: route everything, owed checks, aggregate -----------
+        arr, am, ovf = _route_rows(g, valid, S, B, axes)
+        failed_q = failed_q | ovf
+        ag, valid, ovf2 = _dedup_rows(arr, am, F)
+        failed_q = failed_q | ovf2
+        rows_l = _local_rows(st, ag, valid)
+        valid = valid & _check_rows(st, rows_l, valid, ts_q,
+                                    jnp.asarray(fin_tvt), fin_preds)
+        if final_preds:
+            valid = valid & _check_rows(st, rows_l, valid, ts_q,
+                                        jnp.full((Q,), -1, jnp.int32),
+                                        final_preds)
+        out = {"failed_q":
+               jax.lax.psum(failed_q.astype(jnp.int32), axes) > 0}
+        if terminal == "count":
+            out["counts"] = jax.lax.psum(
+                jnp.sum(valid.astype(jnp.int32), axis=1), axes)
+            return out
+
+        # select: globally consistent row positions (shard-rank offsets)
+        vi = valid.astype(jnp.int32)
+        local_counts = jnp.sum(vi, axis=1)                    # (Q,)
+        all_counts = jax.lax.all_gather(local_counts, axes)   # (S, Q)
+        before = (jnp.arange(all_counts.shape[0]) < me)[:, None]
+        base = jnp.sum(all_counts * before, axis=0)           # (Q,)
+        rank = jnp.cumsum(vi, axis=1) - vi
+        pos = base[:, None] + rank
+        over = valid & (pos >= K)
+        keep = valid & ~over
+        rowi = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None],
+                                pos.shape)
+        col = jnp.where(keep, pos, K)
+        rows_gid = jnp.zeros((Q, K), jnp.int32).at[rowi, col].set(
+            jnp.where(valid, ag, 0) + 1, mode="drop")
+        rows_gid = jax.lax.psum(rows_gid, axes) - 1           # 0 -> NULL
+        trunc = jax.lax.psum(jnp.any(over, axis=1).astype(jnp.int32),
+                             axes) > 0
+        use_cur = st.vdata_ts[rows_l] <= ts_q[:, None]
+        attrs = {}
+        for kind, colid in select:
+            if kind == "key":
+                vals = st.vkey[rows_l]
+                acc = jnp.zeros((Q, K), jnp.int32)
+            elif kind == "f32":
+                vals = jnp.where(use_cur, st.vdata_f[rows_l][..., colid],
+                                 st.vprev_f[rows_l][..., colid])
+                acc = jnp.zeros((Q, K), jnp.float32)
+            else:
+                vals = jnp.where(use_cur, st.vdata_i[rows_l][..., colid],
+                                 st.vprev_i[rows_l][..., colid])
+                acc = jnp.zeros((Q, K), jnp.int32)
+            summed = jax.lax.psum(acc.at[rowi, col].set(vals, mode="drop"),
+                                  axes)
+            if kind == "key":     # empty cells read NULL like the local path
+                summed = jnp.where(rows_gid >= 0, summed, NULL)
+            attrs[(kind, colid)] = summed
+        out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
+        return out
+
+    store_specs = jax.tree.map(lambda _: P(axes), GraphStore(
+        **{f.name: 0 for f in dataclasses.fields(GraphStore)}))
+    out_specs = {"failed_q": P()}
+    if terminal == "count":
+        out_specs["counts"] = P()
+    else:
+        out_specs.update(rows_gid=P(), truncated=P(),
+                         attrs={k: P() for k in select})
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(store_specs, P(), P(), P()),
+        out_specs=out_specs, check_vma=False))
+    _cache_put(key, fn)
+    return fn
+
+
+def run_queries_batched_spmd(db, queries: list[dict], mesh,
+                             caps: Optional[QueryCaps] = None,
+                             storage_axes=("data", "model"),
+                             backend: Optional[str] = None,
+                             read_ts: Union[None, int, Sequence[int]] = None,
+                             parsed: Optional[list] = None) -> QueryResult:
+    """Distributed :func:`run_queries_batched`: same grouping, same
+    per-query budgets/snapshots, executed as shard_map'd wave programs."""
+    from repro.core.query.a1ql import parse
+    from repro.core.query.executor_spmd import compile_query_spmd
+    caps = caps or QueryCaps()
+    be = backend_mod.resolve(backend or getattr(db, "backend", None))
+    Q = len(queries)
+    parsed = parsed if parsed is not None else [parse(db, q)
+                                               for q in queries]
+    ts_list = _normalize_ts(db, Q, read_ts)
+    pins = sorted(set(ts_list))
+    for t in pins:
+        db.active_query_ts.append(t)
+    try:
+        groups, stars = _plan_groups(parsed)
+        out = _Assembly(Q, caps.results)
+        dwin = delta_window(db)
+        for idxs in groups:
+            plans_g = tuple(parsed[i][0] for i in idxs)
+            keys = jnp.asarray([parsed[i][1] for i in idxs], jnp.int32)
+            ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
+            fn = compile_batch_spmd(db.cfg, plans_g, caps, mesh,
+                                    storage_axes, be, dwin)
+            out.put(idxs, fn(db.store, keys, jnp.ones((len(idxs),), bool),
+                             ts))
+        for i in stars:
+            plan, keys_b = parsed[i]
+            fn = compile_query_spmd(db.cfg, plan, caps, 1, mesh,
+                                    storage_axes, backend=be)
+            kb = jnp.asarray(np.array([[k] for k in keys_b], np.int32))
+            r = fn(db.store, kb, jnp.ones((1,), bool),
+                   jnp.int32(ts_list[i]))
+            r = dict(r, failed_q=jnp.asarray([r["failed"]]))
+            out.put([i], r)
+        return out.result()
+    finally:
+        for t in pins:
+            db.active_query_ts.remove(t)

@@ -8,12 +8,17 @@ Reproduces the paper's serving architecture end to end on one host:
     tokens** (§3.4: big result sets return a token; the frontend routes the
     follow-up to the owning coordinator — here, the token indexes a TTL'd
     host cache);
+  * mixed plan shapes in one batch: heterogeneous batches execute as fused
+    multi-query waves (core/query/planner.py) instead of one dispatch per
+    query — the paper's "many concurrent queries share each operator wave";
   * interleaved writes through the transactional path + replication log;
   * the Task framework pumped between batches (compaction, sweeper,
     vacuum — "low priority workers", §3.3);
   * hedged dispatch: a query batch that fast-fails is retried once with
-    doubled capacities (straggler/outlier mitigation — the latency-tail
-    policy the paper enforces with its 100 ms budget);
+    quadrupled capacities (straggler/outlier mitigation — the latency-tail
+    policy the paper enforces with its 100 ms budget).  When per-query
+    fast-fail flags are available (the planner path), only the failed
+    queries are re-dispatched and their rows patched into the batch result;
   * latency accounting per query class (avg + P99, the paper's metrics).
 """
 from __future__ import annotations
@@ -57,19 +62,35 @@ class A1Server:
     # ------------------------------------------------------------------
     def execute(self, queries: list[dict], *, qclass: str = "q"
                 ) -> QueryResult:
-        """One batched execution with hedged retry on fast-fail."""
+        """One batched execution with hedged retry on fast-fail.
+
+        The whole attempt — base run *and* hedged retry — reads one pinned
+        snapshot, so a patched batch never mixes two timestamps."""
         t0 = time.perf_counter()
-        res = self._run(queries, self.caps)
-        if res.failed:
-            # hedge: one retry at 4x capacity (tail control, then give up —
-            # the paper discards queries that blow the time budget)
-            self.stats["hedged"] += 1
-            big = dataclasses.replace(
-                self.caps, frontier=self.caps.frontier * 4,
-                expand=self.caps.expand * 4)
-            res = self._run(queries, big)
+        ts0 = self.db.snapshot_ts()
+        self.db.active_query_ts.append(ts0)      # pin across run + hedge
+        try:
+            res = self._run(queries, self.caps, ts0)
             if res.failed:
-                self.stats["fastfails"] += 1
+                # hedge: one retry at 4x capacity (tail control, then give
+                # up — the paper discards queries that blow the time
+                # budget).  With per-query flags (planner path) only the
+                # failed slice retries.
+                self.stats["hedged"] += 1
+                big = dataclasses.replace(
+                    self.caps, frontier=self.caps.frontier * 4,
+                    expand=self.caps.expand * 4)
+                if res.failed_q is not None and not all(res.failed_q):
+                    idx = [i for i, f in enumerate(res.failed_q) if f]
+                    retry = self._run_batched([queries[i] for i in idx],
+                                              big, ts0)
+                    self._patch(res, retry, idx)
+                else:
+                    res = self._run(queries, big, ts0)
+                if res.failed:
+                    self.stats["fastfails"] += 1
+        finally:
+            self.db.active_query_ts.remove(ts0)
         dt = time.perf_counter() - t0
         self.latencies.setdefault(qclass, []).append(dt)
         self.stats["queries"] += len(queries)
@@ -77,11 +98,38 @@ class A1Server:
         self.tasks.pump(1)
         return res
 
-    def _run(self, queries, caps):
+    def _run(self, queries, caps, read_ts):
+        # both entry points route mixed-shape batches through the planner
         if self.use_spmd:
             from repro.core.query.executor_spmd import run_queries_spmd
-            return run_queries_spmd(self.db, queries, self.mesh, caps)
-        return run_queries(self.db, queries, caps)
+            return run_queries_spmd(self.db, queries, self.mesh, caps,
+                                    read_ts=read_ts)
+        return run_queries(self.db, queries, caps, read_ts=read_ts)
+
+    def _run_batched(self, queries, caps, read_ts):
+        """Planner path unconditionally: per-query budgets + failed_q, so
+        hedged retries report each retried query's own outcome."""
+        if self.use_spmd:
+            from repro.core.query.planner import run_queries_batched_spmd
+            return run_queries_batched_spmd(self.db, queries, self.mesh,
+                                            caps, read_ts=read_ts)
+        from repro.core.query.planner import run_queries_batched
+        return run_queries_batched(self.db, queries, caps, read_ts=read_ts)
+
+    @staticmethod
+    def _patch(res: QueryResult, retry: QueryResult, idx: list[int]) -> None:
+        """Overwrite the failed queries' slices with their hedged retry."""
+        for j, i in enumerate(idx):
+            if retry.counts is not None and res.counts is not None:
+                res.counts[i] = retry.counts[j]
+            if retry.rows_gid is not None and res.rows_gid is not None:
+                res.rows_gid[i] = retry.rows_gid[j]
+                res.truncated[i] = retry.truncated[j]
+                for k in (res.rows or {}):
+                    if retry.rows and k in retry.rows:
+                        res.rows[k][i] = retry.rows[k][j]
+            res.failed_q[i] = retry.failed_q[j]
+        res.failed = bool(np.any(res.failed_q))
 
     # ------------------------------------------------------------------
     # continuation tokens (§3.4)

@@ -1,0 +1,16 @@
+"""Shared test configuration.
+
+Registers reproducible hypothesis profiles; CI runs the suite with
+``--hypothesis-profile=ci`` so the chaos/property sweeps
+(test_chaos_replication, test_property_txn, test_query,
+test_backend_parity_prop, test_kernels) draw a fixed example sequence —
+a red CI run replays locally with the same seed.
+"""
+try:
+    from hypothesis import settings
+except ImportError:        # hypothesis optional locally; CI installs it
+    pass
+else:
+    settings.register_profile("ci", derandomize=True, deadline=None,
+                              print_blob=True)
+    settings.register_profile("dev", deadline=None)

@@ -96,6 +96,98 @@ def prog_query_parity():
     print("PARITY_OK")
 
 
+def prog_multiquery_parity():
+    """The planner's fused batched path inside shard_map: heterogeneous
+    batches (mixed hop counts/directions/filters/terminals, per-query MVCC
+    snapshots) must match the local batched path — which the deterministic
+    suite pins to per-query execution — on ref and pallas backends."""
+    import numpy as np
+    from repro.core.addressing import StoreConfig
+    from repro.core.graphdb import GraphDB
+    from repro.core.query.executor import QueryCaps, run_queries
+    from repro.core.query.planner import (run_queries_batched,
+                                          run_queries_batched_spmd)
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    cfg = StoreConfig(n_shards=8, cap_v=128, cap_e=1024, cap_delta=128,
+                      cap_idx=256, cap_idx_delta=64, d_f32=2, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("director")
+    db.vertex_type("actor")
+    db.vertex_type("film", i_attrs=("year", "genre"))
+    db.edge_type("film.director")
+    db.edge_type("film.actor")
+    rng = np.random.default_rng(1)
+    d = [db.create_vertex("director", i) for i in range(5)]
+    films = [db.create_vertex("film", 100 + i,
+                              {"year": 1990 + i,
+                               "genre": int(rng.integers(0, 3))})
+             for i in range(20)]
+    actors = [db.create_vertex("actor", 300 + i) for i in range(30)]
+    t = db.create_transaction()
+    for i, f in enumerate(films):
+        db.create_edge(d[i % 5], f, "film.director", txn=t)
+        for a in rng.choice(30, size=int(rng.integers(1, 6)), replace=False):
+            db.create_edge(f, actors[a], "film.actor", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    db.run_compaction()
+    t1 = db.snapshot_ts()
+    t = db.create_transaction()      # fresh delta-log edges after t1
+    for f in films[:3]:
+        try:
+            db.create_edge(f, actors[29], "film.actor", txn=t)
+        except ValueError:
+            pass
+    db.commit(t)
+    t2 = db.snapshot_ts()
+
+    caps = QueryCaps(frontier=128, expand=512, bucket=64, results=16)
+    q2hop = lambda i: {"type": "director", "id": i,
+                       "_out_edge": {"type": "film.director",
+                                     "_target": {"type": "film",
+                                                 "_out_edge": {
+                                                     "type": "film.actor",
+                                                     "_target": {
+                                                         "type": "actor",
+                                                         "select": "count"}}}}}
+    qrev = lambda i: {"type": "actor", "id": 300 + i,
+                      "_in_edge": {"type": "film.actor",
+                                   "_target": {"type": "film",
+                                               "select": "count"}}}
+    qsel = lambda i: {"type": "actor", "id": 300 + i,
+                      "_in_edge": {"type": "film.actor",
+                                   "_target": {"type": "film",
+                                               "select": ["key", "year"]}}}
+    queries = [q2hop(0), qrev(3), q2hop(1), qrev(29), qsel(2), qsel(29),
+               q2hop(4)]
+    ts = [t2, t2, t1, t1, t2, t2, t2]
+
+    rl = run_queries_batched(db, queries, caps, read_ts=ts)
+    # anchor the local-batched oracle to per-query sequential runs
+    for i in (0, 1, 3):
+        solo = run_queries(db, [queries[i]], caps, read_ts=ts[i])
+        assert rl.counts[i] == solo.counts[0], (i, rl.counts, solo.counts)
+
+    for be in ("ref", "pallas"):
+        rs = run_queries_batched_spmd(db, queries, mesh, caps, backend=be,
+                                      read_ts=ts)
+        assert np.array_equal(rl.counts, rs.counts), (be, rl.counts,
+                                                      rs.counts)
+        assert np.array_equal(rl.failed_q, rs.failed_q), be
+        assert np.array_equal(rl.truncated, rs.truncated), be
+        for qi in (4, 5):       # select rows: set-equal (shard order differs)
+            for col in (("key", 0), ("i32", 0)):
+                kl = sorted(int(x) for x, gg in
+                            zip(rl.rows[col][qi], rl.rows_gid[qi]) if gg >= 0)
+                ks = sorted(int(x) for x, gg in
+                            zip(rs.rows[col][qi], rs.rows_gid[qi]) if gg >= 0)
+                assert kl == ks, (be, qi, col, kl, ks)
+            assert (sorted(x for x in rl.rows_gid[qi] if x >= 0)
+                    == sorted(x for x in rs.rows_gid[qi] if x >= 0)), (be, qi)
+    print("MQ_OK")
+
+
 def prog_collective_matmul():
     import jax
     import jax.numpy as jnp

@@ -1,0 +1,248 @@
+"""Chaos sweep of the replication -> recovery pipeline (§4).
+
+The ObjectStore write pipeline is cut at arbitrary points mid-transaction
+(via a counting ``upsert`` wrapper and ``fail_next``), then both recovery
+modes must uphold the paper's §4 contract under *any* cut:
+
+  * **consistent** recovery equals replaying exactly the transactions with
+    ``ts <= t_R`` against a sequential model — partially shipped
+    transactions are excluded *wholesale*, never half-applied;
+  * **best-effort** recovery never leaves dangling edges (an edge whose
+    endpoint did not survive the cut is repaired away), whatever got cut;
+  * once the sweeper catches up, both modes converge on the full model.
+
+Deterministic sweeps run everywhere; the hypothesis suite (random op
+sequences x random cut points) runs where hypothesis is installed — CI
+pins it with ``--hypothesis-profile=ci`` for reproducibility.
+"""
+import numpy as np
+import pytest
+
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.recovery import best_effort_recover, consistent_recover
+from repro.core.replication import ObjectStore, ReplicationLog
+
+KEYS = list(range(6))
+
+
+def make_db():
+    cfg = StoreConfig(n_shards=2, cap_v=64, cap_e=512, cap_delta=128,
+                      cap_idx=128, cap_idx_delta=64, d_f32=1, d_i32=1)
+    store = ObjectStore()
+    log = ReplicationLog(store)
+    db = GraphDB(cfg, replication_log=log)
+    log.db = db
+    db.vertex_type("node", f_attrs=("w",))
+    db.edge_type("link")
+    return db, log, store, cfg
+
+
+def cut_pipeline(store: ObjectStore, after: int):
+    """Fail every ObjectStore write past the ``after``-th (disaster at a
+    byte offset, not a transaction boundary).  Returns a restore()."""
+    orig = store.upsert
+    n = {"i": 0}
+
+    def failing(table, key, value, ts):
+        n["i"] += 1
+        if n["i"] > after:
+            raise IOError("chaos: pipeline cut")
+        orig(table, key, value, ts)
+
+    store.upsert = failing
+    return lambda: setattr(store, "upsert", orig)
+
+
+# ---------------------------------------------------------------------------
+# the shared chaos driver (deterministic + hypothesis entry points)
+# ---------------------------------------------------------------------------
+
+def apply_ops(db, ops):
+    """Run an op sequence through the transactional path; returns the
+    committed history [(ts, op)] for the sequential model."""
+    history = []
+    gid_of = {}
+    live = set()
+    edges = set()
+    for op, a, b in ops:
+        try:
+            if op == "create" and a not in live:
+                gid_of[a] = db.create_vertex("node", a, {"w": float(b)})
+                live.add(a)
+            elif op == "update" and a in live:
+                db.update_vertex(gid_of[a], "node", {"w": float(b)})
+            elif op == "delete" and a in live:
+                db.delete_vertex(gid_of[a])
+                live.discard(a)
+                edges = {e for e in edges if a not in e}
+            elif op == "edge" and a in live and int(b) in live \
+                    and a != int(b) and (a, int(b)) not in edges:
+                db.create_edge(gid_of[a], gid_of[int(b)], "link")
+                edges.add((a, int(b)))
+            else:
+                continue
+        except (ValueError, IOError):
+            continue
+        history.append((db.clock, (op, a, b)))
+    return history
+
+
+def model_at(history, t_r):
+    """Sequential replay of transactions with ts <= t_R."""
+    v, edges = {}, set()
+    for ts, (op, a, b) in history:
+        if ts > t_r:
+            continue
+        if op == "create":
+            v[a] = float(b)
+        elif op == "update" and a in v:
+            v[a] = float(b)
+        elif op == "delete" and a in v:
+            del v[a]
+            edges = {e for e in edges if a not in e}
+        elif op == "edge":
+            edges.add((a, int(b)))
+    return v, edges
+
+
+def recovered_state(r):
+    """(vertices key->w, edges key-pair set) of a recovered GraphDB."""
+    v, gid2key = {}, {}
+    for k in KEYS:
+        got = r.get_vertex("node", k)
+        if got is not None:
+            v[k] = round(float(got["w"]), 4)
+            gid2key[got["gid"]] = k
+    edges = set()
+    for k, g in [(k, r.get_vertex("node", k)["gid"]) for k in v]:
+        for nbr, _ in r.get_edges(g):
+            assert nbr in gid2key, f"dangling edge {k}->{nbr}"
+            edges.add((k, gid2key[nbr]))
+    return v, edges
+
+
+def check_invariants(ops, cut_after: int, resume: bool):
+    db, log, store, cfg = make_db()
+    restore = cut_pipeline(store, cut_after)
+    history = apply_ops(db, ops)
+    restore()
+    if resume:
+        log.sweep()          # the async sweeper catches up before disaster
+
+    # --- best-effort: internally consistent, no dangling edges -------------
+    be = best_effort_recover(store, db, cfg)
+    recovered_state(be)      # asserts every edge endpoint exists
+
+    # --- consistent: the t_R prefix, whole transactions only ---------------
+    t_r = store.get_meta("g.t_R", 0)
+    want_v, want_e = model_at(history, t_r)
+    cr = consistent_recover(store, db, cfg)
+    got_v, got_e = recovered_state(cr)
+    assert got_v.keys() == want_v.keys(), (t_r, got_v, want_v)
+    for k in want_v:
+        assert abs(got_v[k] - want_v[k]) < 1e-3, (k, got_v[k], want_v[k])
+    assert got_e == want_e, (t_r, got_e, want_e)
+
+    if resume:
+        # sweeper drained: both modes converge on the full history
+        full_v, full_e = model_at(history, db.clock)
+        assert got_v.keys() == full_v.keys()
+        be_v, be_e = recovered_state(be)
+        assert be_v.keys() == full_v.keys() and be_e == full_e
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweeps (no hypothesis required)
+# ---------------------------------------------------------------------------
+
+OPS_SCRIPT = [
+    ("create", 0, 1.5), ("create", 1, 2.5), ("edge", 0, 1),
+    ("create", 2, 0.5), ("edge", 2, 0), ("update", 1, 9.0),
+    ("create", 3, 4.0), ("edge", 3, 1), ("delete", 0, 0.0),
+    ("create", 4, 7.0), ("edge", 4, 2), ("update", 4, 8.0),
+]
+
+
+@pytest.mark.parametrize("cut_after", [0, 1, 3, 5, 8, 13, 21, 34, 55, 99])
+def test_deterministic_cut_sweep(cut_after):
+    check_invariants(OPS_SCRIPT, cut_after, resume=False)
+
+
+@pytest.mark.parametrize("cut_after", [2, 7, 19])
+def test_sweeper_resume_converges(cut_after):
+    check_invariants(OPS_SCRIPT, cut_after, resume=True)
+
+
+def test_mid_transaction_cut_is_wholesale():
+    """One multi-entry transaction (A, B, edge) cut at every write offset:
+    consistent recovery returns all of it or none of it."""
+    for cut in range(8):
+        db, log, store, cfg = make_db()
+        restore = cut_pipeline(store, cut)
+        t = db.create_transaction()
+        a = db.create_vertex("node", 0, {"w": 1.0}, txn=t)
+        b = db.create_vertex("node", 1, {"w": 2.0}, txn=t)
+        t.create_e.append((a, b, 0))
+        assert db.commit(t) == "COMMITTED"   # commit != durable (§4)
+        restore()
+        cr = consistent_recover(store, db, cfg)
+        va, vb = cr.get_vertex("node", 0), cr.get_vertex("node", 1)
+        if cut >= 6:      # 3 entries x 2 writes each all shipped
+            assert va is not None and vb is not None
+            assert cr.get_edges(va["gid"]) == [(vb["gid"], 0)]
+        else:             # any earlier cut excludes the whole transaction
+            assert va is None and vb is None, cut
+        # best-effort may keep a prefix, but never a dangling edge
+        be = best_effort_recover(store, db, cfg)
+        ba = be.get_vertex("node", 0)
+        if ba is not None and be.get_edges(ba["gid"]):
+            assert be.get_vertex("node", 1) is not None
+
+
+def test_fail_next_sweeper_backlog():
+    """fail_next cuts the synchronous ship; the log holds the backlog and
+    t_R stays put until the sweeper drains it."""
+    db, log, store, cfg = make_db()
+    db.create_vertex("node", 0, {"w": 1.0})
+    t_r0 = store.get_meta("g.t_R", 0)
+    store.fail_next(1)
+    db.create_vertex("node", 1, {"w": 2.0})
+    assert log.lag() > 0
+    assert store.get_meta("g.t_R", 0) == t_r0
+    cr = consistent_recover(store, db, cfg)
+    assert cr.get_vertex("node", 1) is None       # not durable yet
+    log.sweep()
+    assert log.lag() == 0
+    cr = consistent_recover(store, db, cfg)
+    assert cr.get_vertex("node", 1) is not None   # durable after drain
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: random interleavings x random cut points
+# ---------------------------------------------------------------------------
+
+try:        # the deterministic sweeps above run without hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                        # pragma: no cover
+    st = None
+
+if st is not None:
+    ops_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("create"), st.sampled_from(KEYS),
+                      st.floats(0, 10, allow_nan=False)),
+            st.tuples(st.just("update"), st.sampled_from(KEYS),
+                      st.floats(0, 10, allow_nan=False)),
+            st.tuples(st.just("delete"), st.sampled_from(KEYS),
+                      st.just(0.0)),
+            st.tuples(st.just("edge"), st.sampled_from(KEYS),
+                      st.sampled_from(KEYS)),
+        ),
+        min_size=1, max_size=20)
+
+    @settings(max_examples=12, deadline=None)
+    @given(ops=ops_strategy, cut_after=st.integers(0, 80),
+           resume=st.booleans())
+    def test_chaos_recovery_property(ops, cut_after, resume):
+        check_invariants(ops, cut_after, resume)

@@ -1,0 +1,202 @@
+"""Multi-query planner: batched waves must be bit-identical to per-query runs.
+
+``run_queries_batched`` fuses heterogeneous plan shapes into shared operator
+waves with per-query capacity budgets and MVCC snapshots; the contract is
+that every observable — counts, select rows, truncation, and the §3.4
+fast-fail flag — matches running each query alone through ``run_queries``,
+on both the ref and pallas backends.  Deterministic (seeded rng, no
+hypothesis) so the suite runs everywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.core.query import planner
+from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.planner import delta_window, run_queries_batched
+
+from test_backend_parity import CAPS, build_db, q_chain, q_star
+
+
+def template_pool(rng):
+    """Random heterogeneous query drawn from chain/star templates."""
+    kind = rng.integers(6)
+    if kind == 0:
+        return q_chain(int(rng.integers(4)))                     # 2-hop count
+    if kind == 1:
+        return q_chain(300 + int(rng.integers(12)), direction="in")
+    if kind == 2:
+        return q_chain(int(rng.integers(4)), genre=int(rng.integers(3)))
+    if kind == 3:
+        return q_chain(int(rng.integers(4)), select=["key"])
+    if kind == 4:
+        return q_star(int(rng.integers(3)), 300 + int(rng.integers(12)))
+    return q_chain(999)                                          # missing key
+
+
+def assert_query_parity(res, i, solo):
+    """Query i of a batched result == its solo run_queries result."""
+    assert bool(res.failed_q[i]) == bool(solo.failed), i
+    if solo.counts is not None:
+        assert res.counts[i] == solo.counts[0], i
+    else:
+        assert np.array_equal(res.rows_gid[i], solo.rows_gid[0]), i
+        assert res.truncated[i] == solo.truncated[0], i
+        for k, v in solo.rows.items():
+            assert np.array_equal(res.rows[k][i], v[0]), (i, k)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_random_batches_match_per_query(backend):
+    db = build_db(seed=21)
+    rng = np.random.default_rng(21)
+    for _ in range(3):
+        queries = [template_pool(rng) for _ in range(int(rng.integers(4, 9)))]
+        res = run_queries_batched(db, queries, CAPS, backend=backend)
+        for i, q in enumerate(queries):
+            assert_query_parity(res, i, run_queries(db, [q], CAPS,
+                                                    backend=backend))
+
+
+def test_ref_pallas_batched_identical():
+    db = build_db(seed=22)
+    rng = np.random.default_rng(22)
+    queries = [template_pool(rng) for _ in range(8)]
+    a = run_queries_batched(db, queries, CAPS, backend="ref")
+    b = run_queries_batched(db, queries, CAPS, backend="pallas")
+    assert np.array_equal(a.failed_q, b.failed_q)
+    assert np.array_equal(a.counts, b.counts)
+    if a.rows_gid is not None:
+        assert np.array_equal(a.rows_gid, b.rows_gid)
+        for k in a.rows:
+            assert np.array_equal(a.rows[k], b.rows[k]), k
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_all_delta_tier_parity(backend):
+    """Uncompacted graph: every edge still in the delta log (windowed scan)."""
+    db = build_db(seed=23, mutate=False)
+    assert delta_window(db) > 1          # the window actually has content
+    queries = ([q_chain(d) for d in range(3)]
+               + [q_chain(300 + a, direction="in") for a in range(3)])
+    res = run_queries_batched(db, queries, CAPS, backend=backend)
+    for i, q in enumerate(queries):
+        assert_query_parity(res, i, run_queries(db, [q], CAPS,
+                                                backend=backend))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_mvcc_snapshots_stay_independent(backend):
+    """Queries pinned at different timestamps coexist in one wave program."""
+    db = build_db(seed=24, mutate=False)
+    t1 = db.snapshot_ts()
+    g, found = db.lookup_vertex("actor", 300)
+    if found:
+        db.delete_vertex(g)
+    f, _ = db.lookup_vertex("film", 100)
+    a, _ = db.lookup_vertex("actor", 311)
+    try:
+        db.create_edge(f, a, "film.actor")
+    except ValueError:
+        pass
+    t2 = db.snapshot_ts()
+    queries = [q_chain(0), q_chain(0), q_chain(1), q_chain(1)]
+    ts = [t1, t2, t2, t1]
+    res = run_queries_batched(db, queries, CAPS, backend=backend,
+                              read_ts=ts)
+    for i, (q, t) in enumerate(zip(queries, ts)):
+        assert_query_parity(res, i, run_queries(db, [q], CAPS,
+                                                backend=backend, read_ts=t))
+    # the isolation must be observable: the same plan at t1 vs t2 may only
+    # differ because each batch slot reads its own snapshot
+    solo1 = run_queries(db, [q_chain(0)], CAPS, backend=backend, read_ts=t1)
+    solo2 = run_queries(db, [q_chain(0)], CAPS, backend=backend, read_ts=t2)
+    assert res.counts[0] == solo1.counts[0]
+    assert res.counts[1] == solo2.counts[0]
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_fastfail_flags_per_query(backend):
+    """One overflowing query must not fail (or corrupt) its batch mates."""
+    db = build_db(seed=25)
+    tiny = QueryCaps(frontier=16, expand=2, results=4)
+    queries = [q_chain(0), q_chain(999), q_chain(1)]
+    res = run_queries_batched(db, queries, tiny, backend=backend)
+    for i, q in enumerate(queries):
+        solo = run_queries(db, [q], tiny, backend=backend)
+        assert bool(res.failed_q[i]) == bool(solo.failed), i
+    assert res.failed_q[0] and not res.failed_q[1]    # heavy fails, empty not
+    # the unfailed query's payload still matches its solo run
+    solo = run_queries(db, [q_chain(999)], tiny, backend=backend)
+    assert res.counts[1] == solo.counts[0] == 0
+
+
+def test_cache_keyed_on_batch_shape():
+    """Same-shape batches reuse the compiled wave program (no retracing)."""
+    db = build_db(seed=26, mutate=False)
+    queries = [q_chain(0), q_chain(301, direction="in"), q_chain(1)]
+    run_queries_batched(db, queries, CAPS, backend="ref")     # warm
+    h0, m0 = planner.CACHE_STATS["hits"], planner.CACHE_STATS["misses"]
+    for _ in range(3):
+        run_queries_batched(db, queries, CAPS, backend="ref")
+    assert planner.CACHE_STATS["hits"] == h0 + 3
+    assert planner.CACHE_STATS["misses"] == m0
+    # a permutation of the same mix is the same program (canonical order)
+    res = run_queries_batched(db, list(reversed(queries)), CAPS,
+                              backend="ref")
+    assert planner.CACHE_STATS["misses"] == m0
+    fwd = run_queries_batched(db, queries, CAPS, backend="ref")
+    assert np.array_equal(res.counts, fwd.counts[::-1])
+    # a different batch shape is a different program
+    run_queries_batched(db, queries + [q_chain(2)], CAPS, backend="ref")
+    assert planner.CACHE_STATS["misses"] == m0 + 1
+
+
+def test_amortization_gate():
+    """The ISSUE acceptance gate, automated: on the ref backend, batch-64
+    per-query latency must be <= 0.5x batch-1.  Relative timing inside one
+    process (median of repeats) so shared-runner noise largely cancels."""
+    import time
+    db = build_db(seed=29, mutate=False)
+    caps = QueryCaps(frontier=128, expand=512, results=16)
+    templates = [lambda i: q_chain(i % 3),
+                 lambda i: q_chain(300 + i % 12, direction="in"),
+                 lambda i: q_chain(i % 3, genre=i % 3)]
+    batch = lambda b: [templates[i % 3](i) for i in range(b)]
+    qs1, qs64 = batch(1), batch(64)
+
+    def median_t(qs, n=5):
+        run_queries_batched(db, qs, caps, backend="ref")      # warm compile
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            run_queries_batched(db, qs, caps, backend="ref")
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[n // 2]
+
+    t1, t64 = median_t(qs1), median_t(qs64)
+    assert t64 / 64 <= 0.5 * t1, \
+        f"amortization regressed: {t64/64*1e6:.0f}us/q at b=64 " \
+        f"vs {t1*1e6:.0f}us at b=1"
+
+
+def test_mixed_batch_routes_through_planner():
+    """run_queries on a mixed-shape batch returns per-query-aligned results."""
+    db = build_db(seed=27)
+    queries = [q_chain(0), q_chain(301, direction="in"), q_chain(1)]
+    res = run_queries(db, queries, CAPS, backend="ref")
+    assert res.failed_q is not None and len(res.failed_q) == 3
+    for i, q in enumerate(queries):
+        solo = run_queries(db, [q], CAPS, backend="ref")
+        assert res.counts[i] == solo.counts[0], i
+
+
+def test_mixed_terminals_in_one_batch():
+    """count + select queries in one call: aligned arrays, NULL elsewhere."""
+    db = build_db(seed=28)
+    queries = [q_chain(0), q_chain(1, select=["key"]), q_chain(2)]
+    res = run_queries_batched(db, queries, CAPS, backend="ref")
+    assert res.counts[0] >= 0 and res.counts[2] >= 0
+    assert res.counts[1] == -1                   # select slot: no count
+    assert (res.rows_gid[0] == -1).all()         # count slot: no rows
+    solo = run_queries(db, [queries[1]], CAPS, backend="ref")
+    assert np.array_equal(res.rows_gid[1], solo.rows_gid[0])

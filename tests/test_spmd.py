@@ -28,6 +28,10 @@ def test_spmd_query_parity():
     assert "PARITY_OK" in run_prog("query_parity")
 
 
+def test_spmd_multiquery_parity():
+    assert "MQ_OK" in run_prog("multiquery_parity")
+
+
 def test_collective_matmul():
     assert "CM_OK" in run_prog("collective_matmul")
 

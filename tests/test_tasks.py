@@ -1,0 +1,122 @@
+"""Task framework (§3.3): cascades terminate, priorities hold, and the
+cooperative ``pump()`` between query waves never perturbs foreground reads.
+
+The paper runs DeleteGraph/GC as low-priority tasks that reschedule
+themselves or spawn subtasks on a global queue; serving pumps the queue
+between query batches.  These tests pin down exactly that contract.
+"""
+import numpy as np
+
+from repro.core.addressing import StoreConfig, TS_INF
+from repro.core.graphdb import GraphDB
+from repro.core.query.executor import QueryCaps
+from repro.core.query.planner import run_queries_batched
+from repro.core.tasks import (Task, TaskQueue, compaction_task,
+                              delete_graph_task, delete_type_task,
+                              index_compaction_task, vacuum_task)
+
+CAPS = QueryCaps(frontier=64, expand=256, results=8)
+
+
+def make_db(n_actors=10, n_films=4):
+    cfg = StoreConfig(n_shards=4, cap_v=64, cap_e=512, cap_delta=128,
+                      cap_idx=128, cap_idx_delta=64, d_f32=1, d_i32=1)
+    db = GraphDB(cfg)
+    db.vertex_type("actor")
+    db.vertex_type("film", i_attrs=("year",))
+    db.edge_type("film.actor")
+    films = [db.create_vertex("film", 100 + i, {"year": 2000 + i})
+             for i in range(n_films)]
+    actors = [db.create_vertex("actor", 300 + i) for i in range(n_actors)]
+    t = db.create_transaction()
+    for i, a in enumerate(actors):
+        db.create_edge(films[i % n_films], a, "film.actor", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    return db
+
+
+def test_priority_ordering_and_fifo_tiebreak():
+    db = make_db()
+    tq = TaskQueue(db)
+    ran = []
+
+    def mk(name, prio):
+        return Task(name, lambda d, t: ran.append(name) or [], priority=prio)
+
+    tq.enqueue(mk("late", 30))
+    tq.enqueue(mk("first-a", 10))
+    tq.enqueue(mk("mid", 20))
+    tq.enqueue(mk("first-b", 10))      # same priority: FIFO by task_id
+    tq.drain()
+    assert ran == ["first-a", "first-b", "mid", "late"]
+    assert tq.pending() == 0
+
+
+def test_delete_type_reschedules_until_empty():
+    db = make_db(n_actors=10)
+    tq = TaskQueue(db)
+    tq.enqueue(delete_type_task("actor", chunk=3))
+    tq.drain()
+    # 10 actors at 3 per quantum: the task must have rescheduled itself
+    runs = [n for n in tq.completed if n == "delete-type:actor"]
+    assert len(runs) >= 4
+    for i in range(10):
+        assert db.get_vertex("actor", 300 + i) is None
+    # films survive, their half-edges to actors are retired
+    for i in range(4):
+        f = db.get_vertex("film", 100 + i)
+        assert f is not None
+        assert db.get_edges(f["gid"]) == []
+
+
+def test_delete_graph_cascade_terminates_under_drain():
+    db = make_db()
+    tq = TaskQueue(db)
+    tq.enqueue(delete_graph_task(None, db.tenant, db.graph))
+    tq.drain()           # raises if the cascade never converges
+    vtypes = np.asarray(db.store.vtype)
+    v_del = np.asarray(db.store.v_delete)
+    assert ((vtypes < 0) | (v_del != TS_INF)).all()   # no live vertices
+    assert db.graph not in db.catalog.tenants[db.tenant]
+    # spawned per-type deletes ran before the graph dropped
+    assert any(n.startswith("delete-type:") for n in tq.completed)
+    assert tq.completed.count(f"delete-graph:{db.graph}") >= 2   # mark+wait
+
+
+def test_pump_between_waves_preserves_foreground_results():
+    """Maintenance pumped between batched-query waves must not change what a
+    pinned snapshot sees — GC respects the §2.2 query pins."""
+    db = make_db()
+    queries = [
+        {"type": "film", "id": 100,
+         "_out_edge": {"type": "film.actor",
+                       "_target": {"type": "actor", "select": "count"}}},
+        {"type": "actor", "id": 301,
+         "_in_edge": {"type": "film.actor",
+                      "_target": {"type": "film", "select": ["key"]}}},
+    ]
+    ts = db.snapshot_ts()
+    db.active_query_ts.append(ts)          # a long-running batched query
+    try:
+        base = run_queries_batched(db, queries, CAPS, read_ts=ts)
+        tq = TaskQueue(db)
+        # mutate the graph mid-flight, then pump maintenance between waves
+        victim = db.get_vertex("actor", 300)
+        db.delete_vertex(victim["gid"])
+        for task in (compaction_task(), index_compaction_task(),
+                     vacuum_task()):
+            tq.enqueue(task)
+        while tq.pending():
+            tq.pump(1)                     # one quantum between waves
+            res = run_queries_batched(db, queries, CAPS, read_ts=ts)
+            assert np.array_equal(res.counts, base.counts)
+            assert np.array_equal(res.rows_gid, base.rows_gid)
+            assert np.array_equal(res.failed_q, base.failed_q)
+        assert len(tq.completed) == 3      # maintenance actually ran
+    finally:
+        db.active_query_ts.remove(ts)
+    # after the pin drops and versions are GC'd, a fresh snapshot moves on
+    db.run_compaction()
+    db.run_index_compaction()
+    fresh = run_queries_batched(db, queries, CAPS)
+    assert fresh.counts[0] == base.counts[0] - 1   # film 100 lost actor 300
