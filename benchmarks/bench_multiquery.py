@@ -3,23 +3,26 @@
 A1's throughput headline comes from amortizing operator waves across many
 concurrent queries.  This suite runs a *heterogeneous* query mix (different
 hop counts, directions, filters — so the per-plan fast path can't apply)
-through ``run_queries_batched`` at batch sizes 1/8/64 and reports per-query
-latency.  The amortization claim is that batch-64 per-query latency lands
-well under batch-1; ``tests/test_planner.py::test_amortization_gate``
-enforces the <= 0.5x gate on the ref backend, while the ``derived`` field
-records the measured speedup so the BENCH_*.json trajectory keeps it
-observable across commits.
+through the fused-wave path (``GraphDB.query(..., fused=True)``) at batch
+sizes 1/8/64 and reports per-query latency, plus star-pattern and mixed
+chain+star batches (fused into the same waves since A1QL v2).  The
+amortization claim is that batch-64 per-query latency lands well under
+batch-1; ``tests/test_planner.py::test_amortization_gate`` (and its
+``_with_stars`` twin) enforce the <= 0.5x gate on the ref backend, while
+the ``derived`` field records the measured speedup so the BENCH_*.json
+trajectory keeps it observable across commits.
 """
 import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.query.executor import QueryCaps
-from repro.core.query.planner import run_queries_batched
 from repro.data.kg import build_film_kg
 
 CAPS = QueryCaps(frontier=128, expand=512, results=16)
 
 BATCHES = (1, 8, 64)
+STAR_BATCHES = (8,)
+MIXED_BATCHES = (8, 32)
 
 
 def q_2hop(did):
@@ -50,35 +53,62 @@ def q_filtered(did, genre):
                                                         "select": "count"}}}}}
 
 
-def make_batch(kg, rng, b: int) -> list[dict]:
-    """Heterogeneous mix: cycle three plan shapes with random keys."""
+def q_star(did, aid):
+    """Star pattern (paper Q3): films by director X AND starring actor Y."""
+    return {"intersect": [
+        {"type": "director", "id": int(did),
+         "_out_edge": {"type": "film.director", "_target": {"type": "film"}}},
+        {"type": "actor", "id": int(aid),
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+
+
+def make_batch(kg, rng, b: int, mix=("2hop", "rev", "filtered")) -> list:
+    """Heterogeneous mix: cycle plan shapes with random keys."""
     out = []
     for i in range(b):
-        kind = i % 3
-        if kind == 0:
+        kind = mix[i % len(mix)]
+        if kind == "2hop":
             out.append(q_2hop(rng.choice(kg.director_keys)))
-        elif kind == 1:
+        elif kind == "rev":
             out.append(q_rev(rng.choice(kg.actor_keys[:100])))
+        elif kind == "star":
+            out.append(q_star(rng.choice(kg.director_keys),
+                              rng.choice(kg.actor_keys[:100])))
         else:
             out.append(q_filtered(rng.choice(kg.director_keys),
                                   rng.integers(kg.n_genres)))
     return out
 
 
+def _bench(db, name, queries, b, base_us=None):
+    avg, p99, _ = timeit(lambda: db.query(queries, caps=CAPS, fused=True),
+                         warmup=2, iters=10)
+    us = avg / b * 1e6
+    derived = (f"batch={b};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f}")
+    if base_us:
+        derived += f";perq_speedup_vs_b1={base_us / us:.2f}x"
+    emit(name, us, derived)
+    return us
+
+
 def run(kg=None):
     kg = kg or build_film_kg(n_films=150, n_actors=200, n_directors=30)
     db = kg.db
     rng = np.random.default_rng(0)
-    per_q = {}
+    base_us = None
     for b in BATCHES:
-        queries = make_batch(kg, rng, b)
-        avg, p99, _ = timeit(lambda: run_queries_batched(db, queries, CAPS),
-                             warmup=2, iters=10)
-        per_q[b] = avg / b * 1e6
-        speedup = per_q[BATCHES[0]] / per_q[b]
-        emit(f"multiquery_b{b}", per_q[b],
-             f"batch={b};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f};"
-             f"perq_speedup_vs_b1={speedup:.2f}x")
+        us = _bench(db, f"multiquery_b{b}", make_batch(kg, rng, b), b,
+                    base_us)
+        base_us = base_us or us
+    # star + mixed chain+star batches: fused into the same waves (A1QL v2)
+    for b in STAR_BATCHES:
+        _bench(db, f"multiquery_star_b{b}",
+               make_batch(kg, rng, b, mix=("star",)), b, base_us)
+    for b in MIXED_BATCHES:
+        _bench(db, f"multiquery_mixed_b{b}",
+               make_batch(kg, rng, b, mix=("2hop", "star", "rev")), b,
+               base_us)
     return db
 
 

@@ -11,7 +11,7 @@ system's effective availability is only 80%").
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 from repro.data.kg import build_film_kg
 
 CAPS = QueryCaps(frontier=2048, expand=16384, results=32)
@@ -63,7 +63,7 @@ def run(kg=None):
             rng.choice(kg.actor_keys[:100], B))]),
     ]:
         queries = mk()
-        avg, p99, _ = timeit(lambda: run_queries(db, queries, CAPS),
+        avg, p99, _ = timeit(lambda: db.query(queries, caps=CAPS),
                              warmup=1, iters=5)
         emit(name, avg / B * 1e6,
              f"batch={B};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f}")

@@ -5,11 +5,19 @@ performs (roughly linear, ~17us average per read).  Our analogue: batched
 snapshot vertex reads of increasing count against the storage layer — the
 linearity (and the per-read constant) is the property being reproduced;
 the absolute constant is CPU-bound here and TPU-gather-bound in production.
+
+Also benchmarks the primary-index probe with the delta scan full vs
+windowed (``planner.index_window``: a host fill-count-bounded static
+slice, pow2-keyed — the before/after of the ROADMAP item is recorded in
+the two rows' metadata).
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core import index as index_mod
+from repro.core.query.planner import index_window
 from repro.core.store import gather_data
 from repro.data.kg import build_film_kg
 
@@ -35,6 +43,30 @@ def run(kg=None):
     ratio = rows[-1][1] / rows[0][1]
     emit("read_batching_gain", 0.0,
          f"t16384/t64={ratio:.1f}x;ideal_serial=256x")
+
+    # ---- primary-index probe: delta scan full vs windowed -----------------
+    # write a few vertices so the index delta is non-empty (the worst case
+    # for the full scan and the realistic serving state between compactions)
+    for i in range(8):
+        db.create_vertex("actor", 90_000 + i)
+    probe = jnp.asarray(rng.choice(kg.actor_keys, 1024).astype(np.int32))
+    vts = jnp.full((1024,), db.vt("actor").type_id, jnp.int32)
+    ones = jnp.ones((1024,), bool)
+    rts = jnp.int32(db.snapshot_ts())
+    win = index_window(db)
+
+    def probe_fn(xd_win):
+        fn = jax.jit(lambda st, k, t: index_mod.lookup(
+            st, db.cfg, vts, k, ones, t, xd_win=xd_win)[0])
+        return lambda: fn(db.store, probe, rts).block_until_ready()
+
+    t_full, _, _ = timeit(probe_fn(None), warmup=2, iters=10)
+    t_win, _, _ = timeit(probe_fn(win), warmup=2, iters=10)
+    meta = (f"win={win};cap_idx_delta={db.cfg.cap_idx_delta};"
+            f"fullscan_us={t_full*1e6:.1f};windowed_us={t_win*1e6:.1f};"
+            f"speedup={t_full/t_win:.2f}x")
+    emit("index_lookup_fullscan_1024", t_full * 1e6, meta)
+    emit("index_lookup_windowed_1024", t_win * 1e6, meta)
     return db
 
 

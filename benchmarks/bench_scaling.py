@@ -9,7 +9,7 @@ offered batch sizes per shard count.
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 from repro.data.kg import build_film_kg
 from repro.core.addressing import StoreConfig
 
@@ -37,7 +37,7 @@ def run():
         caps = QueryCaps(frontier=1024, expand=8192, results=16)
         for load in (4, 16):
             queries = [q1(d) for d in rng.choice(kg.director_keys, load)]
-            avg, p99, _ = timeit(lambda: run_queries(db, queries, caps),
+            avg, p99, _ = timeit(lambda: db.query(queries, caps=caps),
                                  warmup=1, iters=3)
             emit(f"scaling_s{shards}_load{load}", avg / load * 1e6,
                  f"batch_ms={avg*1e3:.2f};qps={load/avg:.0f}")

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 from repro.core.store import gather_headers
 from repro.data.kg import build_film_kg
 
@@ -34,9 +34,9 @@ def run(kg=None):
     caps = QueryCaps(frontier=4096, expand=32768, results=32)
 
     queries = [q4(a) for a in rng.choice(kg.actor_keys[:50], B)]
-    res = run_queries(db, queries, caps)
+    res = db.query(queries, caps=caps)
     verts_per_q = float(np.mean(res.counts)) + 2.0  # rough touched-vertices
-    avg, p99, _ = timeit(lambda: run_queries(db, queries, caps),
+    avg, p99, _ = timeit(lambda: db.query(queries, caps=caps),
                          warmup=1, iters=5)
     qps = B / avg
     emit("Q4_costar_stress", avg / B * 1e6,

@@ -1,8 +1,9 @@
 """GNN training on top of the A1 graph store.
 
 The integration the DESIGN.md §5 table promises: load a graph into the
-transactional store, pull its CSR snapshot, train GraphSAGE with the
-fanout sampler (a bounded A1 traversal), and keep training correctly
+transactional store, pull its CSR snapshot with one batched ``db.query``
+(N neighbor selects fused into a single compiled program), train GraphSAGE
+with the fanout sampler (a bounded A1 traversal), and keep training correctly
 *after* live updates mutate the graph (the snapshot/compaction machinery
 hands the sampler a consistent view).
 
@@ -18,6 +19,7 @@ import numpy as np
 
 from repro.core.addressing import StoreConfig
 from repro.core.graphdb import GraphDB
+from repro.core.query.executor import QueryCaps
 from repro.data.sampler import build_sampled_batch, csr_from_coo
 from repro.models.gnn import sage
 from repro.optim.optimizers import AdamWConfig, init_opt_state, opt_update
@@ -54,17 +56,24 @@ def main():
     db.commit(t)
     db.run_compaction()
 
-    # ---- pull a consistent CSR snapshot out of the store ------------------
-    src, dst = [], []
-    for g in gids:
-        for nbr, _ in db.get_edges(g):
-            src.append(gids.index(g) if False else g)
-            dst.append(nbr)
-    # map gids -> dense ids
-    gid2idx = {g: i for i, g in enumerate(gids)}
-    src = np.asarray([gid2idx[s] for s in src], np.int32)
-    dst = np.asarray([gid2idx[d] for d in dst], np.int32)
-    indptr, indices = csr_from_coo(N, src, dst)
+    # ---- pull a consistent CSR snapshot through the query engine ----------
+    # one batched A1QL select per vertex, all N fused into a single compiled
+    # program (uniform plan shape) instead of N host round-trips; user keys
+    # are the dense ids, so neighbor keys are the CSR column indices
+    nbr_q = [{"type": "user", "id": i,
+              "_out_edge": {"type": "follows",
+                            "_target": {"type": "user", "select": ["key"]}}}
+             for i in range(N)]
+    # fused=True: each query gets its own small §3.4 budget instead of one
+    # shared frontier sized for all N — the serving-shaped wave path
+    res = db.query(nbr_q, caps=QueryCaps(frontier=64, expand=256,
+                                         results=2 * deg), fused=True)
+    assert not res.failed and not res.truncated.any()
+    nbr_keys = res.rows[("key", 0)]
+    src, dst = np.nonzero(nbr_keys >= 0)
+    dst = nbr_keys[src, dst]
+    indptr, indices = csr_from_coo(N, src.astype(np.int32),
+                                   dst.astype(np.int32))
     print(f"snapshot: {len(src)} edges at ts={db.snapshot_ts()}")
 
     # ---- features correlate with labels so training can succeed ----------

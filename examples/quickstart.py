@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.addressing import StoreConfig
 from repro.core.graphdb import GraphDB
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 from repro.core.recovery import best_effort_recover
 from repro.core.replication import ObjectStore, ReplicationLog
 
@@ -57,8 +57,19 @@ def main():
                                    "_out_edge": {"type": "film.actor",
                                                  "_target": {"type": "actor",
                                                              "select": "count"}}}}}
-    res = run_queries(db, [q], QueryCaps())
+    res = db.query([q], caps=QueryCaps())
     print("actors who worked with Spielberg:", int(res.counts[0]))
+
+    # -- star pattern + chain in ONE batched call (fused operator waves) ----
+    star = {"intersect": [
+        {"type": "director", "id": 1,
+         "_out_edge": {"type": "film.director", "_target": {"type": "film"}}},
+        {"type": "actor", "id": 100,
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+    both = db.query([q, star], caps=QueryCaps())
+    print("films by Spielberg AND starring Hanks:", int(both.counts[1]),
+          "(chain answer still", int(both.counts[0]), "— one fused program)")
 
     # -- snapshot isolation: readers never block on writers -----------------
     old_ts = db.snapshot_ts()
@@ -74,7 +85,7 @@ def main():
 
     # -- disaster recovery from ObjectStore ---------------------------------
     recovered = best_effort_recover(store, db, cfg)
-    res2 = run_queries(recovered, [q], QueryCaps())
+    res2 = recovered.query([q], caps=QueryCaps())
     print("recovered DB answers the same query:", int(res2.counts[0]))
     assert res2.counts[0] == res.counts[0]
     print("OK")

@@ -32,6 +32,17 @@ def q1(did):
                                                         "select": "count"}}}}}
 
 
+def q3(did, aid):
+    """Star pattern (paper Q3): films by director X AND starring actor Y —
+    fused into the same wave batch as the chains since A1QL v2."""
+    return {"intersect": [
+        {"type": "director", "id": int(did),
+         "_out_edge": {"type": "film.director", "_target": {"type": "film"}}},
+        {"type": "actor", "id": int(aid),
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
+
+
 def q4(aid):
     """Co-star stress query (paper Q4: 3-hop, large fan-out)."""
     return {"type": "actor", "id": int(aid),
@@ -63,8 +74,14 @@ def main():
     rng = np.random.default_rng(0)
 
     for b in range(args.batches):
+        # mixed chain + star batch: one fused wave program per batch shape
         dirs = rng.choice(kg.director_keys, args.batch_size)
-        res = server.execute([q1(d) for d in dirs], qclass="Q1")
+        batch = [q1(d) for d in dirs[: args.batch_size // 2]]
+        batch += [q3(d, a) for d, a in
+                  zip(dirs[args.batch_size // 2:],
+                      rng.choice(kg.actor_keys[:50],
+                                 args.batch_size - len(batch)))]
+        res = server.execute(batch, qclass="Q1+Q3")
         if b % 3 == 0:          # interleave the paper's stress query
             acts = rng.choice(kg.actor_keys[:50], args.batch_size)
             server.execute([q4(a) for a in acts], qclass="Q4")

@@ -202,6 +202,21 @@ class GraphDB:
             self.commit(t)
 
     # ------------------------------------------------------------------
+    # queries (A1QL v2: the one entry point)
+    # ------------------------------------------------------------------
+    def query(self, queries: list[dict], **kw):
+        """Execute a batch of A1QL queries (chains and star patterns).
+
+        The unified entry point (``core.query.engine.execute``): parses each
+        document to the logical-plan IR and routes internally — local vs
+        SPMD (``mesh=``), per-plan-shape vs fused multi-query waves
+        (``fused=None`` auto, ``True`` forces per-query budgets +
+        ``failed_q`` flags).  Accepts ``caps=``, ``backend=``, ``read_ts=``
+        (scalar or per-query), ``parsed=``; returns a ``QueryResult``."""
+        from repro.core.query.engine import execute
+        return execute(self, queries, **kw)
+
+    # ------------------------------------------------------------------
     # reads (host conveniences; bulk reads go through the query engine)
     # ------------------------------------------------------------------
     def lookup_vertex(self, vtype: str, key: int, read_ts: Optional[int] = None

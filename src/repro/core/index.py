@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core.addressing import NULL, TS_INF, StoreConfig
-from repro.core.store import GraphStore, visible
+from repro.core.store import GraphStore, visible, window_shard_major
 
 _C1 = np.int32(-1640531527)   # 2654435769: Knuth multiplicative
 _C2 = np.int32(-2048144789)   # murmur3 c1-ish odd constant
@@ -57,7 +57,8 @@ def route_host(vtype: int, key: int, n_shards: int) -> int:
 
 
 def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
-           backend: backend_mod.Backend = backend_mod.REF):
+           backend: backend_mod.Backend = backend_mod.REF,
+           xd_win: int = None):
     """Batched primary-index probe at a snapshot (global-array mode).
 
     Returns (gids, found): gid of the live vertex for each (vtype, key), or
@@ -68,6 +69,14 @@ def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
     ``read_ts`` is a scalar snapshot, or a ``(Q,)`` vector of per-query
     snapshots (the multi-query planner fuses queries pinned at different
     MVCC timestamps into one probe wave).
+
+    ``xd_win`` is a static per-shard window on the index-delta scan: the
+    delta fills prefix-first per shard (host count mirrors are exact), so
+    scanning ``[:W]`` of each shard block sees every live entry — slots
+    beyond the fill hold ``xd_gid == NULL`` and can never match.  ``None``
+    scans the full ``cap_idx_delta`` (identical results, more work); callers
+    pass ``planner.index_window(db)``, pow2-rounded so program-cache keys
+    only change when the fill band crosses a boundary.
 
     The pallas backend probes every shard block in one streamed pass of the
     sorted_lookup kernel (window-ranged compare-and-count); the ref backend
@@ -103,21 +112,23 @@ def lookup(store: GraphStore, cfg: StoreConfig, vtypes, keys, valid, read_ts,
     g_main = jnp.where(valid, best_g, NULL)
     ts_main = jnp.where(valid, best_ts, -1)
 
-    # delta scan (small): (Q, XD) match matrix, newest visible entry wins
-    XD = store.xd_vtype.shape[0]
-    xd_shard = jnp.arange(XD, dtype=jnp.int32) // cap_xd
+    # delta scan (small): (Q, S*W) match matrix, newest visible entry wins
+    W = cap_xd if xd_win is None else min(int(xd_win), cap_xd)
+    xd_vt, xd_k, xd_g, xd_c, xd_d = window_shard_major(
+        (store.xd_vtype, store.xd_key, store.xd_gid,
+         store.xd_create, store.xd_delete), S, cap_xd, W)
+    xd_shard = jnp.arange(S * W, dtype=jnp.int32) // W
     rts_row = read_ts[:, None] if jnp.ndim(read_ts) == 1 else read_ts
     m = (valid[:, None]
-         & (store.xd_vtype[None, :] == vtypes[:, None])
-         & (store.xd_key[None, :] == keys[:, None])
+         & (xd_vt[None, :] == vtypes[:, None])
+         & (xd_k[None, :] == keys[:, None])
          & (xd_shard[None, :] == shard[:, None])
-         & (store.xd_gid >= 0)[None, :]
-         & visible(store.xd_create[None, :], store.xd_delete[None, :],
-                   rts_row))
-    ts_d = jnp.where(m, store.xd_create[None, :], -1)
+         & (xd_g >= 0)[None, :]
+         & visible(xd_c[None, :], xd_d[None, :], rts_row))
+    ts_d = jnp.where(m, xd_c[None, :], -1)
     best_d = jnp.argmax(ts_d, axis=1)
     ts_delta = jnp.max(ts_d, axis=1)
-    g_delta = jnp.where(ts_delta >= 0, store.xd_gid[best_d], NULL)
+    g_delta = jnp.where(ts_delta >= 0, xd_g[best_d], NULL)
 
     use_delta = ts_delta > ts_main
     gids = jnp.where(use_delta, g_delta, g_main)

@@ -17,64 +17,31 @@ Supported constructs:
   * ``filter``                  — {"attr": name, "op": ..., "value": v}
   * ``select``                  — "count" | "*" | [attr, ...]  (terminal)
   * ``{"intersect": [q1, q2, ...], "select": ...}`` — star pattern (Q3):
-    vertices reached by *every* branch.
+    vertices reached by *every* branch.  Stars do not nest.
+  * ``hints``                   — {"frontier"|"expand"|"results"|"bucket":
+                                  n, ...}: per-plan §3.4 capacity overrides
+                                  (the paper's optional query hints map 1:1
+                                  onto our static working-set knobs).  May
+                                  sit at the terminal node and/or the query
+                                  root; per-key merge, root wins.  Stars
+                                  carry hints at the root only (branch
+                                  hints are a ParseError).
 
-The parser resolves names against the catalog and produces a :class:`Plan`
-(the paper's logical plan; A1 has no optimizer — "most queries are
-straightforward and executed without any optimization", and optional hints
-map 1:1 onto our static capacity knobs).
+The parser resolves names against the catalog and produces one typed
+logical-plan IR tree (:mod:`repro.core.query.ir`) per query — the paper's
+logical plan; A1 has no optimizer ("most queries are straightforward and
+executed without any optimization").  Chains and star patterns are the same
+tree shape; ``ir.lower`` produces the physical plan + runtime start keys the
+executors compile.  ``Plan``/``Hop``/``Pred`` are re-exported here for the
+executor layer.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-_OPS = ("==", "!=", "<", "<=", ">", ">=")
-
-
-@dataclasses.dataclass(frozen=True)
-class Pred:
-    kind: str        # 'f32' | 'i32' | 'key'
-    col: int
-    op: str
-    val: float
-
-
-@dataclasses.dataclass(frozen=True)
-class Hop:
-    direction: str               # 'out' | 'in'
-    etype: int                   # resolved edge-type id, -1 = any
-    target_vtype: int = -1       # -1 = unchecked
-    pred: Optional[Pred] = None
-
-
-@dataclasses.dataclass(frozen=True)
-class Plan:
-    start_vtype: int
-    hops: tuple[Hop, ...]
-    terminal: str                        # 'count' | 'select'
-    select_kind: tuple = ()              # per col: 'f32'|'i32'|'key'
-    select_cols: tuple = ()              # column ids (parallel to kinds)
-    branches: tuple["Plan", ...] = ()    # intersect-of-branches when set
-    final_pred: Optional[Pred] = None
-
-    @property
-    def is_intersect(self) -> bool:
-        return bool(self.branches)
-
-    def signature(self):
-        """Structural key for the compiled-executor cache."""
-        if self.is_intersect:
-            return ("intersect", tuple(b.signature() for b in self.branches),
-                    self.terminal, self.select_kind, self.select_cols,
-                    _psig(self.final_pred))
-        return ("chain", tuple((h.direction, _psig(h.pred)) for h in self.hops),
-                self.terminal, self.select_kind, self.select_cols,
-                _psig(self.final_pred))
-
-
-def _psig(p: Optional[Pred]):
-    return None if p is None else (p.kind, p.op)
+from repro.core.query import ir
+from repro.core.query.ir import (_OPS, CapHints, Hop,  # noqa: F401 (re-export)
+                                 Plan, Pred)
 
 
 class ParseError(ValueError):
@@ -91,53 +58,111 @@ def _parse_pred(db, vtype_name: Optional[str], node) -> Pred:
     return Pred(a.kind, a.col, op, float(val))
 
 
-def parse(db, q: dict) -> tuple[Plan, int]:
-    """Parse one A1QL document.  Returns (plan, start_key)."""
+_HINT_KEYS = ("frontier", "expand", "results", "bucket")
+
+
+def _parse_hints(node) -> CapHints:
+    h = node.get("hints")
+    if not h:
+        return ir.NO_HINTS
+    bad = set(h) - set(_HINT_KEYS)
+    if bad:
+        raise ParseError(f"unknown hint(s) {sorted(bad)}; "
+                         f"valid: {_HINT_KEYS}")
+    vals = {}
+    for k, v in h.items():
+        try:
+            iv = int(v)
+        except (TypeError, ValueError):
+            raise ParseError(f"hint {k!r} must be a positive int, "
+                             f"got {v!r}") from None
+        # reject bools and non-integral floats (int() would silently
+        # truncate 7.9 -> 7); integral floats (64.0) are fine — JSON
+        if isinstance(v, bool) or iv != v or iv <= 0:
+            raise ParseError(f"hint {k!r} must be a positive int, got {v!r}")
+        vals[k] = iv
+    return CapHints(**vals)
+
+
+def parse(db, q: dict):
+    """Parse one A1QL document into its logical-plan IR root."""
     if "intersect" in q:
-        parsed = [parse(db, b) for b in q["intersect"]]
-        plans = tuple(p for p, _ in parsed)
-        keys = [k for _, k in parsed]
-        term, kinds, cols = _parse_select(db, q)
-        fp = None
+        branches = []
+        for b in q["intersect"]:
+            if "intersect" in b:
+                raise ParseError("nested intersect is not supported")
+            body, leaf = _parse_chain(db, b)
+            if "hints" in b or "hints" in leaf[0]:
+                raise ParseError("hints belong on the star root, "
+                                 "not its branches")
+            branches.append(body)
+        node = ir.Intersect(branches=tuple(branches))
         if "filter" in q:
-            fp = _parse_pred(db, q.get("type"), q["filter"])
-        plan = Plan(start_vtype=-1, hops=(), terminal=term,
-                    select_kind=kinds, select_cols=cols, branches=plans,
-                    final_pred=fp)
-        return plan, keys          # list of per-branch start keys
+            node = ir.Filter(child=node,
+                             pred=_parse_pred(db, q.get("type"), q["filter"]))
+        return _terminal(db, q, node, vtype_name=q.get("type"))
+    body, leaf = _parse_chain(db, q)
+    if isinstance(body, ir.Scan):
+        raise ParseError("query needs at least one traversal step")
+    return _terminal(db, leaf[0], body, vtype_name=leaf[1], root=q)
+
+
+def _parse_chain(db, q: dict):
+    """Parse a chain document body.  Returns (body node, (leaf dict, leaf
+    vertex-type name)) — the leaf carries the terminal/final filter."""
     if "type" not in q or "id" not in q:
         raise ParseError("query must start with {'type', 'id'}")
     vt = db.vt(q["type"])
-    hops = []
     node = q
     vtype_name = q["type"]
-    term, kinds, cols, fp = "count", (), (), None
+    body = ir.Scan(vtype=vt.type_id, key=int(q["id"]))
     while True:
         edge_key = ("_out_edge" if "_out_edge" in node
                     else "_in_edge" if "_in_edge" in node else None)
         if edge_key is None:
-            term, kinds, cols = _parse_select(db, node,
-                                              vtype_name=vtype_name)
-            if "filter" in node and node is not q:
-                fp = _parse_pred(db, vtype_name, node["filter"])
-            break
+            return body, (node, vtype_name)
+        if node is not q and "hints" in node:
+            # ``node`` has an outgoing step, so it is an intermediate
+            # _target — hints only bind at the root or the terminal
+            raise ParseError("hints belong on the query root or the "
+                             "terminal node, not an intermediate step")
         e = node[edge_key]
         et_name = e.get("type", "*")
         etid = -1 if et_name == "*" else db.et(et_name).type_id
         tgt = e.get("_target", {})
         t_name = tgt.get("type")
         t_id = db.vt(t_name).type_id if t_name else -1
-        pred = (_parse_pred(db, t_name, tgt["filter"])
-                if "filter" in tgt else None)
-        hops.append(Hop(direction="out" if edge_key == "_out_edge" else "in",
-                        etype=etid, target_vtype=t_id, pred=pred))
+        body = ir.Expand(child=body,
+                         direction="out" if edge_key == "_out_edge" else "in",
+                         etype=etid, target_vtype=t_id)
+        if "filter" in tgt:
+            body = ir.Filter(child=body,
+                             pred=_parse_pred(db, t_name, tgt["filter"]))
         node = tgt
         vtype_name = t_name
-    if not hops:
-        raise ParseError("query needs at least one traversal step")
-    plan = Plan(start_vtype=vt.type_id, hops=tuple(hops), terminal=term,
-                select_kind=kinds, select_cols=cols, final_pred=fp)
-    return plan, int(q["id"])
+
+
+def _terminal(db, node, body, vtype_name: Optional[str], root=None):
+    term, kinds, cols = _parse_select(db, node, vtype_name=vtype_name)
+    hints = _parse_hints(node)
+    if root is not None and root is not node:
+        # chains: hints may sit at the terminal AND/OR the root; per-key
+        # merge with the ROOT winning, so a caller can wrap any document
+        # with an override (serve's continuation refills do exactly this)
+        hints = hints.override(_parse_hints(root))
+    if term == "count":
+        return ir.Count(child=body, hints=hints)
+    return ir.Select(child=body, kinds=kinds, cols=cols, hints=hints)
+
+
+def parse_legacy(db, q: dict):
+    """Historical entry point: returns ``(plan, start_key)`` for chains and
+    ``(plan, [branch keys])`` for stars.  Prefer :func:`parse` + ``ir.lower``.
+    """
+    lo = ir.lower(parse(db, q))
+    if lo.is_intersect:
+        return lo.plan, list(lo.keys)
+    return lo.plan, lo.keys[0]
 
 
 def _parse_select(db, node, vtype_name: Optional[str] = None):

@@ -182,13 +182,14 @@ def build_select(store: GraphStore, cfg: StoreConfig, plan: Plan,
 
 def _chain_frontier(store, cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                     keys, valid, read_ts,
-                    backend: backend_mod.Backend = backend_mod.REF):
+                    backend: backend_mod.Backend = backend_mod.REF,
+                    xwin: Optional[int] = None):
     """Run index lookup + all hops; returns final (qids, gids, valid, failed)."""
     Q = keys.shape[0]
     F = caps.frontier
     vt = jnp.full((Q,), plan.start_vtype, jnp.int32)
     gids, found = index_mod.lookup(store, cfg, vt, keys, valid, read_ts,
-                                   backend=backend)
+                                   backend=backend, xd_win=xwin)
     qids = jnp.arange(Q, dtype=jnp.int32)
     ok = valid & found
     pad = F - Q
@@ -238,14 +239,16 @@ def _terminal(store, cfg, plan, caps, qids, gids, vmask, read_ts, Q: int):
 
 def _run_intersect(store, cfg, plan: Plan, caps: QueryCaps, keys_b, valid,
                    read_ts, Q: int,
-                   backend: backend_mod.Backend = backend_mod.REF):
+                   backend: backend_mod.Backend = backend_mod.REF,
+                   xwin: Optional[int] = None):
     """Star-pattern intersection (Q3): keep vertices reached by all branches."""
     B = len(plan.branches)
     all_q, all_g, all_v = [], [], []
     failed = jnp.zeros((), bool)
     for bi, branch in enumerate(plan.branches):
         q, g, v, f = _chain_frontier(store, cfg, branch, caps,
-                                     keys_b[bi], valid, read_ts, backend)
+                                     keys_b[bi], valid, read_ts, backend,
+                                     xwin)
         failed = failed | f
         all_q.append(q)
         all_g.append(g)
@@ -273,8 +276,14 @@ CACHE_STATS = {"hits": 0, "misses": 0}
 
 def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                   n_queries: int,
-                  backend: backend_mod.Backend = backend_mod.REF):
-    key = (cfg, plan, caps, n_queries, backend, "local")
+                  backend: backend_mod.Backend = backend_mod.REF,
+                  xwin: Optional[int] = None):
+    """Build the jitted program for one plan shape (shared-budget batch).
+
+    ``xwin`` is the static primary-index delta window (see
+    ``planner.index_window``) — semantics-preserving (skipped slots are
+    provably empty), part of the cache key like the planner's ``dwin``."""
+    key = (cfg, plan, caps, n_queries, backend, xwin, "local")
     if key in _CACHE:
         CACHE_STATS["hits"] += 1
         return _CACHE[key]
@@ -284,14 +293,15 @@ def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
         @jax.jit
         def run(store, keys_b, valid, read_ts):
             out, failed = _run_intersect(store, cfg, plan, caps, keys_b,
-                                         valid, read_ts, n_queries, backend)
+                                         valid, read_ts, n_queries, backend,
+                                         xwin)
             out["failed"] = failed
             return out
     else:
         @jax.jit
         def run(store, keys, valid, read_ts):
             q, g, v, failed = _chain_frontier(store, cfg, plan, caps, keys,
-                                              valid, read_ts, backend)
+                                              valid, read_ts, backend, xwin)
             out = _terminal(store, cfg, plan, caps, q, g, v, read_ts,
                             n_queries)
             out["failed"] = failed
@@ -304,46 +314,18 @@ def compile_query(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
 def run_queries(db, queries: list[dict], caps: Optional[QueryCaps] = None,
                 backend: Optional[str] = None,
                 read_ts: Optional[int] = None) -> QueryResult:
-    """Host entry point: parse, group by plan shape, execute, assemble.
+    """Deprecated shim: use ``GraphDB.query`` / ``engine.execute``.
 
-    All queries in one call execute at one snapshot timestamp (the paper's
-    consistent global snapshot across the distributed graph); ``read_ts``
-    overrides the snapshot (must be a timestamp whose versions are still
-    pinned or current — the planner's parity suites replay history with it).
-
-    ``backend`` overrides the db's read-path backend ('ref'|'pallas'|'auto';
-    see core/backend.py for resolution).
+    Uniform batches keep the historical shared-budget semantics; mixed
+    batches route to the fused multi-query waves — exactly what
+    ``execute`` does with ``fused=None``.
     """
-    from repro.core.query.a1ql import parse
-    caps = caps or QueryCaps()
-    be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    read_ts = db.snapshot_ts() if read_ts is None else int(read_ts)
-    db.active_query_ts.append(read_ts)       # pin versions (GC barrier)
-    try:
-        plans = [parse(db, q) for q in queries]
-        plan0 = plans[0][0]
-        if any(p.signature() != plan0.signature() or p != plan0
-               for p, _ in plans[1:]):
-            # mixed batch: fuse same-operator steps across plan shapes into
-            # shared waves (core/query/planner.py), one program per batch
-            # shape instead of one dispatch per query
-            from repro.core.query.planner import run_queries_batched
-            return run_queries_batched(db, queries, caps, backend=backend,
-                                       read_ts=read_ts, parsed=plans)
-        Q = len(queries)
-        fn = compile_query(db.cfg, plan0, caps, Q, be)
-        if plan0.is_intersect:
-            keys_b = jnp.asarray(
-                np.array([[k[bi] for _, k in plans]
-                          for bi in range(len(plan0.branches))], np.int32))
-            out = fn(db.store, keys_b, jnp.ones((Q,), bool),
-                     jnp.int32(read_ts))
-        else:
-            keys = jnp.asarray(np.array([k for _, k in plans], np.int32))
-            out = fn(db.store, keys, jnp.ones((Q,), bool), jnp.int32(read_ts))
-        return _to_result(plan0, out)
-    finally:
-        db.active_query_ts.remove(read_ts)
+    import warnings
+    warnings.warn("run_queries is deprecated; use GraphDB.query(...) "
+                  "(core.query.engine.execute)", DeprecationWarning,
+                  stacklevel=2)
+    from repro.core.query.engine import execute
+    return execute(db, queries, caps=caps, backend=backend, read_ts=read_ts)
 
 
 def _to_result(plan: Plan, out: dict) -> QueryResult:

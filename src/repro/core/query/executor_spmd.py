@@ -49,14 +49,17 @@ from jax.sharding import PartitionSpec as P
 # ---------------------------------------------------------------------------
 
 def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
-                  read_ts, backend: backend_mod.Backend = backend_mod.REF):
+                  read_ts, backend: backend_mod.Backend = backend_mod.REF,
+                  xd_win: Optional[int] = None):
     """Primary-index probe against *my* index block.  Only queries whose key
 
     routes to me produce a gid; everyone else emits NULL (they find it on
     their own shard).  Inside shard_map the local index block is one sorted
     array, so the pallas backend probes the whole batch with a single
     sorted_lookup kernel call.  ``read_ts`` may be scalar or a per-query
-    ``(Q,)`` vector (fused multi-query waves)."""
+    ``(Q,)`` vector (fused multi-query waves).  ``xd_win`` statically
+    windows the index-delta scan to the host fill counts (see
+    ``planner.index_window``); slots beyond the window are provably empty."""
     S, cap_x, cap_xd = cfg.n_shards, cfg.cap_idx, cfg.cap_idx_delta
     mine = valid & (index_mod.route(vtypes, keys, S) == me)
     h = index_mod.mix32(vtypes, keys)
@@ -76,17 +79,21 @@ def _lookup_local(st: GraphStore, cfg: StoreConfig, me, vtypes, keys, valid,
         best_ts = jnp.where(newer, st.ix_create[p], best_ts)
     g_main = jnp.where(mine, best_g, NULL)
     ts_main = best_ts
-    # delta scan
+    # delta scan (inside shard_map the local block is one shard: window [:W])
+    W = cap_xd if xd_win is None else min(int(xd_win), cap_xd)
+    xd_vt, xd_k, xd_g, xd_c, xd_d = (
+        a[:W] for a in (st.xd_vtype, st.xd_key, st.xd_gid, st.xd_create,
+                        st.xd_delete))
     rts_row = read_ts[:, None] if jnp.ndim(read_ts) == 1 else read_ts
     m = (mine[:, None]
-         & (st.xd_vtype[None, :] == vtypes[:, None])
-         & (st.xd_key[None, :] == keys[:, None])
-         & (st.xd_gid >= 0)[None, :]
-         & visible(st.xd_create[None, :], st.xd_delete[None, :], rts_row))
-    ts_d = jnp.where(m, st.xd_create[None, :], -1)
+         & (xd_vt[None, :] == vtypes[:, None])
+         & (xd_k[None, :] == keys[:, None])
+         & (xd_g >= 0)[None, :]
+         & visible(xd_c[None, :], xd_d[None, :], rts_row))
+    ts_d = jnp.where(m, xd_c[None, :], -1)
     best_d = jnp.argmax(ts_d, axis=1)
     ts_delta = jnp.max(ts_d, axis=1)
-    g_delta = jnp.where(ts_delta >= 0, st.xd_gid[best_d], NULL)
+    g_delta = jnp.where(ts_delta >= 0, xd_g[best_d], NULL)
     return jnp.where(ts_delta > ts_main, g_delta, g_main)
 
 
@@ -200,7 +207,8 @@ def _route(qids, gids, valid, S: int, B: int, axes):
 # ---------------------------------------------------------------------------
 
 def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts,
-                backend: backend_mod.Backend = backend_mod.REF):
+                backend: backend_mod.Backend = backend_mod.REF,
+                xwin: Optional[int] = None):
     """Index scan + hops; returns local (qids, gids, valid, pending, failed).
 
     ``pending`` is the (vtype, pred) check owed to the *next* routing step —
@@ -210,7 +218,8 @@ def _spmd_chain(st, cfg, plan, caps, axes, keys, valid, read_ts,
     Q = keys.shape[0]
     me = jax.lax.axis_index(axes).astype(jnp.int32)
     vt = jnp.full((Q,), plan.start_vtype, jnp.int32)
-    g0 = _lookup_local(st, cfg, me, vt, keys, valid, read_ts, backend)
+    g0 = _lookup_local(st, cfg, me, vt, keys, valid, read_ts, backend,
+                       xd_win=xwin)
     qids = jnp.where(g0 >= 0, jnp.arange(Q, dtype=jnp.int32), NULL)
     pad = F - Q
     if pad < 0:
@@ -320,10 +329,14 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
                        n_queries: int, mesh,
                        storage_axes=("data", "model"),
                        query_axis: Optional[str] = None,
-                       backend: backend_mod.Backend = backend_mod.REF):
-    """Build the jitted SPMD query program for one plan shape."""
+                       backend: backend_mod.Backend = backend_mod.REF,
+                       xwin: Optional[int] = None):
+    """Build the jitted SPMD query program for one plan shape.
+
+    ``xwin``: static primary-index delta window (``planner.index_window``);
+    semantics-preserving, part of the program cache key."""
     key = (cfg, plan, caps, n_queries, id(mesh), storage_axes, query_axis,
-           backend)
+           backend, xwin)
     if key in _CACHE:
         CACHE_STATS["hits"] += 1
         return _CACHE[key]
@@ -344,7 +357,7 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
             for bi, br in enumerate(plan.branches):
                 q, g, v, pend, f = _spmd_chain(store, cfg, br, caps, axes,
                                                keys[bi], valid, read_ts,
-                                               backend)
+                                               backend, xwin)
                 # resolve each branch fully: route + check before intersect
                 S, F, Bk = cfg.n_shards, caps.frontier, caps.bucket
                 rq, rg, ovf = _route(q, g, v, S, Bk, axes)
@@ -374,7 +387,7 @@ def compile_query_spmd(cfg: StoreConfig, plan: Plan, caps: QueryCaps,
         else:
             q, g, v, pend, failed = _spmd_chain(store, cfg, plan, caps,
                                                 axes, keys, valid, read_ts,
-                                                backend)
+                                                backend, xwin)
             out = _finalize(store, cfg, plan, caps, axes, q, g, v, pend,
                             read_ts, n_queries, failed)
         if query_axis:
@@ -406,36 +419,15 @@ def run_queries_spmd(db, queries: list[dict], mesh,
                      backend: Optional[str] = None,
                      read_ts: Optional[int] = None,
                      parsed: Optional[list] = None) -> QueryResult:
-    """Host entry point mirroring executor.run_queries on a mesh.
+    """Deprecated shim: use ``GraphDB.query(..., mesh=...)``.
 
-    ``read_ts`` overrides the snapshot (still-pinned historical reads);
-    ``parsed`` is an optional pre-parsed ``[(plan, key), ...]`` list."""
-    from repro.core.query.a1ql import parse
-    from repro.core.query.executor import _to_result
-    caps = caps or QueryCaps()
-    be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    read_ts = db.snapshot_ts() if read_ts is None else int(read_ts)
-    db.active_query_ts.append(read_ts)
-    try:
-        plans = parsed if parsed is not None else [parse(db, q)
-                                                   for q in queries]
-        plan0 = plans[0][0]
-        if any(p != plan0 for p, _ in plans[1:]):
-            # mixed batch: fused multi-query waves (mirrors run_queries)
-            from repro.core.query.planner import run_queries_batched_spmd
-            return run_queries_batched_spmd(db, queries, mesh, caps,
-                                            storage_axes, backend,
-                                            read_ts=read_ts, parsed=plans)
-        Q = len(queries)
-        fn = compile_query_spmd(db.cfg, plan0, caps, Q, mesh, storage_axes,
-                                backend=be)
-        if plan0.is_intersect:
-            keys = jnp.asarray(np.array(
-                [[k[bi] for _, k in plans]
-                 for bi in range(len(plan0.branches))], np.int32))
-        else:
-            keys = jnp.asarray(np.array([k for _, k in plans], np.int32))
-        out = fn(db.store, keys, jnp.ones((Q,), bool), jnp.int32(read_ts))
-        return _to_result(plan0, out)
-    finally:
-        db.active_query_ts.remove(read_ts)
+    Uniform batches keep the historical shared-budget semantics; mixed
+    batches route to the fused multi-query waves — exactly what
+    ``engine.execute`` does with ``fused=None``."""
+    import warnings
+    warnings.warn("run_queries_spmd is deprecated; use "
+                  "GraphDB.query(..., mesh=...) (core.query.engine.execute)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.query.engine import execute
+    return execute(db, queries, caps=caps, backend=backend, read_ts=read_ts,
+                   mesh=mesh, storage_axes=storage_axes, parsed=parsed)

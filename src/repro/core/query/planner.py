@@ -5,42 +5,58 @@ operator waves over RDMA: every in-flight query contributes its probes and
 frontier expansions to one batched network round per operator, so per-query
 overhead amortizes across the fleet of users.  The executors in this package
 run one *plan shape* at a time; this module adds the serving-shaped layer on
-top: take a batch of arbitrary A1QL plans, group same-operator steps across
-queries, and execute each group as one fused wave program through the
-``core/backend.py`` seam.
+top: take a batch of arbitrary A1QL logical plans — chains *and* star
+patterns — group same-operator steps across queries, and execute each group
+as one fused wave program through the ``core/backend.py`` seam.
 
 Wave fusion
 -----------
-All chain plans that share a terminal signature fuse into **one** jitted
-program, regardless of hop count, edge types, directions, predicates, or
-per-query MVCC snapshots:
+All plans that share a terminal signature (and effective cap hints) fuse
+into **one** jitted program, regardless of hop count, edge types,
+directions, predicates, star-ness, or per-query MVCC snapshots.  The unit
+of wave fusion is the **chain unit**: a chain plan contributes one unit, a
+star (intersect) plan contributes one unit per branch, all sharing the
+query's segment id machinery:
 
-  * **lookup wave** — every query's ``(start_vtype, key)`` probe concatenated
+  * **lookup wave** — every unit's ``(start_vtype, key)`` probe concatenated
     into a single ``index.lookup`` call (one ``sorted_lookup`` kernel pass on
-    the pallas backend);
-  * **hop wave k** — every query whose plan has a k-th hop expands its
+    the pallas backend), with the primary-index delta scan windowed to the
+    host fill counts (:func:`index_window`);
+  * **hop wave k** — every unit whose chain has a k-th hop expands its
     frontier in one ``edge_expand`` tile plan per direction; frontier items
-    carry their query id (the per-query *segment id*), and edge types /
-    snapshot timestamps are per-segment vectors instead of scalars.  Queries
-    whose plans are already exhausted are *parked*: their frontier regions
-    ride along untouched until the terminal wave.
+    carry their unit id (the per-query *segment id*), and edge types /
+    snapshot timestamps are per-segment vectors instead of scalars.  Units
+    whose chains are already exhausted are *parked*: their frontier regions
+    ride along untouched until the terminal wave;
+  * **intersect-merge wave** — when the group contains star plans, one
+    merge step folds each query's branch regions into its final region:
+    branch rows are sorted-unique, so a sort + run-length pass keeps exactly
+    the gids reached by *every* branch.  Chains pass through unchanged
+    (their single "branch" trivially intersects with itself), so mixed
+    chain+star batches are still one fused program end to end.
 
-The fused frontier is a ``(Q, frontier)`` matrix — row q is query q's private
-region, holding its sorted-unique frontier gids.  Capacities therefore apply
-**per query** (exactly the budgets a per-query ``run_queries`` call would
-get), so results — including §3.4 fast-fail flags — are bit-identical to
-running each query alone, while MVCC timestamps stay independent per query.
-Star-pattern (intersect) plans are not fused yet; the planner runs each as
-its own single-query program.
+The fused frontier is a ``(R, frontier)`` matrix over the R chain units —
+row r is unit r's private region, holding its sorted-unique frontier gids.
+Capacities therefore apply **per unit** (exactly the budgets a per-query
+``compile_query`` call would give each chain / star branch), so results —
+including §3.4 fast-fail flags, OR-reduced over a star's branches — are
+bit-identical to running each query alone, while MVCC timestamps stay
+independent per query.
 
-Program caches are keyed on the *batch shape* — the tuple of plans (+caps,
-batch size, backend) — and hits/misses are observable via ``CACHE_STATS``,
-so serving loops can assert that a steady query mix never retraces.
+Program caches are keyed on the *batch shape* — the tuple of per-query
+plans (+caps, batch size, backend, delta windows) — and hits/misses are
+observable via ``CACHE_STATS``, so serving loops can assert that a steady
+query mix never retraces.
 
-The same wave structure runs distributed: ``run_queries_batched_spmd``
-builds one shard_map'd program per batch shape, with per-(query, owner)
-routing buckets, pending vertex checks deferred to the owner shard, and one
-final routing step for parked and active frontiers alike.
+The same wave structure runs distributed: ``compile_batch_spmd`` builds one
+shard_map'd program per batch shape, with per-(unit, owner) routing
+buckets, pending vertex checks deferred to the owner shard, one final
+routing step for parked and active frontiers alike, and the intersect merge
+running shard-locally (each gid has one owner, so local intersection is
+global intersection).
+
+Entry point: ``core.query.engine.execute`` (exported as ``GraphDB.query``);
+``run_queries_batched(_spmd)`` remain as deprecated shims.
 """
 from __future__ import annotations
 
@@ -60,7 +76,7 @@ from repro.core.edges import TILE
 from repro.core.query.a1ql import Plan, Pred
 from repro.core.query.executor import (I32MAX, QueryCaps, QueryResult,
                                        eval_pred)
-from repro.core.store import GraphStore, visible
+from repro.core.store import GraphStore, visible, window_shard_major
 
 PAD = I32MAX    # empty frontier slot; sorts last, keeps rows ascending
 
@@ -71,38 +87,38 @@ PAD = I32MAX    # empty frontier slot; sorts last, keeps rows ascending
 
 @dataclasses.dataclass
 class _Wave:
-    """Per-wave static tables: one entry per query in the batch."""
-    act: np.ndarray        # (Q,) bool  — query has a hop at this wave
-    is_out: np.ndarray     # (Q,) bool  — hop direction (False = 'in')
-    etype: np.ndarray      # (Q,) i32   — edge type to follow (-1 = any)
-    tvt: np.ndarray        # (Q,) i32   — target vtype check (-1 = none)
-    preds: list            # [(Pred, (Q,) bool qmask)] — hop predicates
+    """Per-wave static tables: one entry per chain unit in the batch."""
+    act: np.ndarray        # (R,) bool  — unit has a hop at this wave
+    is_out: np.ndarray     # (R,) bool  — hop direction (False = 'in')
+    etype: np.ndarray      # (R,) i32   — edge type to follow (-1 = any)
+    tvt: np.ndarray        # (R,) i32   — target vtype check (-1 = none)
+    preds: list            # [(Pred, (R,) bool mask)] — hop predicates
     any_out: bool
     any_in: bool
 
 
 def _pred_groups(entries) -> list:
-    """Group (query_index, Pred) pairs by identical predicate."""
+    """Group (row_index, Pred) pairs by identical predicate."""
     groups: dict = {}
     for qi, pred, n in entries:
         groups.setdefault(pred, np.zeros(n, bool))[qi] = True
     return list(groups.items())
 
 
-def _wave_tables(plans: Sequence[Plan]) -> list[_Wave]:
-    Q = len(plans)
-    W = max(len(p.hops) for p in plans)
+def _wave_tables(chains: Sequence[Plan]) -> list[_Wave]:
+    R = len(chains)
+    W = max(len(p.hops) for p in chains)
     waves = []
     for w in range(W):
-        act = np.array([len(p.hops) > w for p in plans])
+        act = np.array([len(p.hops) > w for p in chains])
         is_out = np.array([len(p.hops) > w and p.hops[w].direction == "out"
-                           for p in plans])
+                           for p in chains])
         etype = np.array([p.hops[w].etype if len(p.hops) > w else -1
-                          for p in plans], np.int32)
+                          for p in chains], np.int32)
         tvt = np.array([p.hops[w].target_vtype if len(p.hops) > w else -1
-                        for p in plans], np.int32)
-        preds = _pred_groups([(qi, p.hops[w].pred, Q)
-                              for qi, p in enumerate(plans)
+                        for p in chains], np.int32)
+        preds = _pred_groups([(ri, p.hops[w].pred, R)
+                              for ri, p in enumerate(chains)
                               if len(p.hops) > w and p.hops[w].pred])
         waves.append(_Wave(act=act, is_out=is_out, etype=etype, tvt=tvt,
                            preds=preds, any_out=bool((act & is_out).any()),
@@ -115,16 +131,37 @@ def _final_pred_groups(plans: Sequence[Plan]) -> list:
                          for qi, p in enumerate(plans) if p.final_pred])
 
 
+def _unit_tables(plans: Sequence[Plan]):
+    """Flatten per-query plans into chain units + the query<->row maps.
+
+    Returns (chains, row2q, n_br, rows_of_q) where ``rows_of_q[q]`` lists
+    query q's unit rows padded with R (the all-PAD ghost row)."""
+    chains, row2q = [], []
+    for qi, p in enumerate(plans):
+        for br in p.chain_units():
+            chains.append(br)
+            row2q.append(qi)
+    R = len(chains)
+    n_br = np.asarray([len(p.chain_units()) for p in plans], np.int32)
+    rows_of_q = np.full((len(plans), int(n_br.max())), R, np.int32)
+    r = 0
+    for qi, p in enumerate(plans):
+        for bi in range(int(n_br[qi])):
+            rows_of_q[qi, bi] = r
+            r += 1
+    return chains, np.asarray(row2q, np.int32), n_br, rows_of_q
+
+
 # ---------------------------------------------------------------------------
 # fused wave primitives (shared by the local and SPMD programs)
 # ---------------------------------------------------------------------------
 
 def _dedup_rows(cand_g, cand_v, F: int):
-    """Per-query dedup/compact: (Q, W) candidates -> (Q, F) regions.
+    """Per-unit dedup/compact: (R, W) candidates -> (R, F) regions.
 
-    Row q ends up with its first F unique gids in ascending order (PAD
-    beyond), exactly what ``dedup_compact`` produces for query q alone.
-    Returns (gids, valid, overflow_q)."""
+    Row r ends up with its first F unique gids in ascending order (PAD
+    beyond), exactly what ``dedup_compact`` produces for the unit alone.
+    Returns (gids, valid, overflow_r)."""
     Q = cand_g.shape[0]
     key = jnp.where(cand_v, cand_g, PAD)
     key_s = jax.lax.sort(key, dimension=1)
@@ -144,12 +181,12 @@ def _dedup_rows(cand_g, cand_v, F: int):
 
 def _expand_rows(start, deg, pools, et_q, ts_q, E: int,
                  backend: backend_mod.Backend):
-    """Fused CSR expansion: (Q, F) spans -> (Q, E) neighbor matrix.
+    """Fused CSR expansion: (R, F) spans -> (R, E) neighbor matrix.
 
-    Row q receives the first E raw span entries of query q's frontier —
-    masked by per-query MVCC visibility (``ts_q``) and edge type (``et_q``)
+    Row r receives the first E raw span entries of unit r's frontier —
+    masked by per-unit MVCC visibility (``ts_q``) and edge type (``et_q``)
     — at exactly the positions the per-query reference path computes, so
-    both backends emit bit-identical buffers (a per-query budget clamp on
+    both backends emit bit-identical buffers (a per-unit budget clamp on
     the tile plan makes even the overflow truncation match).
     """
     nbr, typ, ecre, edel = pools
@@ -157,8 +194,8 @@ def _expand_rows(start, deg, pools, et_q, ts_q, E: int,
     cum = jnp.cumsum(deg, axis=1)
     excl = cum - deg
     if backend.is_pallas:
-        # one tile plan for the whole wave; each query's span budget is
-        # clamped to its remaining E so no query can starve another's tiles
+        # one tile plan for the whole wave; each unit's span budget is
+        # clamped to its remaining E so no unit can starve another's tiles
         deg_eff = jnp.clip(E - excl, 0, deg)
         cap_tiles = Q * (min(F, E) + 1 + (E + TILE - 1) // TILE)
         (nbr_t, typ_t, cre_t, del_t), item, tw, _ = backend_mod.expand_tiles(
@@ -198,12 +235,12 @@ def _expand_rows(start, deg, pools, et_q, ts_q, E: int,
 
 
 def _delta_rows(key_rows, m, d_key, dnbr, dtyp, dcre, ddel, et_q, ts_q):
-    """Per-query delta-log matches: (Q, F) regions x (D,) log -> (Q, D).
+    """Per-unit delta-log matches: (R, F) regions x (D,) log -> (R, D).
 
     Frontier regions hold sorted-unique keys, so each delta entry matches at
-    most one slot per query — a row-wise binary search replaces the
+    most one slot per unit — a row-wise binary search replaces the
     (F x D) match matrix the single-query path materializes, with identical
-    per-query match sets."""
+    per-unit match sets."""
     Q, F = key_rows.shape
     pos = jax.vmap(lambda row, v: jnp.searchsorted(row, v))(
         key_rows, jnp.broadcast_to(d_key, (Q,) + d_key.shape))
@@ -218,11 +255,11 @@ def _delta_rows(key_rows, m, d_key, dnbr, dtyp, dcre, ddel, et_q, ts_q):
 
 
 def _check_rows(st, rows, valid, ts_q, tvt_q, preds):
-    """Fused liveness/type/predicate check on (Q, F) frontier regions.
+    """Fused liveness/type/predicate check on (R, F) frontier regions.
 
     ``rows`` indexes the vertex arrays of ``st`` (global store or a
-    shard_map local block); ``tvt_q``/``preds`` are per-query tables —
-    parked queries carry -1 / no predicate, so only re-(idempotent)
+    shard_map local block); ``tvt_q``/``preds`` are per-unit tables —
+    parked units carry -1 / no predicate, so only re-(idempotent)
     liveness applies to them."""
     ts2 = ts_q[:, None]
     alive = valid & visible(st.v_create[rows], st.v_delete[rows], ts2)
@@ -237,6 +274,37 @@ def _check_rows(st, rows, valid, ts_q, tvt_q, preds):
             pm = jnp.asarray(qmask)[:, None]
             alive = alive & (~pm | eval_pred(pred, f, i, keys))
     return alive
+
+
+def _merge_rows(g, valid, n_br, rows_of_q, F: int):
+    """The intersect-merge wave: (R, F) unit regions -> (Q, F) query regions.
+
+    Each query keeps the gids present in *every* one of its branch rows
+    (run length == branch count after a sort of the gathered rows; branch
+    rows are sorted-unique, so multiplicity == branch coverage).  Chains
+    (one branch) pass through unchanged modulo compaction.  The merged
+    region cannot overflow: a full-coverage gid consumes one slot per
+    branch, so uniques with full runs never exceed F."""
+    Q, Bmax = rows_of_q.shape
+    gp = jnp.concatenate([jnp.where(valid, g, PAD),
+                          jnp.full((1, F), PAD, jnp.int32)], axis=0)
+    key = gp[jnp.asarray(rows_of_q)].reshape(Q, Bmax * F)
+    key_s = jax.lax.sort(key, dimension=1)
+    valid_s = key_s != PAD
+    prev = jnp.concatenate([jnp.full((Q, 1), -1, key_s.dtype),
+                            key_s[:, :-1]], axis=1)
+    first = valid_s & (key_s != prev)
+    lo = jax.vmap(lambda r: jnp.searchsorted(r, r, side="left"))(key_s)
+    hi = jax.vmap(lambda r: jnp.searchsorted(r, r, side="right"))(key_s)
+    run = (hi - lo).astype(jnp.int32)
+    keep = first & (run == jnp.asarray(n_br)[:, None])
+    ki = keep.astype(jnp.int32)
+    col = jnp.where(keep, jnp.cumsum(ki, axis=1) - ki, Bmax * F)
+    rows = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None],
+                            col.shape)
+    out = jnp.full((Q, F), PAD, jnp.int32).at[rows, col].set(
+        key_s, mode="drop")
+    return out, out != PAD
 
 
 def _select_rows(st, rows, g, valid, ts_q, select, K: int):
@@ -303,7 +371,7 @@ def _pow2ceil(n: int) -> int:
 
 
 def delta_window(db) -> int:
-    """Static per-shard delta-log window for the next fused program.
+    """Static per-shard edge-delta-log window for the next fused program.
 
     The delta logs fill prefix-first per shard (host count mirrors are
     exact), so scanning ``[:W]`` of each shard block sees every live entry.
@@ -314,22 +382,32 @@ def delta_window(db) -> int:
     return min(_pow2ceil(n), db.cfg.cap_delta)
 
 
-def _delta_windowed(arrs, S: int, cap_delta: int, W: int):
-    """Slice shard-major (S*cap_delta,) delta arrays to (S*W,)."""
-    return tuple(a.reshape(S, cap_delta)[:, :W].reshape(-1) for a in arrs)
+def index_window(db) -> int:
+    """Static per-shard primary-index delta window (same contract as
+    :func:`delta_window`, for the ``index.lookup`` delta scan — the
+    ``xd_*`` arrays fill prefix-first per shard and index compaction
+    resets them)."""
+    n = int(max(db.xd_count.max(initial=0), 1))
+    return min(_pow2ceil(n), db.cfg.cap_idx_delta)
+
+
+# shared with index.lookup's xd-delta scan: store.window_shard_major
+_delta_windowed = window_shard_major
 
 
 def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                   backend: backend_mod.Backend = backend_mod.REF,
-                  dwin: Optional[int] = None):
+                  dwin: Optional[int] = None, xwin: Optional[int] = None):
     """Build the jitted fused-wave program for one batch shape.
 
-    ``plans`` is a tuple of chain plans sharing a terminal signature; keys
-    and per-query snapshot timestamps stay runtime data, so any same-shape
-    batch reuses the compiled program.  ``dwin`` is the static delta-log
-    window (see :func:`delta_window`)."""
+    ``plans`` is a tuple of logical plans (chains and/or stars) sharing a
+    terminal signature; start keys (one per chain unit, branch-major per
+    query) and per-query snapshot timestamps stay runtime data, so any
+    same-shape batch reuses the compiled program.  ``dwin``/``xwin`` are the
+    static edge / primary-index delta windows (see :func:`delta_window`,
+    :func:`index_window`)."""
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
-    key = (cfg, plans, caps, len(plans), backend, dwin, "local")
+    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, "local")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -337,19 +415,23 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     Q = len(plans)
     F, E, K = caps.frontier, caps.expand, caps.results
     S, cap_v, cap_e = cfg.n_shards, cfg.cap_v, cfg.cap_e
-    waves = _wave_tables(plans)
+    chains, row2q, n_br, rows_of_q = _unit_tables(plans)
+    R = len(chains)
+    has_star = any(p.is_intersect for p in plans)
+    waves = _wave_tables(chains)
     final_preds = _final_pred_groups(plans)
-    start_vt = jnp.asarray([p.start_vtype for p in plans], jnp.int32)
+    start_vt = jnp.asarray([c.start_vtype for c in chains], jnp.int32)
     terminal = plans[0].terminal
     select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
 
     @jax.jit
     def run(store, keys, valid_in, ts_q):
-        failed_q = jnp.zeros((Q,), bool)
-        # ---- lookup wave: one probe for the whole batch -------------------
+        ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
+        failed_r = jnp.zeros((R,), bool)
+        # ---- lookup wave: one probe for every chain unit ------------------
         gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
-                                        ts_q, backend=backend)
-        g = jnp.full((Q, F), PAD, jnp.int32).at[:, 0].set(
+                                        ts_r, backend=backend, xd_win=xwin)
+        g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(
             jnp.where(found & valid_in, gids0, PAD))
         valid = g != PAD
 
@@ -357,7 +439,7 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             act = jnp.asarray(wave.act)
             is_out = jnp.asarray(wave.is_out)
             et_q = jnp.asarray(wave.etype)
-            # parked queries carry their finished frontier through the wave
+            # parked units carry their finished frontier through the wave
             parts_g, parts_v = [g], [valid & ~act[:, None]]
             for direction, dmask, present in (
                     ("out", is_out, wave.any_out),
@@ -372,24 +454,31 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 iprow = shard * (cap_v + 1) + safe_g // S
                 start = indptr[iprow] + shard * cap_e
                 deg = (indptr[iprow + 1] - indptr[iprow]) * m
-                failed_q = failed_q | (jnp.sum(deg, axis=1) > E)
+                failed_r = failed_r | (jnp.sum(deg, axis=1) > E)
                 out_n = _expand_rows(start, deg, (nbr, typ, ecre, edel),
-                                     et_q, ts_q, E, backend)
+                                     et_q, ts_r, E, backend)
                 dslot, dnbr, dtyp, dcre, ddel = _delta_windowed(
                     edges_mod._delta_arrays(store, direction),
                     S, cfg.cap_delta, dwin)
                 D = dslot.shape[0]
                 d_gid = dslot * S + jnp.arange(D, dtype=jnp.int32) // dwin
                 dn = _delta_rows(g, m, d_gid, dnbr, dtyp, dcre, ddel,
-                                 et_q, ts_q)
+                                 et_q, ts_r)
                 parts_g += [out_n, dn]
                 parts_v += [out_n >= 0, dn >= 0]
             g, valid, ovf = _dedup_rows(jnp.concatenate(parts_g, axis=1),
                                         jnp.concatenate(parts_v, axis=1), F)
-            failed_q = failed_q | ovf
+            failed_r = failed_r | ovf
             rows = cfg.row_of_gid(jnp.where(valid, g, 0))
-            valid = valid & _check_rows(store, rows, valid, ts_q,
+            valid = valid & _check_rows(store, rows, valid, ts_r,
                                         jnp.asarray(wave.tvt), wave.preds)
+
+        # ---- intersect-merge wave (units -> queries) ----------------------
+        if has_star:
+            g, valid = _merge_rows(g, valid, n_br, rows_of_q, F)
+        failed_q = jax.ops.segment_sum(
+            failed_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
 
         # ---- terminal wave ------------------------------------------------
         if final_preds:
@@ -413,17 +502,6 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
 # ---------------------------------------------------------------------------
 # host entry points
 # ---------------------------------------------------------------------------
-
-def _normalize_ts(db, Q: int, read_ts) -> list[int]:
-    if read_ts is None:
-        return [db.snapshot_ts()] * Q
-    if isinstance(read_ts, (int, np.integer)):
-        return [int(read_ts)] * Q
-    ts = [int(t) for t in read_ts]
-    if len(ts) != Q:
-        raise ValueError(f"read_ts has {len(ts)} entries for {Q} queries")
-    return ts
-
 
 class _Assembly:
     """Scatter per-group results back into input order."""
@@ -449,14 +527,15 @@ class _Assembly:
             self.counts[idxs] = np.asarray(out["counts"])
         else:
             self._ensure_select()
-            self.rows_gid[idxs] = np.asarray(out["rows_gid"])
+            rg = np.asarray(out["rows_gid"])
+            self.rows_gid[idxs, :rg.shape[1]] = rg
             self.truncated[idxs] = np.asarray(out["truncated"])
             for k, v in out["attrs"].items():
+                v0 = np.asarray(v)
                 if k not in self.rows:
-                    v0 = np.asarray(v)
                     fill = NULL if k[0] == "key" else 0
                     self.rows[k] = np.full((self.Q, self.K), fill, v0.dtype)
-                self.rows[k][idxs] = np.asarray(v)
+                self.rows[k][idxs, :v0.shape[1]] = v0
 
     def result(self) -> QueryResult:
         return QueryResult(
@@ -465,23 +544,51 @@ class _Assembly:
             failed=bool(self.failed_q.any()), failed_q=self.failed_q)
 
 
-def _plan_groups(parsed) -> tuple[list[list[int]], list[int]]:
-    """Fusion groups: chains grouped by terminal signature; stars alone.
+def _fusion_groups(lowered, eff_caps):
+    """Fusion groups: plans grouped by terminal signature + effective caps
+    — chains and stars fuse together.
 
     Each group's indices are canonically ordered by plan, so any
     permutation of the same batch mix resolves to the same plans tuple —
     one compiled program, not one per arrival order."""
-    chain_groups: dict = {}
-    stars = []
-    for i, (p, _) in enumerate(parsed):
-        if p.is_intersect:
-            stars.append(i)
+    groups: dict = {}
+    for i, (lo, c) in enumerate(zip(lowered, eff_caps)):
+        p = lo.plan
+        groups.setdefault((p.terminal, p.select_kind, p.select_cols, c),
+                          []).append(i)
+    return [(key[3], sorted(idxs, key=lambda i: repr(lowered[i].plan)))
+            for key, idxs in groups.items()]
+
+
+def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
+                  be: backend_mod.Backend, mesh=None,
+                  storage_axes=("data", "model")) -> QueryResult:
+    """Run pre-lowered plans as fused multi-query waves (per-query budgets).
+
+    The engine (``core.query.engine.execute``) owns parsing, snapshot
+    pinning, and routing; this is the fused leg.  Every query gets its
+    *own* §3.4 capacity budget and MVCC snapshot, arbitrary plan shapes —
+    chains and stars — fuse into one program per (terminal signature,
+    effective caps) group, and results (with per-query ``failed_q`` flags)
+    are bit-identical to running each query through the per-plan executor
+    alone."""
+    Q = len(lowered)
+    out = _Assembly(Q, max(c.results for c in eff_caps))
+    dwin = delta_window(db)
+    xwin = index_window(db)
+    for caps_g, idxs in _fusion_groups(lowered, eff_caps):
+        plans_g = tuple(lowered[i].plan for i in idxs)
+        keys = jnp.asarray([k for i in idxs for k in lowered[i].keys],
+                           jnp.int32)
+        ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
+        R = int(keys.shape[0])
+        if mesh is not None:
+            fn = compile_batch_spmd(db.cfg, plans_g, caps_g, mesh,
+                                    storage_axes, be, dwin, xwin)
         else:
-            key = (p.terminal, p.select_kind, p.select_cols)
-            chain_groups.setdefault(key, []).append(i)
-    groups = [sorted(idxs, key=lambda i: repr(parsed[i][0]))
-              for idxs in chain_groups.values()]
-    return groups, stars
+            fn = compile_batch(db.cfg, plans_g, caps_g, be, dwin, xwin)
+        out.put(idxs, fn(db.store, keys, jnp.ones((R,), bool), ts))
+    return out.result()
 
 
 def run_queries_batched(db, queries: list[dict],
@@ -489,53 +596,31 @@ def run_queries_batched(db, queries: list[dict],
                         backend: Optional[str] = None,
                         read_ts: Union[None, int, Sequence[int]] = None,
                         parsed: Optional[list] = None) -> QueryResult:
-    """Execute a batch of A1QL queries as fused multi-query waves.
+    """Deprecated shim: use ``GraphDB.query(..., fused=True)``."""
+    import warnings
+    warnings.warn("run_queries_batched is deprecated; use "
+                  "GraphDB.query(..., fused=True)", DeprecationWarning,
+                  stacklevel=2)
+    from repro.core.query.engine import execute
+    return execute(db, queries, caps=caps, backend=backend, read_ts=read_ts,
+                   parsed=parsed, fused=True)
 
-    Unlike :func:`executor.run_queries` (one plan shape, shared working-set
-    budget), every query here gets its *own* §3.4 capacity budget and MVCC
-    snapshot, and arbitrary chain shapes fuse into one program per terminal
-    signature.  Results (and per-query ``failed_q`` flags) are bit-identical
-    to running each query through ``run_queries`` alone.
 
-    ``read_ts``: None (one fresh snapshot), a scalar, or per-query
-    timestamps — mixed-snapshot batches execute in one wave program.
-    ``parsed``: optional pre-parsed ``[(plan, key), ...]`` (callers that
-    already parsed to route here need not pay the parse twice).
-    """
-    from repro.core.query.a1ql import parse
-    from repro.core.query import executor as _ex
-    caps = caps or QueryCaps()
-    be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    Q = len(queries)
-    parsed = parsed if parsed is not None else [parse(db, q)
-                                               for q in queries]
-    ts_list = _normalize_ts(db, Q, read_ts)
-    pins = sorted(set(ts_list))
-    for t in pins:                          # pin versions (GC barrier)
-        db.active_query_ts.append(t)
-    try:
-        groups, stars = _plan_groups(parsed)
-        out = _Assembly(Q, caps.results)
-        dwin = delta_window(db)
-        for idxs in groups:
-            plans_g = tuple(parsed[i][0] for i in idxs)
-            keys = jnp.asarray([parsed[i][1] for i in idxs], jnp.int32)
-            ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
-            fn = compile_batch(db.cfg, plans_g, caps, be, dwin)
-            out.put(idxs, fn(db.store, keys, jnp.ones((len(idxs),), bool),
-                             ts))
-        for i in stars:                     # star patterns: not fused yet
-            plan, keys_b = parsed[i]
-            fn = _ex.compile_query(db.cfg, plan, caps, 1, be)
-            kb = jnp.asarray(np.array([[k] for k in keys_b], np.int32))
-            r = fn(db.store, kb, jnp.ones((1,), bool),
-                   jnp.int32(ts_list[i]))
-            r = dict(r, failed_q=jnp.asarray([r["failed"]]))
-            out.put([i], r)
-        return out.result()
-    finally:
-        for t in pins:
-            db.active_query_ts.remove(t)
+def run_queries_batched_spmd(db, queries: list[dict], mesh,
+                             caps: Optional[QueryCaps] = None,
+                             storage_axes=("data", "model"),
+                             backend: Optional[str] = None,
+                             read_ts: Union[None, int, Sequence[int]] = None,
+                             parsed: Optional[list] = None) -> QueryResult:
+    """Deprecated shim: use ``GraphDB.query(..., mesh=..., fused=True)``."""
+    import warnings
+    warnings.warn("run_queries_batched_spmd is deprecated; use "
+                  "GraphDB.query(..., mesh=..., fused=True)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.query.engine import execute
+    return execute(db, queries, caps=caps, backend=backend, read_ts=read_ts,
+                   parsed=parsed, mesh=mesh, storage_axes=storage_axes,
+                   fused=True)
 
 
 # ---------------------------------------------------------------------------
@@ -543,11 +628,11 @@ def run_queries_batched(db, queries: list[dict],
 # ---------------------------------------------------------------------------
 
 def _route_rows(g, m, S: int, B: int, axes):
-    """Fused routing: (Q, F) pairs -> all_to_all -> (Q, S*B) arrivals.
+    """Fused routing: (R, F) pairs -> all_to_all -> (R, S*B) arrivals.
 
-    Buckets are per (query, owner) — B slots each, the per-query analogue of
+    Buckets are per (unit, owner) — B slots each, the per-query analogue of
     ``caps.bucket`` — so one hot query cannot evict another's RPCs.  Returns
-    (arrived_gids, arrived_mask, overflow_q)."""
+    (arrived_gids, arrived_mask, overflow_r)."""
     Q, F = g.shape
     ow = jnp.where(m, g % S, S)
     ow_s, g_s = jax.lax.sort((ow, g), dimension=1, num_keys=1)
@@ -573,16 +658,18 @@ def _route_rows(g, m, S: int, B: int, axes):
 def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                        mesh, storage_axes=("data", "model"),
                        backend: backend_mod.Backend = backend_mod.REF,
-                       dwin: Optional[int] = None):
+                       dwin: Optional[int] = None,
+                       xwin: Optional[int] = None):
     """Fused-wave program on a mesh: the §3.4 coordinator/worker protocol
-    for a whole heterogeneous batch in one SPMD program."""
+    for a whole heterogeneous batch — stars included — in one SPMD
+    program."""
     from jax.sharding import PartitionSpec as P
     from repro.core.query.executor_spmd import _lookup_local
     from repro.dist import compat
 
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
     key = (cfg, plans, caps, len(plans), id(mesh), storage_axes, backend,
-           dwin, "spmd")
+           dwin, xwin, "spmd")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -591,15 +678,18 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     F, E, B, K = caps.frontier, caps.expand, caps.bucket, caps.results
     S = cfg.n_shards
     axes = storage_axes
-    waves = _wave_tables(plans)
+    chains, row2q, n_br, rows_of_q = _unit_tables(plans)
+    R = len(chains)
+    has_star = any(p.is_intersect for p in plans)
+    waves = _wave_tables(chains)
     final_preds = _final_pred_groups(plans)
-    start_vt_np = np.array([p.start_vtype for p in plans], np.int32)
+    start_vt_np = np.array([c.start_vtype for c in chains], np.int32)
     terminal = plans[0].terminal
     select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
     # pending owner-side checks: wave w validates what wave w-1 emitted
-    # (w=0 validates the index scan's start vertices); queries parked at
+    # (w=0 validates the index scan's start vertices); units parked at
     # wave w keep -1/no-pred entries.  The *last* hop's check runs in the
-    # finalize step, after the final routing — per query.
+    # finalize step, after the final routing — per unit.
     pend_tvt, pend_preds = [], []
     for w in range(len(waves)):
         if w == 0:
@@ -607,25 +697,26 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             pend_preds.append([])
         else:
             pend_tvt.append(np.array(
-                [p.hops[w - 1].target_vtype if len(p.hops) > w else -1
-                 for p in plans], np.int32))
+                [c.hops[w - 1].target_vtype if len(c.hops) > w else -1
+                 for c in chains], np.int32))
             pend_preds.append(_pred_groups(
-                [(qi, p.hops[w - 1].pred, Q) for qi, p in enumerate(plans)
-                 if len(p.hops) > w and p.hops[w - 1].pred]))
-    fin_tvt = np.array([p.hops[-1].target_vtype for p in plans], np.int32)
-    fin_preds = _pred_groups([(qi, p.hops[-1].pred, Q)
-                              for qi, p in enumerate(plans)
-                              if p.hops[-1].pred])
+                [(ri, c.hops[w - 1].pred, R) for ri, c in enumerate(chains)
+                 if len(c.hops) > w and c.hops[w - 1].pred]))
+    fin_tvt = np.array([c.hops[-1].target_vtype for c in chains], np.int32)
+    fin_preds = _pred_groups([(ri, c.hops[-1].pred, R)
+                              for ri, c in enumerate(chains)
+                              if c.hops[-1].pred])
 
     def _local_rows(st, g, valid):
         return jnp.where(valid, g // S, 0)
 
     def body(st, keys, valid_in, ts_q):
         me = jax.lax.axis_index(axes).astype(jnp.int32)
-        failed_q = jnp.zeros((Q,), bool)
+        ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
+        failed_r = jnp.zeros((R,), bool)
         g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
-                           valid_in, ts_q, backend)
-        g = jnp.full((Q, F), PAD, jnp.int32).at[:, 0].set(
+                           valid_in, ts_r, backend, xd_win=xwin)
+        g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(
             jnp.where(g0 >= 0, g0, PAD))
         valid = g != PAD
 
@@ -635,11 +726,11 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             et_q = jnp.asarray(wave.etype)
             # 1) batched RPCs: ship active pairs to their owners
             arr, am, ovf = _route_rows(g, valid & act[:, None], S, B, axes)
-            failed_q = failed_q | ovf
+            failed_r = failed_r | ovf
             ag, am, ovf2 = _dedup_rows(arr, am, F)
-            failed_q = failed_q | ovf2
+            failed_r = failed_r | ovf2
             # 2) owner-side pending checks (previous hop's vertex checks)
-            alive = am & _check_rows(st, _local_rows(st, ag, am), am, ts_q,
+            alive = am & _check_rows(st, _local_rows(st, ag, am), am, ts_r,
                                      jnp.asarray(pend_tvt[w]),
                                      pend_preds[w])
             # 3) worker step: enumerate edges from my CSR block + delta log
@@ -668,28 +759,39 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 slot = jnp.where(m, ag // S, 0)
                 start = indptr[slot]
                 deg = (indptr[slot + 1] - indptr[slot]) * m
-                failed_q = failed_q | (jnp.sum(deg, axis=1) > E)
+                failed_r = failed_r | (jnp.sum(deg, axis=1) > E)
                 out_n = _expand_rows(start, deg, (nbr, typ, ecre, edel),
-                                     et_q, ts_q, E, backend)
+                                     et_q, ts_r, E, backend)
                 # inside shard_map the delta block is one shard: window [:W]
                 dslot, dnbr, dtyp, dcre, ddel = (
                     a[:dwin] for a in (dslot, dnbr, dtyp, dcre, ddel))
                 dn = _delta_rows(ag // S, m, dslot, dnbr, dtyp, dcre, ddel,
-                                 et_q, ts_q)
+                                 et_q, ts_r)
                 parts_g += [out_n, dn]
                 parts_v += [out_n >= 0, dn >= 0]
             g, valid, ovf3 = _dedup_rows(jnp.concatenate(parts_g, axis=1),
                                          jnp.concatenate(parts_v, axis=1), F)
-            failed_q = failed_q | ovf3
+            failed_r = failed_r | ovf3
 
-        # ---- finalize: route everything, owed checks, aggregate -----------
+        # ---- finalize: route everything, owed checks, merge, aggregate ----
         arr, am, ovf = _route_rows(g, valid, S, B, axes)
-        failed_q = failed_q | ovf
+        failed_r = failed_r | ovf
         ag, valid, ovf2 = _dedup_rows(arr, am, F)
-        failed_q = failed_q | ovf2
+        failed_r = failed_r | ovf2
         rows_l = _local_rows(st, ag, valid)
-        valid = valid & _check_rows(st, rows_l, valid, ts_q,
+        valid = valid & _check_rows(st, rows_l, valid, ts_r,
                                     jnp.asarray(fin_tvt), fin_preds)
+        # intersect-merge is shard-local: every branch's copy of a gid
+        # lives on the gid's owner shard (ownership routing = equi-join
+        # locality), so local run-length == global branch coverage
+        if has_star:
+            g2, valid = _merge_rows(ag, valid, n_br, rows_of_q, F)
+        else:
+            g2 = ag
+        rows_l = _local_rows(st, g2, valid)
+        failed_q = jax.ops.segment_sum(
+            failed_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
         if final_preds:
             valid = valid & _check_rows(st, rows_l, valid, ts_q,
                                         jnp.full((Q,), -1, jnp.int32),
@@ -715,7 +817,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                                 pos.shape)
         col = jnp.where(keep, pos, K)
         rows_gid = jnp.zeros((Q, K), jnp.int32).at[rowi, col].set(
-            jnp.where(valid, ag, 0) + 1, mode="drop")
+            jnp.where(valid, g2, 0) + 1, mode="drop")
         rows_gid = jax.lax.psum(rows_gid, axes) - 1           # 0 -> NULL
         trunc = jax.lax.psum(jnp.any(over, axis=1).astype(jnp.int32),
                              axes) > 0
@@ -754,49 +856,3 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
         out_specs=out_specs, check_vma=False))
     _cache_put(key, fn)
     return fn
-
-
-def run_queries_batched_spmd(db, queries: list[dict], mesh,
-                             caps: Optional[QueryCaps] = None,
-                             storage_axes=("data", "model"),
-                             backend: Optional[str] = None,
-                             read_ts: Union[None, int, Sequence[int]] = None,
-                             parsed: Optional[list] = None) -> QueryResult:
-    """Distributed :func:`run_queries_batched`: same grouping, same
-    per-query budgets/snapshots, executed as shard_map'd wave programs."""
-    from repro.core.query.a1ql import parse
-    from repro.core.query.executor_spmd import compile_query_spmd
-    caps = caps or QueryCaps()
-    be = backend_mod.resolve(backend or getattr(db, "backend", None))
-    Q = len(queries)
-    parsed = parsed if parsed is not None else [parse(db, q)
-                                               for q in queries]
-    ts_list = _normalize_ts(db, Q, read_ts)
-    pins = sorted(set(ts_list))
-    for t in pins:
-        db.active_query_ts.append(t)
-    try:
-        groups, stars = _plan_groups(parsed)
-        out = _Assembly(Q, caps.results)
-        dwin = delta_window(db)
-        for idxs in groups:
-            plans_g = tuple(parsed[i][0] for i in idxs)
-            keys = jnp.asarray([parsed[i][1] for i in idxs], jnp.int32)
-            ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
-            fn = compile_batch_spmd(db.cfg, plans_g, caps, mesh,
-                                    storage_axes, be, dwin)
-            out.put(idxs, fn(db.store, keys, jnp.ones((len(idxs),), bool),
-                             ts))
-        for i in stars:
-            plan, keys_b = parsed[i]
-            fn = compile_query_spmd(db.cfg, plan, caps, 1, mesh,
-                                    storage_axes, backend=be)
-            kb = jnp.asarray(np.array([[k] for k in keys_b], np.int32))
-            r = fn(db.store, kb, jnp.ones((1,), bool),
-                   jnp.int32(ts_list[i]))
-            r = dict(r, failed_q=jnp.asarray([r["failed"]]))
-            out.put([i], r)
-        return out.result()
-    finally:
-        for t in pins:
-            db.active_query_ts.remove(t)

@@ -177,6 +177,17 @@ def visible(create_ts, delete_ts, read_ts):
     return (create_ts <= read_ts) & (read_ts < delete_ts)
 
 
+def window_shard_major(arrs, S: int, cap: int, W: int):
+    """Slice shard-major ``(S*cap,)`` delta arrays to their ``(S*W,)``
+    fill-window prefix.
+
+    All delta logs (edge ``dl_*``/``il_*``, index ``xd_*``) fill
+    prefix-first per shard with exact host count mirrors, so scanning
+    ``[:W]`` of each shard block sees every live entry — the invariant
+    behind ``planner.delta_window`` / ``planner.index_window``."""
+    return tuple(a.reshape(S, cap)[:, :W].reshape(-1) for a in arrs)
+
+
 def gather_headers(store: GraphStore, cfg: StoreConfig, gids, read_ts):
     """Read vertex headers for an array of gids at snapshot ``read_ts``.
 

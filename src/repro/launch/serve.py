@@ -2,22 +2,27 @@
 
 Reproduces the paper's serving architecture end to end on one host:
 
-  * a frontend loop that batches incoming A1QL queries by plan shape
-    (the SLB -> frontend -> backend routing of Fig. 4);
+  * a frontend loop that batches incoming A1QL queries (the SLB -> frontend
+    -> backend routing of Fig. 4) through the unified ``GraphDB.query``
+    entry point — mixed plan shapes, chains *and* star patterns, execute as
+    fused multi-query waves (core/query/planner.py) instead of one dispatch
+    per query — the paper's "many concurrent queries share each operator
+    wave";
   * snapshot-timestamped execution with fast-fail + **continuation
     tokens** (§3.4: big result sets return a token; the frontend routes the
-    follow-up to the owning coordinator — here, the token indexes a TTL'd
-    host cache);
-  * mixed plan shapes in one batch: heterogeneous batches execute as fused
-    multi-query waves (core/query/planner.py) instead of one dispatch per
-    query — the paper's "many concurrent queries share each operator wave";
+    follow-up to the owning coordinator).  Tokens are continuation-aware
+    batch citizens: each token pins its snapshot and caches a result
+    window; when a client pages past the window, the follow-up fetch is
+    *enqueued* and joins the next wave batch — at its own pinned snapshot
+    and with a per-plan ``results`` cap hint — instead of being dispatched
+    alone (and pages inside the window never re-run the traversal at all);
   * interleaved writes through the transactional path + replication log;
   * the Task framework pumped between batches (compaction, sweeper,
     vacuum — "low priority workers", §3.3);
   * hedged dispatch: a query batch that fast-fails is retried once with
     quadrupled capacities (straggler/outlier mitigation — the latency-tail
     policy the paper enforces with its 100 ms budget).  When per-query
-    fast-fail flags are available (the planner path), only the failed
+    fast-fail flags are available (the fused path), only the failed
     queries are re-dispatched and their rows patched into the batch result;
   * latency accounting per query class (avg + P99, the paper's metrics).
 """
@@ -30,17 +35,25 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.query.executor import QueryCaps, QueryResult, run_queries
+from repro.core.query.executor import QueryCaps, QueryResult
+from repro.core.query.planner import _pow2ceil
 from repro.core.tasks import (TaskQueue, compaction_task,
                               index_compaction_task, vacuum_task)
 
 
 @dataclasses.dataclass
 class Continuation:
+    """One paged select: a pinned snapshot + the materialized row window."""
     token: str
-    rows: np.ndarray
+    query: dict           # the original A1QL select document
+    read_ts: int          # pinned for the token's lifetime (GC barrier)
+    rows: np.ndarray      # valid result gids materialized so far
     cursor: int
+    want: int             # results cap the window was materialized at
+    truncated: bool       # the server had more rows than ``want``
     expires: float
+    hints: dict           # the document's effective cap hints (parse-time)
+    max_rows: int         # refill-window ceiling (constant per token)
 
 
 class A1Server:
@@ -53,42 +66,38 @@ class A1Server:
         self.ttl = continuation_ttl
         self.tasks = TaskQueue(db)
         self._continuations: dict[str, Continuation] = {}
+        self._pending: list[str] = []       # tokens awaiting a refill fetch
         self.use_spmd = use_spmd
         self.mesh = mesh
         self.latencies: dict[str, list[float]] = {}
         self.stats = {"queries": 0, "fastfails": 0, "hedged": 0,
-                      "continuations": 0}
+                      "continuations": 0, "continuation_joins": 0,
+                      "continuation_flushes": 0}
 
     # ------------------------------------------------------------------
-    def execute(self, queries: list[dict], *, qclass: str = "q"
-                ) -> QueryResult:
+    def execute(self, queries: list[dict], *, qclass: str = "q",
+                read_ts: Optional[int] = None) -> QueryResult:
         """One batched execution with hedged retry on fast-fail.
 
         The whole attempt — base run *and* hedged retry — reads one pinned
-        snapshot, so a patched batch never mixes two timestamps."""
+        snapshot, so a patched batch never mixes two timestamps.  Pending
+        continuation refills join the batch (at their own pinned
+        snapshots, per-query ``read_ts`` vector) before it dispatches."""
         t0 = time.perf_counter()
-        ts0 = self.db.snapshot_ts()
+        ts0 = self.db.snapshot_ts() if read_ts is None else int(read_ts)
         self.db.active_query_ts.append(ts0)      # pin across run + hedge
         try:
-            res = self._run(queries, self.caps, ts0)
-            if res.failed:
-                # hedge: one retry at 4x capacity (tail control, then give
-                # up — the paper discards queries that blow the time
-                # budget).  With per-query flags (planner path) only the
-                # failed slice retries.
-                self.stats["hedged"] += 1
-                big = dataclasses.replace(
-                    self.caps, frontier=self.caps.frontier * 4,
-                    expand=self.caps.expand * 4)
-                if res.failed_q is not None and not all(res.failed_q):
-                    idx = [i for i, f in enumerate(res.failed_q) if f]
-                    retry = self._run_batched([queries[i] for i in idx],
-                                              big, ts0)
-                    self._patch(res, retry, idx)
-                else:
-                    res = self._run(queries, big, ts0)
-                if res.failed:
-                    self.stats["fastfails"] += 1
+            self._sweep_continuations()
+            pend = self._drain_pending()
+            n = len(queries)
+            batch = queries + [q for _, q, _ in pend]
+            ts_vec = [ts0] * n + [t for _, _, t in pend]
+            self.stats["continuation_joins"] += len(pend)
+            res = self._dispatch(batch, ts_vec)
+            for j, (token, _, _) in enumerate(pend):
+                self._refill(token, res, n + j)
+            if pend:
+                res = self._slice_result(res, n)
         finally:
             self.db.active_query_ts.remove(ts0)
         dt = time.perf_counter() - t0
@@ -98,23 +107,56 @@ class A1Server:
         self.tasks.pump(1)
         return res
 
-    def _run(self, queries, caps, read_ts):
-        # both entry points route mixed-shape batches through the planner
-        if self.use_spmd:
-            from repro.core.query.executor_spmd import run_queries_spmd
-            return run_queries_spmd(self.db, queries, self.mesh, caps,
-                                    read_ts=read_ts)
-        return run_queries(self.db, queries, caps, read_ts=read_ts)
+    def _run(self, queries, caps, read_ts, fused: Optional[bool] = None):
+        """The unified entry point; ``fused=True`` forces per-query budgets
+        + ``failed_q`` (what hedged retries want)."""
+        mesh = self.mesh if self.use_spmd else None
+        return self.db.query(queries, caps=caps, read_ts=read_ts, mesh=mesh,
+                             fused=fused)
 
-    def _run_batched(self, queries, caps, read_ts):
-        """Planner path unconditionally: per-query budgets + failed_q, so
-        hedged retries report each retried query's own outcome."""
-        if self.use_spmd:
-            from repro.core.query.planner import run_queries_batched_spmd
-            return run_queries_batched_spmd(self.db, queries, self.mesh,
-                                            caps, read_ts=read_ts)
-        from repro.core.query.planner import run_queries_batched
-        return run_queries_batched(self.db, queries, caps, read_ts=read_ts)
+    def _doc_hints(self, q: dict) -> dict:
+        """Effective cap hints of a document, exactly as the parser merges
+        them (terminal + root, root wins) — the parse result is the single
+        source of that precedence."""
+        from repro.core.query.a1ql import parse
+        return {k: v
+                for k, v in dataclasses.asdict(parse(self.db, q).hints
+                                               ).items() if v is not None}
+
+    def _hedged_doc(self, q: dict) -> dict:
+        """Quadruple a document's own frontier/expand hints for the hedged
+        retry (hints override the retry caps, so they must scale too)."""
+        h = self._doc_hints(q)
+        scaled = {k: (4 * v if k in ("frontier", "expand") else v)
+                  for k, v in h.items()}
+        return {**q, "hints": scaled} if scaled else q
+
+    def _dispatch(self, batch, ts_vec,
+                  fused: Optional[bool] = None) -> QueryResult:
+        """Base run + hedged retry: one retry at 4x capacity (tail control,
+        then give up — the paper discards queries that blow the time
+        budget).  With per-query flags (fused path) only the failed slice
+        retries.  Queries whose own cap hints pin frontier/expand get those
+        hints quadrupled too — otherwise the hint would override ``big``
+        and the retry would re-run at exactly the failed budget."""
+        res = self._run(batch, self.caps, ts_vec, fused=fused)
+        if res.failed:
+            self.stats["hedged"] += 1
+            big = dataclasses.replace(
+                self.caps, frontier=self.caps.frontier * 4,
+                expand=self.caps.expand * 4)
+            if res.failed_q is not None and not all(res.failed_q):
+                idx = [i for i, f in enumerate(res.failed_q) if f]
+                retry = self._run([self._hedged_doc(batch[i]) for i in idx],
+                                  big,
+                                  [ts_vec[i] for i in idx], fused=True)
+                self._patch(res, retry, idx)
+            else:
+                res = self._run([self._hedged_doc(q) for q in batch], big,
+                                ts_vec, fused=fused)
+            if res.failed:
+                self.stats["fastfails"] += 1
+        return res
 
     @staticmethod
     def _patch(res: QueryResult, retry: QueryResult, idx: list[int]) -> None:
@@ -123,45 +165,166 @@ class A1Server:
             if retry.counts is not None and res.counts is not None:
                 res.counts[i] = retry.counts[j]
             if retry.rows_gid is not None and res.rows_gid is not None:
-                res.rows_gid[i] = retry.rows_gid[j]
+                k = min(retry.rows_gid.shape[1], res.rows_gid.shape[1])
+                res.rows_gid[i, :k] = retry.rows_gid[j, :k]
                 res.truncated[i] = retry.truncated[j]
-                for k in (res.rows or {}):
-                    if retry.rows and k in retry.rows:
-                        res.rows[k][i] = retry.rows[k][j]
+                for key in (res.rows or {}):
+                    if retry.rows and key in retry.rows:
+                        res.rows[key][i, :k] = retry.rows[key][j, :k]
             res.failed_q[i] = retry.failed_q[j]
         res.failed = bool(np.any(res.failed_q))
+
+    @staticmethod
+    def _slice_result(res: QueryResult, n: int) -> QueryResult:
+        sl = lambda a: None if a is None else a[:n]
+        return QueryResult(
+            counts=sl(res.counts), rows_gid=sl(res.rows_gid),
+            rows=None if res.rows is None else
+            {k: v[:n] for k, v in res.rows.items()},
+            truncated=sl(res.truncated),
+            failed_q=sl(res.failed_q),
+            failed=res.failed if res.failed_q is None
+            else bool(np.any(res.failed_q[:n])))
 
     # ------------------------------------------------------------------
     # continuation tokens (§3.4)
     # ------------------------------------------------------------------
     def select_paged(self, query: dict) -> tuple[np.ndarray, Optional[str]]:
         """Run a select query; return (first page, continuation token)."""
-        res = self.execute([query], qclass="select")
-        rows = res.rows_gid[0]
-        rows = rows[rows >= 0]
-        if len(rows) <= self.page:
-            return rows, None
-        token = uuid.uuid4().hex
-        self._continuations[token] = Continuation(
-            token=token, rows=rows, cursor=self.page,
-            expires=time.monotonic() + self.ttl)
-        self.stats["continuations"] += 1
-        return rows[:self.page], token
+        ts0 = self.db.snapshot_ts()
+        self.db.active_query_ts.append(ts0)      # the token's pin
+        token = None
+        try:
+            res = self.execute([query], qclass="select", read_ts=ts0)
+            if res.rows_gid is None:
+                raise ValueError("select_paged needs a select query")
+            rows = res.rows_gid[0]
+            rows = rows[rows >= 0]
+            truncated = bool(res.truncated[0])
+            if len(rows) <= self.page and not truncated:
+                return rows, None
+            first = rows[: self.page]
+            token = uuid.uuid4().hex
+            hints = self._doc_hints(query)
+            self._continuations[token] = Continuation(
+                token=token, query=query, read_ts=ts0, rows=rows,
+                cursor=len(first), want=self.caps.results,
+                truncated=truncated, expires=time.monotonic() + self.ttl,
+                hints=hints, max_rows=self._max_rows(hints))
+            self.stats["continuations"] += 1
+            return first, token
+        finally:
+            if token is None:                    # no token owns the pin
+                self.db.active_query_ts.remove(ts0)
 
     def next_page(self, token: str) -> tuple[np.ndarray, Optional[str]]:
         """Follow a continuation token (expired/crashed -> client restarts,
 
-        exactly the paper's contract)."""
+        exactly the paper's contract).  Pages inside the cached window are
+        free; paging past it enqueues a refill that joins the next wave
+        batch (``execute``), or flushes synchronously when the client gets
+        there first."""
         c = self._continuations.get(token)
         if c is None or time.monotonic() > c.expires:
-            self._continuations.pop(token, None)
+            self._drop(token)
             raise KeyError("continuation expired; restart the query")
+        if c.truncated and c.cursor + self.page > len(c.rows):
+            # client outran the prefetch (or there was no traffic for the
+            # refill to join): flush the pending batch now.  A no-op when a
+            # prior ``execute`` already carried the refill.
+            self._request_refill(token)
+            self._flush_pending()
         page = c.rows[c.cursor:c.cursor + self.page]
-        c.cursor += self.page
-        if c.cursor >= len(c.rows):
-            self._continuations.pop(token, None)
+        c.cursor += len(page)
+        if c.cursor >= len(c.rows) and not c.truncated:
+            self._drop(token)
             return page, None
+        if c.truncated and c.cursor + self.page > len(c.rows):
+            # prefetch: the follow-up fetch joins the next wave batch
+            self._request_refill(token)
         return page, token
+
+    # -- continuation internals ----------------------------------------
+    def _max_rows(self, hints: dict) -> int:
+        """Ceiling on the rows a refill can materialize: the final frontier
+        region is per-shard under SPMD (global rows span all shards), the
+        document's own ``frontier`` hint may raise it, and the hedged retry
+        runs at 4x — so the window keeps growing as long as refills can
+        still deliver (a progress guard in ``_refill`` terminates deep
+        pagination once they stop)."""
+        shards = self.db.cfg.n_shards if self.use_spmd else 1
+        frontier = max(self.caps.frontier, hints.get("frontier", 0))
+        return 4 * frontier * shards
+
+    def _request_refill(self, token: str) -> None:
+        if token not in self._pending:
+            self._pending.append(token)
+
+    def _drain_pending(self):
+        """Pending refills -> (token, hinted query, read_ts) triples.
+
+        The refill re-enters batching as a regular A1QL document whose
+        ``results`` cap hint doubles the materialized window (pow2, so the
+        fused program cache only sees a few K bands)."""
+        out = []
+        for token in self._pending:
+            c = self._continuations.get(token)
+            if c is None:
+                continue
+            want = min(_pow2ceil(max(c.want * 2, c.cursor + 2 * self.page)),
+                       c.max_rows)
+            c.want = want
+            # keep the document's own hints (frontier/expand budgets it may
+            # need) — only the results window is overridden, root wins
+            out.append((token,
+                        {**c.query, "hints": {**c.hints, "results": want}},
+                        c.read_ts))
+        self._pending = []
+        return out
+
+    def _refill(self, token: str, res: QueryResult, idx: int) -> None:
+        c = self._continuations.get(token)
+        if c is None:
+            return
+        if res.failed_q is not None and bool(res.failed_q[idx]):
+            # the refill fast-failed (even after the hedge): keep the old
+            # window rather than committing a failed run's partial rows —
+            # the client retries via the still-truncated token (or it
+            # expires)
+            return
+        rows = res.rows_gid[idx]
+        new_rows = rows[rows >= 0]
+        # once the window can no longer grow (want at ceiling) AND a refill
+        # stopped delivering new rows, the token must complete — otherwise
+        # every next_page would re-dispatch the same doomed fetch
+        progressed = len(new_rows) > len(c.rows)
+        c.rows = new_rows
+        c.truncated = bool(res.truncated[idx]) and (
+            c.want < c.max_rows or progressed)
+        c.expires = time.monotonic() + self.ttl
+
+    def _flush_pending(self) -> None:
+        """Run the pending refills as their own wave batch (no primary
+        traffic to join).  Same hedged-retry policy as primary batches."""
+        pend = self._drain_pending()
+        if not pend:
+            return
+        self.stats["continuation_flushes"] += 1
+        res = self._dispatch([q for _, q, _ in pend],
+                             [t for _, _, t in pend], fused=True)
+        for j, (token, _, _) in enumerate(pend):
+            self._refill(token, res, j)
+
+    def _drop(self, token: str) -> None:
+        c = self._continuations.pop(token, None)
+        if c is not None:
+            self.db.active_query_ts.remove(c.read_ts)
+
+    def _sweep_continuations(self) -> None:
+        now = time.monotonic()
+        for token in [t for t, c in self._continuations.items()
+                      if now > c.expires]:
+            self._drop(token)
 
     # ------------------------------------------------------------------
     def enqueue_maintenance(self) -> None:

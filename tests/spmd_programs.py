@@ -15,8 +15,7 @@ def prog_query_parity():
     import jax.numpy as jnp
     from repro.core.addressing import StoreConfig
     from repro.core.graphdb import GraphDB
-    from repro.core.query.executor import QueryCaps, run_queries
-    from repro.core.query.executor_spmd import run_queries_spmd
+    from repro.core.query.executor import QueryCaps
     from repro.launch.mesh import make_test_mesh
 
     mesh = make_test_mesh((2, 4), ("data", "model"))
@@ -61,8 +60,8 @@ def prog_query_parity():
                                                      "type": "actor",
                                                      "select": "count"}}}}}
     queries = [q(i) for i in range(5)]
-    rl = run_queries(db, queries, caps)
-    rs = run_queries_spmd(db, queries, mesh, caps)
+    rl = db.query(queries, caps=caps)
+    rs = db.query(queries, caps=caps, mesh=mesh)
     assert np.array_equal(rl.counts, rs.counts), (rl.counts, rs.counts)
 
     # select parity
@@ -71,8 +70,8 @@ def prog_query_parity():
                         "_target": {"type": "film",
                                     "select": ["key", "year"]}}}
           for i in range(8)]
-    rl = run_queries(db, qs, caps)
-    rs = run_queries_spmd(db, qs, mesh, caps)
+    rl = db.query(qs, caps=caps)
+    rs = db.query(qs, caps=caps, mesh=mesh)
     for qi in range(8):
         kl = sorted(int(x) for x in rl.rows[("key", 0)][qi] if x >= 0)
         ks = sorted(int(x) for x in rs.rows[("key", 0)][qi] if x >= 0)
@@ -85,28 +84,27 @@ def prog_query_parity():
         {"type": "actor", "id": 329,
          "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
         "select": "count"}
-    rl = run_queries(db, [q3], caps)
-    rs = run_queries_spmd(db, [q3], mesh, caps)
+    rl = db.query([q3], caps=caps)
+    rs = db.query([q3], caps=caps, mesh=mesh)
     assert np.array_equal(rl.counts, rs.counts)
 
     # pallas backend (interpret on CPU): same program, kernel read path
-    rp = run_queries_spmd(db, queries, mesh, caps, backend="pallas")
-    rl = run_queries(db, queries, caps, backend="ref")
+    rp = db.query(queries, caps=caps, mesh=mesh, backend="pallas")
+    rl = db.query(queries, caps=caps, backend="ref")
     assert np.array_equal(rl.counts, rp.counts), (rl.counts, rp.counts)
     print("PARITY_OK")
 
 
 def prog_multiquery_parity():
     """The planner's fused batched path inside shard_map: heterogeneous
-    batches (mixed hop counts/directions/filters/terminals, per-query MVCC
-    snapshots) must match the local batched path — which the deterministic
-    suite pins to per-query execution — on ref and pallas backends."""
+    batches (mixed hop counts/directions/filters/terminals, star patterns
+    fused into the waves, per-query MVCC snapshots) must match the local
+    batched path — which the deterministic suite pins to per-query
+    execution — on ref and pallas backends."""
     import numpy as np
     from repro.core.addressing import StoreConfig
     from repro.core.graphdb import GraphDB
-    from repro.core.query.executor import QueryCaps, run_queries
-    from repro.core.query.planner import (run_queries_batched,
-                                          run_queries_batched_spmd)
+    from repro.core.query.executor import QueryCaps
     from repro.launch.mesh import make_test_mesh
 
     mesh = make_test_mesh((2, 4), ("data", "model"))
@@ -159,19 +157,27 @@ def prog_multiquery_parity():
                       "_in_edge": {"type": "film.actor",
                                    "_target": {"type": "film",
                                                "select": ["key", "year"]}}}
+    # star patterns (Q3) fuse into the same wave batch since A1QL v2
+    qstar = lambda d, a: {"intersect": [
+        {"type": "director", "id": d,
+         "_out_edge": {"type": "film.director",
+                       "_target": {"type": "film"}}},
+        {"type": "actor", "id": 300 + a,
+         "_in_edge": {"type": "film.actor", "_target": {"type": "film"}}}],
+        "select": "count"}
     queries = [q2hop(0), qrev(3), q2hop(1), qrev(29), qsel(2), qsel(29),
-               q2hop(4)]
-    ts = [t2, t2, t1, t1, t2, t2, t2]
+               q2hop(4), qstar(0, 29), qstar(2, 5)]
+    ts = [t2, t2, t1, t1, t2, t2, t2, t2, t1]
 
-    rl = run_queries_batched(db, queries, caps, read_ts=ts)
+    rl = db.query(queries, caps=caps, read_ts=ts, fused=True)
     # anchor the local-batched oracle to per-query sequential runs
-    for i in (0, 1, 3):
-        solo = run_queries(db, [queries[i]], caps, read_ts=ts[i])
+    for i in (0, 1, 3, 7, 8):
+        solo = db.query([queries[i]], caps=caps, read_ts=ts[i])
         assert rl.counts[i] == solo.counts[0], (i, rl.counts, solo.counts)
 
     for be in ("ref", "pallas"):
-        rs = run_queries_batched_spmd(db, queries, mesh, caps, backend=be,
-                                      read_ts=ts)
+        rs = db.query(queries, caps=caps, mesh=mesh, backend=be,
+                      read_ts=ts, fused=True)
         assert np.array_equal(rl.counts, rs.counts), (be, rl.counts,
                                                       rs.counts)
         assert np.array_equal(rl.failed_q, rs.failed_q), be

@@ -18,7 +18,7 @@ from repro.core import index as index_mod
 from repro.core.addressing import StoreConfig
 from repro.core.graphdb import GraphDB
 from repro.core.query import executor
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 
 CAPS = QueryCaps(frontier=128, expand=512, results=16)
 PALLAS = backend_mod.Backend("pallas", interpret=True)
@@ -92,6 +92,24 @@ def q_star(did, aid):
         "select": "count"}
 
 
+def assert_query_parity(res, i, solo):
+    """Query i of a batched result == its solo per-plan-executor result.
+
+    The shared fused-vs-solo parity oracle (used by test_planner and the
+    randomized-IR sweep in test_ir): counts/rows/truncation/fast-fail must
+    match bit-for-bit, with batch rows beyond the solo width NULL-padded."""
+    assert bool(res.failed_q[i]) == bool(solo.failed), i
+    if solo.counts is not None:
+        assert res.counts[i] == solo.counts[0], i
+    else:
+        k = solo.rows_gid.shape[1]
+        assert np.array_equal(res.rows_gid[i, :k], solo.rows_gid[0]), i
+        assert (res.rows_gid[i, k:] < 0).all(), i
+        assert res.truncated[i] == solo.truncated[0], i
+        for key, v in solo.rows.items():
+            assert np.array_equal(res.rows[key][i, :k], v[0]), (i, key)
+
+
 def assert_identical(a, b):
     assert a.failed == b.failed
     if a.counts is not None or b.counts is not None:
@@ -105,8 +123,8 @@ def assert_identical(a, b):
 
 
 def run_both(db, queries, caps=CAPS):
-    r_ref = run_queries(db, queries, caps, backend="ref")
-    r_pal = run_queries(db, queries, caps, backend="pallas")
+    r_ref = db.query(queries, caps=caps, backend="ref")
+    r_pal = db.query(queries, caps=caps, backend="pallas")
     assert_identical(r_ref, r_pal)
     return r_ref
 
@@ -133,8 +151,8 @@ def test_overflow_parity():
     accepts exactly the expansions the reference path accepts."""
     db = build_db(seed=4)
     tiny = QueryCaps(frontier=16, expand=2, results=4)
-    r_ref = run_queries(db, [q_chain(0)], tiny, backend="ref")
-    r_pal = run_queries(db, [q_chain(0)], tiny, backend="pallas")
+    r_ref = db.query([q_chain(0)], caps=tiny, backend="ref")
+    r_pal = db.query([q_chain(0)], caps=tiny, backend="pallas")
     assert r_ref.failed and r_pal.failed
 
 
@@ -142,10 +160,10 @@ def test_compile_cache_no_retrace():
     """Repeated same-shape run_queries batches reuse the compiled program."""
     db = build_db(seed=5, mutate=False)
     queries = [q_chain(d) for d in range(3)]
-    run_queries(db, queries, CAPS, backend="ref")       # warm the cache
+    db.query(queries, caps=CAPS, backend="ref")         # warm the cache
     h0, m0 = executor.CACHE_STATS["hits"], executor.CACHE_STATS["misses"]
     for _ in range(3):
-        run_queries(db, queries, CAPS, backend="ref")
+        db.query(queries, caps=CAPS, backend="ref")
     assert executor.CACHE_STATS["hits"] == h0 + 3
     assert executor.CACHE_STATS["misses"] == m0
 

@@ -1,0 +1,223 @@
+"""A1QL v2 IR: parse/lower invariants + randomized fused==unfused parity.
+
+Two layers:
+
+* deterministic unit tests over the typed logical-plan IR — node shapes,
+  structural signatures, lowering errors, cap-hint parsing, legacy-shim
+  compatibility;
+* a hypothesis property suite over *random IR trees* (schema-valid chains,
+  stars, and mixed batches): executing any batch through the fused wave
+  planner must be bit-identical — counts, rows, truncation, per-query
+  fast-fail — to executing each query alone through the per-plan executor,
+  on the ref and pallas backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core.query import ir
+from repro.core.query.a1ql import ParseError, parse, parse_legacy
+
+from test_backend_parity import (CAPS, assert_query_parity,
+                                 build_db, q_chain, q_star)
+
+# one shared KG for the whole module (building it is the expensive part)
+DB = build_db(seed=77)
+
+
+# ---------------------------------------------------------------------------
+# deterministic IR unit tests
+# ---------------------------------------------------------------------------
+
+def test_parse_builds_one_tree_for_chain_and_star():
+    chain = parse(DB, q_chain(0))
+    star = parse(DB, q_star(0, 301))
+    assert isinstance(chain, ir.Count) and isinstance(star, ir.Count)
+    assert isinstance(chain.child, ir.Expand)
+    assert isinstance(star.child, ir.Intersect)
+    # chains bottom out at a Scan carrying the runtime key
+    node = chain.child
+    while not isinstance(node, ir.Scan):
+        node = node.child
+    assert node.key == 0
+
+
+def test_parse_is_deterministic_and_hashable():
+    a, b = parse(DB, q_chain(1, genre=2)), parse(DB, q_chain(1, genre=2))
+    assert a == b and hash(a) == hash(b)
+    assert a != parse(DB, q_chain(2, genre=2))      # key differs
+
+
+def test_signature_drops_runtime_values_keeps_structure():
+    s1 = parse(DB, q_chain(0)).signature()
+    s2 = parse(DB, q_chain(2)).signature()          # different start key
+    assert s1 == s2
+    s3 = parse(DB, q_chain(0, genre=1)).signature()  # extra filter
+    assert s1 != s3
+    assert s3 == parse(DB, q_chain(1, genre=2)).signature()  # value-free
+    assert (parse(DB, q_star(0, 301)).signature()
+            == parse(DB, q_star(2, 311)).signature())
+    assert parse(DB, q_star(0, 301)).signature() != s1
+
+
+def test_lower_chain_and_star_uniformly():
+    lo = ir.lower(parse(DB, q_chain(0)))
+    assert not lo.is_intersect and lo.keys == (0,)
+    assert len(lo.plan.hops) == 2
+    lo = ir.lower(parse(DB, q_star(1, 305)))
+    assert lo.is_intersect and lo.keys == (1, 305)
+    assert len(lo.plan.branches) == 2
+    assert lo.plan.chain_units() == lo.plan.branches
+    # lowering keeps the legacy Plan contract (what programs are keyed on)
+    plan, key = parse_legacy(DB, q_chain(0))
+    assert plan == ir.lower(parse(DB, q_chain(0))).plan and key == 0
+    plan, keys = parse_legacy(DB, q_star(1, 305))
+    assert plan.is_intersect and keys == [1, 305]
+
+
+def test_parse_rejects_nested_intersect_and_bad_docs():
+    with pytest.raises(ParseError):
+        parse(DB, {"intersect": [q_star(0, 301), q_chain(1)],
+                   "select": "count"})
+    with pytest.raises(ParseError):
+        parse(DB, {"type": "director", "id": 0})     # no traversal step
+    with pytest.raises(ParseError):
+        parse(DB, {"id": 0})                         # no start type
+    with pytest.raises(ParseError):
+        parse(DB, {**q_chain(0), "hints": {"bogus": 1}})
+    star = q_star(0, 301)
+    star["intersect"][0] = {**star["intersect"][0], "hints": {"expand": 64}}
+    with pytest.raises(ParseError):
+        parse(DB, star)                              # branch hints rejected
+    with pytest.raises(ParseError):
+        parse(DB, {**q_chain(0), "hints": {"results": 7.9}})   # no truncation
+    with pytest.raises(ParseError):
+        parse(DB, {**q_chain(0), "hints": {"results": 0}})
+    mid = q_chain(0)
+    mid["_out_edge"]["_target"]["hints"] = {"results": 2}
+    with pytest.raises(ParseError):
+        parse(DB, mid)                               # mid-chain hints too
+
+
+def test_cap_hints_parse_and_apply():
+    from repro.core.query.executor import QueryCaps
+    root = parse(DB, {**q_chain(0), "hints": {"results": 8, "expand": 64}})
+    assert root.hints == ir.CapHints(results=8, expand=64)
+    eff = root.hints.apply(QueryCaps())
+    assert eff.results == 8 and eff.expand == 64
+    assert eff.frontier == QueryCaps().frontier      # untouched knob
+    assert parse(DB, q_chain(0)).hints is ir.NO_HINTS
+    # terminal-level hints merge with root-level, root winning per key
+    leaf_hinted = q_chain(0)
+    tgt = (leaf_hinted["_out_edge"]["_target"]
+           ["_out_edge"]["_target"])
+    tgt["hints"] = {"results": 4, "expand": 16}
+    assert parse(DB, leaf_hinted).hints == ir.CapHints(results=4, expand=16)
+    wrapped = {**leaf_hinted, "hints": {"results": 32}}
+    assert parse(DB, wrapped).hints == ir.CapHints(results=32, expand=16)
+
+
+def test_deprecated_shims_warn_and_match():
+    from repro.core.query.executor import run_queries
+    from repro.core.query.executor_spmd import run_queries_spmd
+    from repro.core.query.planner import run_queries_batched
+    queries = [q_chain(0), q_star(0, 301)]
+    want = DB.query(queries, caps=CAPS)
+    for fn, kw in ((run_queries, {}), (run_queries_batched, {})):
+        with pytest.warns(DeprecationWarning):
+            got = fn(DB, queries, CAPS, **kw)
+        assert np.array_equal(got.counts, want.counts)
+    assert run_queries_spmd.__doc__.startswith("Deprecated")
+
+
+def test_engine_rejects_unfusable_uniform_override():
+    with pytest.raises(ValueError):
+        DB.query([q_chain(0), q_star(0, 301)], caps=CAPS, fused=False)
+    with pytest.raises(ValueError):
+        DB.query([], caps=CAPS)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random IR trees, fused == unfused bit-identical
+# ---------------------------------------------------------------------------
+# (the deterministic tests above must run even where hypothesis is absent,
+# so this section gates itself instead of importorskip'ing the module)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # pragma: no cover - CI installs it
+    st = None
+
+if st is not None:
+    # schema-valid walk table: vtype -> (edge key, edge type, next vtype)
+    _STEPS = {
+        "director": [("_out_edge", "film.director", "film")],
+        "film": [("_out_edge", "film.actor", "actor"),
+                 ("_in_edge", "film.director", "director")],
+        "actor": [("_in_edge", "film.actor", "film")],
+    }
+    _KEYS = {"director": [0, 1, 2, 999], "film": [100, 104, 109, 999],
+             "actor": [300, 305, 311, 999]}
+
+    @st.composite
+    def chain_doc(draw, max_hops=3, terminals=("count", "keys")):
+        vt = draw(st.sampled_from(sorted(_STEPS)))
+        doc = {"type": vt, "id": draw(st.sampled_from(_KEYS[vt]))}
+        node = doc
+        for _ in range(draw(st.integers(1, max_hops))):
+            ekey, et, vt = draw(st.sampled_from(_STEPS[vt]))
+            tgt = {"type": vt}
+            if vt == "film" and draw(st.booleans()):
+                tgt["filter"] = {"attr": "genre", "op": "==",
+                                 "value": draw(st.integers(0, 2))}
+            node[ekey] = {"type": et, "_target": tgt}
+            node = tgt
+        if draw(st.sampled_from(terminals)) == "keys":
+            node["select"] = ["key"]
+        return doc
+
+    @st.composite
+    def star_doc(draw):
+        n = draw(st.integers(2, 3))
+        branches = [draw(chain_doc(max_hops=2, terminals=("count",)))
+                    for _ in range(n)]
+        sel = draw(st.sampled_from(["count", ["key"]]))
+        return {"intersect": branches, "select": sel}
+
+    def query_doc():
+        return st.one_of(chain_doc(), chain_doc(), star_doc())
+
+
+def assert_fused_matches_solo(db, queries, backend):
+    res = db.query(queries, caps=CAPS, backend=backend, fused=True)
+    for i, q in enumerate(queries):
+        assert_query_parity(res, i, db.query([q], caps=CAPS,
+                                             backend=backend))
+
+
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(queries=st.lists(query_doc(), min_size=2, max_size=6))
+    def test_property_random_ir_batches_fused_parity_ref(queries):
+        assert_fused_matches_solo(DB, queries, "ref")
+
+    @settings(max_examples=4, deadline=None)
+    @given(queries=st.lists(query_doc(), min_size=2, max_size=4))
+    def test_property_random_ir_batches_fused_parity_pallas(queries):
+        assert_fused_matches_solo(DB, queries, "pallas")
+
+    @settings(max_examples=10, deadline=None)
+    @given(queries=st.lists(query_doc(), min_size=1, max_size=5),
+           data=st.data())
+    def test_property_signature_stable_under_rekeying(queries, data):
+        """Re-keying a query (same structure, new start ids) never changes
+        its structural signature — what keeps program caches warm."""
+        for q in queries:
+            root = parse(DB, q)
+            q2 = dict(q)
+            if "intersect" in q2:
+                q2["intersect"] = [
+                    {**b, "id": data.draw(st.sampled_from(_KEYS[b["type"]]))}
+                    for b in q2["intersect"]]
+            else:
+                q2["id"] = data.draw(st.sampled_from(_KEYS[q2["type"]]))
+            assert parse(DB, q2).signature() == root.signature()

@@ -1,20 +1,23 @@
-"""Multi-query planner: batched waves must be bit-identical to per-query runs.
+"""Multi-query planner: fused waves must be bit-identical to per-query runs.
 
-``run_queries_batched`` fuses heterogeneous plan shapes into shared operator
-waves with per-query capacity budgets and MVCC snapshots; the contract is
-that every observable — counts, select rows, truncation, and the §3.4
-fast-fail flag — matches running each query alone through ``run_queries``,
-on both the ref and pallas backends.  Deterministic (seeded rng, no
-hypothesis) so the suite runs everywhere.
+``GraphDB.query(..., fused=True)`` fuses heterogeneous plan shapes — chains
+*and* star patterns since A1QL v2 — into shared operator waves with
+per-query capacity budgets and MVCC snapshots; the contract is that every
+observable — counts, select rows, truncation, and the §3.4 fast-fail
+flag — matches running each query alone through the per-plan executor, on
+both the ref and pallas backends.  Deterministic (seeded rng, no
+hypothesis) so the suite runs everywhere; the randomized-IR sweep lives in
+tests/test_ir.py.
 """
 import numpy as np
 import pytest
 
 from repro.core.query import planner
-from repro.core.query.executor import QueryCaps, run_queries
-from repro.core.query.planner import delta_window, run_queries_batched
+from repro.core.query.executor import QueryCaps
+from repro.core.query.planner import delta_window, index_window
 
-from test_backend_parity import CAPS, build_db, q_chain, q_star
+from test_backend_parity import (CAPS, assert_query_parity,
+                                 build_db, q_chain, q_star)
 
 
 def template_pool(rng):
@@ -33,17 +36,6 @@ def template_pool(rng):
     return q_chain(999)                                          # missing key
 
 
-def assert_query_parity(res, i, solo):
-    """Query i of a batched result == its solo run_queries result."""
-    assert bool(res.failed_q[i]) == bool(solo.failed), i
-    if solo.counts is not None:
-        assert res.counts[i] == solo.counts[0], i
-    else:
-        assert np.array_equal(res.rows_gid[i], solo.rows_gid[0]), i
-        assert res.truncated[i] == solo.truncated[0], i
-        for k, v in solo.rows.items():
-            assert np.array_equal(res.rows[k][i], v[0]), (i, k)
-
 
 @pytest.mark.parametrize("backend", ["ref", "pallas"])
 def test_random_batches_match_per_query(backend):
@@ -51,18 +43,39 @@ def test_random_batches_match_per_query(backend):
     rng = np.random.default_rng(21)
     for _ in range(3):
         queries = [template_pool(rng) for _ in range(int(rng.integers(4, 9)))]
-        res = run_queries_batched(db, queries, CAPS, backend=backend)
+        res = db.query(queries, caps=CAPS, backend=backend, fused=True)
         for i, q in enumerate(queries):
-            assert_query_parity(res, i, run_queries(db, [q], CAPS,
-                                                    backend=backend))
+            assert_query_parity(res, i, db.query([q], caps=CAPS,
+                                                 backend=backend))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_fused_star_parity(backend):
+    """Stars fuse into the chain waves: count + select stars, multiple
+    branches, mixed with chains — all one program per terminal group."""
+    db = build_db(seed=31)
+    star_sel = {"intersect": q_star(0, 301)["intersect"], "select": ["key"]}
+    three = {"intersect": q_star(1, 305)["intersect"] + [
+        {"type": "director", "id": 1,
+         "_out_edge": {"type": "film.director",
+                       "_target": {"type": "film"}}}],
+        "select": "count"}
+    queries = [q_star(0, 301), q_chain(0), three, q_star(2, 311),
+               star_sel, q_chain(1, select=["key"]), q_star(0, 999)]
+    res = db.query(queries, caps=CAPS, backend=backend, fused=True)
+    for i, q in enumerate(queries):
+        assert_query_parity(res, i, db.query([q], caps=CAPS,
+                                             backend=backend))
+    # the all-branches-empty star really returns 0, not garbage
+    assert res.counts[6] == 0
 
 
 def test_ref_pallas_batched_identical():
     db = build_db(seed=22)
     rng = np.random.default_rng(22)
     queries = [template_pool(rng) for _ in range(8)]
-    a = run_queries_batched(db, queries, CAPS, backend="ref")
-    b = run_queries_batched(db, queries, CAPS, backend="pallas")
+    a = db.query(queries, caps=CAPS, backend="ref", fused=True)
+    b = db.query(queries, caps=CAPS, backend="pallas", fused=True)
     assert np.array_equal(a.failed_q, b.failed_q)
     assert np.array_equal(a.counts, b.counts)
     if a.rows_gid is not None:
@@ -73,15 +86,18 @@ def test_ref_pallas_batched_identical():
 
 @pytest.mark.parametrize("backend", ["ref", "pallas"])
 def test_all_delta_tier_parity(backend):
-    """Uncompacted graph: every edge still in the delta log (windowed scan)."""
+    """Uncompacted graph: every edge still in the delta log (windowed scan),
+    every vertex still in the index delta (windowed probe)."""
     db = build_db(seed=23, mutate=False)
     assert delta_window(db) > 1          # the window actually has content
+    assert index_window(db) > 1
     queries = ([q_chain(d) for d in range(3)]
-               + [q_chain(300 + a, direction="in") for a in range(3)])
-    res = run_queries_batched(db, queries, CAPS, backend=backend)
+               + [q_chain(300 + a, direction="in") for a in range(3)]
+               + [q_star(0, 301)])
+    res = db.query(queries, caps=CAPS, backend=backend, fused=True)
     for i, q in enumerate(queries):
-        assert_query_parity(res, i, run_queries(db, [q], CAPS,
-                                                backend=backend))
+        assert_query_parity(res, i, db.query([q], caps=CAPS,
+                                             backend=backend))
 
 
 @pytest.mark.parametrize("backend", ["ref", "pallas"])
@@ -99,34 +115,36 @@ def test_mvcc_snapshots_stay_independent(backend):
     except ValueError:
         pass
     t2 = db.snapshot_ts()
-    queries = [q_chain(0), q_chain(0), q_chain(1), q_chain(1)]
-    ts = [t1, t2, t2, t1]
-    res = run_queries_batched(db, queries, CAPS, backend=backend,
-                              read_ts=ts)
+    queries = [q_chain(0), q_chain(0), q_star(0, 301), q_chain(1),
+               q_star(0, 301)]
+    ts = [t1, t2, t2, t1, t1]
+    res = db.query(queries, caps=CAPS, backend=backend, read_ts=ts,
+                   fused=True)
     for i, (q, t) in enumerate(zip(queries, ts)):
-        assert_query_parity(res, i, run_queries(db, [q], CAPS,
-                                                backend=backend, read_ts=t))
+        assert_query_parity(res, i, db.query([q], caps=CAPS,
+                                             backend=backend, read_ts=t))
     # the isolation must be observable: the same plan at t1 vs t2 may only
     # differ because each batch slot reads its own snapshot
-    solo1 = run_queries(db, [q_chain(0)], CAPS, backend=backend, read_ts=t1)
-    solo2 = run_queries(db, [q_chain(0)], CAPS, backend=backend, read_ts=t2)
+    solo1 = db.query([q_chain(0)], caps=CAPS, backend=backend, read_ts=t1)
+    solo2 = db.query([q_chain(0)], caps=CAPS, backend=backend, read_ts=t2)
     assert res.counts[0] == solo1.counts[0]
     assert res.counts[1] == solo2.counts[0]
 
 
 @pytest.mark.parametrize("backend", ["ref", "pallas"])
 def test_fastfail_flags_per_query(backend):
-    """One overflowing query must not fail (or corrupt) its batch mates."""
+    """One overflowing query must not fail (or corrupt) its batch mates —
+    and a star's flag ORs over its branches, exactly like solo runs."""
     db = build_db(seed=25)
     tiny = QueryCaps(frontier=16, expand=2, results=4)
-    queries = [q_chain(0), q_chain(999), q_chain(1)]
-    res = run_queries_batched(db, queries, tiny, backend=backend)
+    queries = [q_chain(0), q_chain(999), q_chain(1), q_star(0, 301)]
+    res = db.query(queries, caps=tiny, backend=backend, fused=True)
     for i, q in enumerate(queries):
-        solo = run_queries(db, [q], tiny, backend=backend)
+        solo = db.query([q], caps=tiny, backend=backend)
         assert bool(res.failed_q[i]) == bool(solo.failed), i
     assert res.failed_q[0] and not res.failed_q[1]    # heavy fails, empty not
     # the unfailed query's payload still matches its solo run
-    solo = run_queries(db, [q_chain(999)], tiny, backend=backend)
+    solo = db.query([q_chain(999)], caps=tiny, backend=backend)
     assert res.counts[1] == solo.counts[0] == 0
 
 
@@ -134,59 +152,86 @@ def test_cache_keyed_on_batch_shape():
     """Same-shape batches reuse the compiled wave program (no retracing)."""
     db = build_db(seed=26, mutate=False)
     queries = [q_chain(0), q_chain(301, direction="in"), q_chain(1)]
-    run_queries_batched(db, queries, CAPS, backend="ref")     # warm
+    db.query(queries, caps=CAPS, fused=True)                  # warm
     h0, m0 = planner.CACHE_STATS["hits"], planner.CACHE_STATS["misses"]
     for _ in range(3):
-        run_queries_batched(db, queries, CAPS, backend="ref")
+        db.query(queries, caps=CAPS, fused=True)
     assert planner.CACHE_STATS["hits"] == h0 + 3
     assert planner.CACHE_STATS["misses"] == m0
     # a permutation of the same mix is the same program (canonical order)
-    res = run_queries_batched(db, list(reversed(queries)), CAPS,
-                              backend="ref")
+    res = db.query(list(reversed(queries)), caps=CAPS, fused=True)
     assert planner.CACHE_STATS["misses"] == m0
-    fwd = run_queries_batched(db, queries, CAPS, backend="ref")
+    fwd = db.query(queries, caps=CAPS, fused=True)
     assert np.array_equal(res.counts, fwd.counts[::-1])
     # a different batch shape is a different program
-    run_queries_batched(db, queries + [q_chain(2)], CAPS, backend="ref")
+    db.query(queries + [q_chain(2)], caps=CAPS, fused=True)
     assert planner.CACHE_STATS["misses"] == m0 + 1
 
 
-def test_amortization_gate():
-    """The ISSUE acceptance gate, automated: on the ref backend, batch-64
-    per-query latency must be <= 0.5x batch-1.  Relative timing inside one
-    process (median of repeats) so shared-runner noise largely cancels."""
+def test_cache_no_retrace_across_mixed_shape_permutations():
+    """Batch permutations that mix chains AND stars resolve to one program
+    (canonical group order covers the star's branch units too)."""
+    import itertools
+    db = build_db(seed=32, mutate=False)
+    queries = [q_chain(0), q_star(0, 301), q_chain(301, direction="in"),
+               q_star(1, 305)]
+    base = db.query(queries, caps=CAPS, fused=True)           # warm
+    m0 = planner.CACHE_STATS["misses"]
+    for perm in itertools.permutations(range(4)):
+        res = db.query([queries[i] for i in perm], caps=CAPS, fused=True)
+        assert planner.CACHE_STATS["misses"] == m0, perm
+        assert np.array_equal(res.counts, base.counts[list(perm)]), perm
+
+
+def _min_batch_time(db, qs, caps, n=5):
+    """Min wall time of a warm fused batch — the latency-floor estimator,
+    robust to shared-runner contention (relative timing inside one process
+    so systematic noise largely cancels)."""
     import time
-    db = build_db(seed=29, mutate=False)
+    db.query(qs, caps=caps, fused=True)                       # warm compile
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        db.query(qs, caps=caps, fused=True)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+@pytest.mark.parametrize("seed,mix", [
+    (29, "chains"),          # the original ISSUE acceptance gate
+    (33, "chains+stars"),    # extended to batches containing intersects
+])
+def test_amortization_gate(seed, mix):
+    """The ISSUE acceptance gate, automated: on the ref backend, batch-64
+    per-query latency must be <= 0.5x batch-1 — for pure chain mixes AND
+    for mixes containing star/intersect plans (fused since A1QL v2)."""
+    db = build_db(seed=seed, mutate=False)
     caps = QueryCaps(frontier=128, expand=512, results=16)
-    templates = [lambda i: q_chain(i % 3),
-                 lambda i: q_chain(300 + i % 12, direction="in"),
-                 lambda i: q_chain(i % 3, genre=i % 3)]
+    if mix == "chains":
+        templates = [lambda i: q_chain(i % 3),
+                     lambda i: q_chain(300 + i % 12, direction="in"),
+                     lambda i: q_chain(i % 3, genre=i % 3)]
+    else:
+        templates = [lambda i: q_chain(i % 3),
+                     lambda i: q_star(i % 3, 300 + i % 12),
+                     lambda i: q_chain(300 + i % 12, direction="in")]
     batch = lambda b: [templates[i % 3](i) for i in range(b)]
-    qs1, qs64 = batch(1), batch(64)
-
-    def median_t(qs, n=5):
-        run_queries_batched(db, qs, caps, backend="ref")      # warm compile
-        ts = []
-        for _ in range(n):
-            t0 = time.perf_counter()
-            run_queries_batched(db, qs, caps, backend="ref")
-            ts.append(time.perf_counter() - t0)
-        return sorted(ts)[n // 2]
-
-    t1, t64 = median_t(qs1), median_t(qs64)
+    t1 = _min_batch_time(db, batch(1), caps)
+    t64 = _min_batch_time(db, batch(64), caps)
     assert t64 / 64 <= 0.5 * t1, \
-        f"amortization regressed: {t64/64*1e6:.0f}us/q at b=64 " \
+        f"amortization regressed ({mix}): {t64/64*1e6:.0f}us/q at b=64 " \
         f"vs {t1*1e6:.0f}us at b=1"
 
 
 def test_mixed_batch_routes_through_planner():
-    """run_queries on a mixed-shape batch returns per-query-aligned results."""
+    """GraphDB.query on a mixed-shape batch returns per-query-aligned
+    results with per-query fast-fail flags (auto-fused routing)."""
     db = build_db(seed=27)
-    queries = [q_chain(0), q_chain(301, direction="in"), q_chain(1)]
-    res = run_queries(db, queries, CAPS, backend="ref")
+    queries = [q_chain(0), q_chain(301, direction="in"), q_star(0, 301)]
+    res = db.query(queries, caps=CAPS)
     assert res.failed_q is not None and len(res.failed_q) == 3
     for i, q in enumerate(queries):
-        solo = run_queries(db, [q], CAPS, backend="ref")
+        solo = db.query([q], caps=CAPS)
         assert res.counts[i] == solo.counts[0], i
 
 
@@ -194,9 +239,28 @@ def test_mixed_terminals_in_one_batch():
     """count + select queries in one call: aligned arrays, NULL elsewhere."""
     db = build_db(seed=28)
     queries = [q_chain(0), q_chain(1, select=["key"]), q_chain(2)]
-    res = run_queries_batched(db, queries, CAPS, backend="ref")
+    res = db.query(queries, caps=CAPS, fused=True)
     assert res.counts[0] >= 0 and res.counts[2] >= 0
     assert res.counts[1] == -1                   # select slot: no count
     assert (res.rows_gid[0] == -1).all()         # count slot: no rows
-    solo = run_queries(db, [queries[1]], CAPS, backend="ref")
+    solo = db.query([queries[1]], caps=CAPS)
     assert np.array_equal(res.rows_gid[1], solo.rows_gid[0])
+
+
+def test_cap_hints_group_and_apply():
+    """Per-plan ``hints`` override the caps knobs and split fusion groups;
+    each hinted query still matches its solo run at the hinted budget."""
+    import dataclasses
+    db = build_db(seed=34)
+    hinted = {**q_chain(1, select=["key"]), "hints": {"results": 32}}
+    queries = [q_chain(0, select=["key"]), hinted, q_chain(2, select=["key"])]
+    res = db.query(queries, caps=CAPS, fused=True)
+    assert res.rows_gid.shape[1] == 32           # Kmax across the batch
+    solo_small = db.query([q_chain(1, select=["key"])], caps=CAPS)
+    solo_big = db.query([q_chain(1, select=["key"])],
+                        caps=dataclasses.replace(CAPS, results=32))
+    assert np.array_equal(res.rows_gid[1], solo_big.rows_gid[0])
+    assert solo_small.rows_gid.shape[1] == CAPS.results
+    for i, q in enumerate(queries):
+        assert_query_parity(
+            res, i, db.query([q], caps=CAPS))    # hints ride with the query

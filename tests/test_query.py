@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.addressing import StoreConfig
 from repro.core.graphdb import GraphDB
-from repro.core.query.executor import QueryCaps, run_queries
+from repro.core.query.executor import QueryCaps
 
 CAPS = QueryCaps(frontier=512, expand=4096, results=32)
 
@@ -72,7 +72,7 @@ def q1(did, genre=None, select="count"):
 
 def test_two_hop_counts_match_oracle():
     db, G = film_db()
-    res = run_queries(db, [q1(d) for d in range(4)], CAPS)
+    res = db.query([q1(d) for d in range(4)], caps=CAPS)
     assert not res.failed
     for d in range(4):
         assert res.counts[d] == len(
@@ -81,7 +81,7 @@ def test_two_hop_counts_match_oracle():
 
 def test_two_hop_with_filter_matches_oracle():
     db, G = film_db(seed=3)
-    res = run_queries(db, [q1(d, genre=1) for d in range(4)], CAPS)
+    res = db.query([q1(d, genre=1) for d in range(4)], caps=CAPS)
     for d in range(4):
         assert res.counts[d] == len(
             oracle_two_hop(G, ("director", d), "film.director", "film.actor",
@@ -93,7 +93,7 @@ def test_reverse_traversal_matches_oracle():
     q = {"type": "actor", "id": 305,
          "_in_edge": {"type": "film.actor",
                       "_target": {"type": "film", "select": ["key"]}}}
-    res = run_queries(db, [q], CAPS)
+    res = db.query([q], caps=CAPS)
     got = sorted(int(x) for x in res.rows[("key", 0)][0] if x >= 0)
     want = sorted(f[1] for f, _, k in G.in_edges(("actor", 305), keys=True)
                   if k == "film.actor")
@@ -112,7 +112,7 @@ def test_intersection_star_pattern():
              "_in_edge": {"type": "film.actor",
                           "_target": {"type": "film"}}}],
             "select": "count"}
-        res = run_queries(db, [q], CAPS)
+        res = db.query([q], caps=CAPS)
         by_dir = {f for _, f, k in G.out_edges(("director", 0), keys=True)
                   if k == "film.director"}
         by_act = {f for f, _, k in G.in_edges(("actor", 300 + aid), keys=True)
@@ -122,7 +122,7 @@ def test_intersection_star_pattern():
 
 def test_missing_start_vertex_yields_zero():
     db, _ = film_db()
-    res = run_queries(db, [q1(999)], CAPS)
+    res = db.query([q1(999)], caps=CAPS)
     assert res.counts[0] == 0 and not res.failed
 
 
@@ -135,7 +135,7 @@ def test_three_hop_query():
                                   "_out_edge": {"type": "film.actor",
                                                 "_target": {"type": "actor",
                                                             "select": "count"}}}}}
-    res = run_queries(db, [q], CAPS)
+    res = db.query([q], caps=CAPS)
     films = {f for f, _, k in G.in_edges(("actor", 301), keys=True)
              if k == "film.actor"}
     co = set()
@@ -147,18 +147,18 @@ def test_three_hop_query():
 def test_fast_fail_on_overflow():
     db, _ = film_db()
     tiny = QueryCaps(frontier=8, expand=4, results=4)
-    res = run_queries(db, [q1(0)], tiny)
+    res = db.query([q1(0)], caps=tiny)
     assert res.failed          # fast-fail, not wrong answers (§3.4)
 
 
 def test_queries_see_snapshot_despite_updates():
     db, G = film_db()
-    res0 = run_queries(db, [q1(0)], CAPS)
+    res0 = db.query([q1(0)], caps=CAPS)
     # mutate: delete an actor that was reachable
     a_gid, found = db.lookup_vertex("actor", 300)
     if found:
         db.delete_vertex(a_gid)
-    res1 = run_queries(db, [q1(0)], CAPS)
+    res1 = db.query([q1(0)], caps=CAPS)
     # old result unchanged, new result consistent with mutation
     assert res1.counts[0] in (res0.counts[0], res0.counts[0] - 1)
 
@@ -167,7 +167,7 @@ def test_queries_see_snapshot_despite_updates():
 @given(seed=st.integers(0, 2**16))
 def test_property_counts_match_oracle(seed):
     db, G = film_db(seed=seed, n_dir=3, n_film=10, n_act=12)
-    res = run_queries(db, [q1(d) for d in range(3)], CAPS)
+    res = db.query([q1(d) for d in range(3)], caps=CAPS)
     for d in range(3):
         assert res.counts[d] == len(
             oracle_two_hop(G, ("director", d), "film.director", "film.actor"))

@@ -1,0 +1,170 @@
+"""A1Server: continuation-token-aware batching (§3.4).
+
+A continuation is a batch citizen: it pins its snapshot, serves pages from
+the materialized window without re-running anything, and when a client
+pages past the window the follow-up fetch *joins the next wave batch*
+(per-query ``read_ts`` + a ``results`` cap hint) instead of dispatching
+alone.  These tests pin that contract: deep pagination past ``results``,
+snapshot stability under live writes, pin hygiene, and hedged retries on
+mixed chain+star batches.
+"""
+import numpy as np
+
+from repro.core.query.executor import QueryCaps
+from repro.launch.serve import A1Server
+
+from test_backend_parity import build_db, q_chain, q_star
+
+SEL = {"type": "actor", "id": 323,
+       "_in_edge": {"type": "film.actor",
+                    "_target": {"type": "film", "select": ["key"]}}}
+
+
+def busy_db():
+    db = build_db(seed=30, n_film=20, n_act=24)   # actor 323 is in ~10 films
+    return db
+
+
+def full_rows(db, sel):
+    res = db.query([sel], caps=QueryCaps(frontier=128, expand=512,
+                                         results=64))
+    return sorted(int(x) for x in res.rows_gid[0] if x >= 0)
+
+
+def test_pages_past_results_cap_by_joining_batches():
+    db = busy_db()
+    want = full_rows(db, SEL)
+    assert len(want) > 4                          # deep pagination territory
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    for _ in range(50):
+        if token is None:
+            break
+        # live traffic between pages: refills join these wave batches
+        srv.execute([q_chain(0), q_star(0, 301)], qclass="Q1")
+        page, token = srv.next_page(token)
+        got.extend(page)
+    assert token is None
+    assert sorted(int(x) for x in got) == want
+    assert srv.stats["continuation_joins"] >= 1   # refills rode the batches
+    assert not db.active_query_ts                 # every pin released
+
+
+def test_pages_flush_without_traffic():
+    db = busy_db()
+    want = full_rows(db, SEL)
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=3)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)        # no traffic: sync flush
+        got.extend(page)
+    assert sorted(int(x) for x in got) == want
+    assert srv.stats["continuation_flushes"] >= 1
+    assert not db.active_query_ts
+
+
+def test_pages_past_server_frontier_via_hedge():
+    """A result set bigger than caps.frontier still pages to completion:
+    the refill fast-fails at base caps, the hedge materializes it at 4x,
+    and the ceiling/progress guard keeps growing the window instead of
+    silently ending pagination at the base frontier."""
+    db = busy_db()
+    want = full_rows(db, SEL)                     # ~10 rows
+    caps = QueryCaps(frontier=8, expand=512, results=4)
+    srv = A1Server(db, caps=caps, page_size=2)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)
+        got.extend(page)
+    assert token is None
+    assert sorted(int(x) for x in got) == want    # nothing silently lost
+    assert len(want) > caps.frontier
+    assert not db.active_query_ts
+
+
+def test_continuation_reads_its_pinned_snapshot():
+    """Pages fetched after live deletes still see the token's snapshot."""
+    db = busy_db()
+    want = full_rows(db, SEL)
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    # delete films the continuation still owes the client
+    for k in range(100, 103):
+        g, found = db.lookup_vertex("film", k)
+        if found:
+            db.delete_vertex(g)
+    db.run_compaction()                           # pin must protect versions
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)
+        got.extend(page)
+    assert sorted(int(x) for x in got) == want    # snapshot-stable pages
+    assert not db.active_query_ts
+
+
+def test_failed_select_paged_releases_pin():
+    """A malformed document must not leak the would-be token's GC pin."""
+    db = busy_db()
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4))
+    import pytest
+    from repro.core.query.a1ql import ParseError
+    with pytest.raises(ParseError):
+        srv.select_paged({"type": "actor"})       # no id
+    assert not db.active_query_ts
+    with pytest.raises(ValueError):
+        srv.select_paged(q_chain(0))              # count query: no rows
+    assert not db.active_query_ts
+
+
+def test_expired_token_releases_pin():
+    db = busy_db()
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2, continuation_ttl=0.0)
+    page, token = srv.select_paged(SEL)
+    assert token is not None and db.active_query_ts
+    try:
+        srv.next_page(token)
+        raise AssertionError("expired token should raise")
+    except KeyError:
+        pass
+    assert not db.active_query_ts
+
+
+def test_hedged_retry_scales_cap_hints():
+    """A query whose own hints pin frontier/expand must retry at 4x those
+    hints, not at the same doomed budget."""
+    db = busy_db()
+    srv = A1Server(db, caps=QueryCaps(frontier=512, expand=2048, results=16))
+    hinted = {**q_chain(0), "hints": {"frontier": 64, "expand": 8}}
+    res = srv.execute([hinted, q_chain(1)], qclass="hinted")
+    assert srv.stats["hedged"] == 1
+    assert not res.failed_q[0]            # succeeded at the 4x'd hints
+    solo = db.query([q_chain(0)],
+                    caps=QueryCaps(frontier=256, expand=32, results=16))
+    assert res.counts[0] == solo.counts[0]
+
+
+def test_hedged_retry_patches_only_failed_queries():
+    db = busy_db()
+    tiny = QueryCaps(frontier=16, expand=2, results=4)
+    srv = A1Server(db, caps=tiny)
+    batch = [q_chain(0), q_chain(999), q_star(0, 301)]
+    res = srv.execute(batch, qclass="mixed")
+    assert srv.stats["hedged"] == 1
+    big = QueryCaps(frontier=64, expand=8, results=4)
+    for i, q in enumerate(batch):
+        solo = db.query([q], caps=big)
+        if not solo.failed:
+            assert res.counts[i] == solo.counts[0], i

@@ -10,7 +10,6 @@ import numpy as np
 from repro.core.addressing import StoreConfig, TS_INF
 from repro.core.graphdb import GraphDB
 from repro.core.query.executor import QueryCaps
-from repro.core.query.planner import run_queries_batched
 from repro.core.tasks import (Task, TaskQueue, compaction_task,
                               delete_graph_task, delete_type_task,
                               index_compaction_task, vacuum_task)
@@ -98,7 +97,7 @@ def test_pump_between_waves_preserves_foreground_results():
     ts = db.snapshot_ts()
     db.active_query_ts.append(ts)          # a long-running batched query
     try:
-        base = run_queries_batched(db, queries, CAPS, read_ts=ts)
+        base = db.query(queries, caps=CAPS, read_ts=ts, fused=True)
         tq = TaskQueue(db)
         # mutate the graph mid-flight, then pump maintenance between waves
         victim = db.get_vertex("actor", 300)
@@ -108,7 +107,7 @@ def test_pump_between_waves_preserves_foreground_results():
             tq.enqueue(task)
         while tq.pending():
             tq.pump(1)                     # one quantum between waves
-            res = run_queries_batched(db, queries, CAPS, read_ts=ts)
+            res = db.query(queries, caps=CAPS, read_ts=ts, fused=True)
             assert np.array_equal(res.counts, base.counts)
             assert np.array_equal(res.rows_gid, base.rows_gid)
             assert np.array_equal(res.failed_q, base.failed_q)
@@ -118,5 +117,5 @@ def test_pump_between_waves_preserves_foreground_results():
     # after the pin drops and versions are GC'd, a fresh snapshot moves on
     db.run_compaction()
     db.run_index_compaction()
-    fresh = run_queries_batched(db, queries, CAPS)
+    fresh = db.query(queries, caps=CAPS, fused=True)
     assert fresh.counts[0] == base.counts[0] - 1   # film 100 lost actor 300
