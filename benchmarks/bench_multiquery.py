@@ -5,12 +5,16 @@ concurrent queries.  This suite runs a *heterogeneous* query mix (different
 hop counts, directions, filters — so the per-plan fast path can't apply)
 through the fused-wave path (``GraphDB.query(..., fused=True)``) at batch
 sizes 1/8/64 and reports per-query latency, plus star-pattern and mixed
-chain+star batches (fused into the same waves since A1QL v2).  The
-amortization claim is that batch-64 per-query latency lands well under
-batch-1; ``tests/test_planner.py::test_amortization_gate`` (and its
-``_with_stars`` twin) enforce the <= 0.5x gate on the ref backend, while
-the ``derived`` field records the measured speedup so the BENCH_*.json
-trajectory keeps it observable across commits.
+chain+star batches (fused into the same waves since A1QL v2), plus the
+**shared-frontier** mode (``budget="shared"``) at batch 64/256 — the
+serving-cap memory shape, whose rows stamp the measured peak frontier
+bytes per mode into the derived metadata (the O(F*sqrt(Q))-vs-O(F*Q)
+claim stays observable across commits).  The amortization claim is that
+batch-64 per-query latency lands well under batch-1;
+``tests/test_planner.py::test_amortization_gate`` (and its ``_with_stars``
+twin) enforce the <= 0.5x gate on the ref backend, while the ``derived``
+field records the measured speedup so the BENCH_*.json trajectory keeps it
+observable across commits.
 """
 import numpy as np
 
@@ -23,6 +27,7 @@ CAPS = QueryCaps(frontier=128, expand=512, results=16)
 BATCHES = (1, 8, 64)
 STAR_BATCHES = (8,)
 MIXED_BATCHES = (8, 32)
+SHARED_BATCHES = (64, 256)
 
 
 def q_2hop(did):
@@ -81,13 +86,27 @@ def make_batch(kg, rng, b: int, mix=("2hop", "rev", "filtered")) -> list:
     return out
 
 
-def _bench(db, name, queries, b, base_us=None):
-    avg, p99, _ = timeit(lambda: db.query(queries, caps=CAPS, fused=True),
+def _frontier_meta():
+    """Peak frontier bytes per budget mode, from the planner's counters."""
+    from repro.core.query import planner
+    fs = planner.FRONTIER_STATS
+    cs = planner.CACHE_STATS
+    total = cs["hits"] + cs["misses"]
+    hit = cs["hits"] / total if total else 0.0
+    return (f"peak_frontier_perq_B={fs['per_query_peak_bytes']}"
+            f";peak_frontier_shared_B={fs['shared_peak_bytes']}"
+            f";planner_cache_hit_rate={hit:.3f}")
+
+
+def _bench(db, name, queries, b, base_us=None, budget=None):
+    avg, p99, _ = timeit(lambda: db.query(queries, caps=CAPS, fused=True,
+                                          budget=budget),
                          warmup=2, iters=10)
     us = avg / b * 1e6
     derived = (f"batch={b};avg_ms={avg*1e3:.2f};p99_ms={p99*1e3:.2f}")
     if base_us:
         derived += f";perq_speedup_vs_b1={base_us / us:.2f}x"
+    derived += ";" + _frontier_meta()
     emit(name, us, derived)
     return us
 
@@ -97,10 +116,12 @@ def run(kg=None):
     db = kg.db
     rng = np.random.default_rng(0)
     base_us = None
+    perq_us = {}
     for b in BATCHES:
         us = _bench(db, f"multiquery_b{b}", make_batch(kg, rng, b), b,
                     base_us)
         base_us = base_us or us
+        perq_us[b] = us
     # star + mixed chain+star batches: fused into the same waves (A1QL v2)
     for b in STAR_BATCHES:
         _bench(db, f"multiquery_star_b{b}",
@@ -109,6 +130,13 @@ def run(kg=None):
         _bench(db, f"multiquery_mixed_b{b}",
                make_batch(kg, rng, b, mix=("2hop", "star", "rev")), b,
                base_us)
+    # shared-frontier mode: same mix, one shared (seg, gid) pool per batch
+    for b in SHARED_BATCHES:
+        us = _bench(db, f"multiquery_shared_b{b}", make_batch(kg, rng, b),
+                    b, base_us, budget="shared")
+        if b in perq_us:
+            emit(f"multiquery_shared_vs_perq_b{b}", 0.0,
+                 f"shared_over_perq={us / perq_us[b]:.2f}x")
     return db
 
 

@@ -126,3 +126,50 @@ def searchsorted(keys, queries, *, backend: Backend):
         from repro.kernels.sorted_lookup.kernel import searchsorted_left
         return searchsorted_left(keys, queries, interpret=backend.interpret)
     return jnp.searchsorted(keys, queries, side="left").astype(jnp.int32)
+
+
+def searchsorted_ranged(keys, queries, lo, hi, *, backend: Backend):
+    """Per-query windowed probe: ``count(keys[lo:hi] < q)`` for each query.
+
+    ``keys`` need only be sorted within each query's ``[lo, hi)`` window
+    (variable-width, unlike :func:`searchsorted_blocked`) — the shared
+    frontier's per-segment runs, the shard-major primary index, etc.
+    """
+    if backend.is_pallas:
+        from repro.kernels.sorted_lookup.kernel import searchsorted_left_ranged
+        return searchsorted_left_ranged(keys, queries, lo, hi,
+                                        interpret=backend.interpret)
+    from repro.kernels.sorted_lookup.ref import searchsorted_left_ranged
+    return searchsorted_left_ranged(keys, queries, lo, hi)
+
+
+def sort_rows(x, *, backend: Backend):
+    """Row-wise ascending sort of an (R, W) i32 matrix (the full-width sort
+    behind every dedup/merge wave).  The pallas path runs the VMEM-resident
+    bitonic network of ``kernels/dedup_compact``; both are bit-identical."""
+    if backend.is_pallas:
+        from repro.kernels.dedup_compact.kernel import sort_rows as _k
+        return _k(x, interpret=backend.interpret)
+    from repro.kernels.dedup_compact.ref import sort_rows as _r
+    return _r(x)
+
+
+def dedup_compact_rows(x, cap: int, *, backend: Backend):
+    """(R, W) candidates (PAD = invalid) -> ((R, cap) sorted-unique regions,
+    (R,) unique counts).  The §3.4 per-hop compaction; counts > cap is the
+    fast-fail condition."""
+    if backend.is_pallas:
+        from repro.kernels.dedup_compact.kernel import dedup_compact_rows as _k
+        return _k(x, cap, interpret=backend.interpret)
+    from repro.kernels.dedup_compact.ref import dedup_compact_rows as _r
+    return _r(x, cap)
+
+
+def sort_pairs(k1, k2, *, backend: Backend):
+    """Lexicographic ascending sort of flat (k1, k2) i32 pairs (the shared
+    frontier's one compaction sort per hop)."""
+    if backend.is_pallas:
+        from repro.kernels.dedup_compact.kernel import sort_pairs as _k
+        return _k(k1, k2, interpret=backend.interpret)
+    from repro.kernels.dedup_compact.ref import sort_pairs as _r
+    return _r(k1, k2)

@@ -210,9 +210,12 @@ class GraphDB:
         The unified entry point (``core.query.engine.execute``): parses each
         document to the logical-plan IR and routes internally — local vs
         SPMD (``mesh=``), per-plan-shape vs fused multi-query waves
-        (``fused=None`` auto, ``True`` forces per-query budgets +
-        ``failed_q`` flags).  Accepts ``caps=``, ``backend=``, ``read_ts=``
-        (scalar or per-query), ``parsed=``; returns a ``QueryResult``."""
+        (``fused=None`` auto, ``True`` forces per-query ``failed_q``
+        flags).  ``budget="shared"`` pools all queries' frontiers into one
+        shared-capacity pool (O(F*sqrt(Q)) peak memory — the serving-cap
+        shape; overflow is owner-attributed fast-fail).  Accepts ``caps=``,
+        ``backend=``, ``read_ts=`` (scalar or per-query), ``parsed=``;
+        returns a ``QueryResult``."""
         from repro.core.query.engine import execute
         return execute(self, queries, **kw)
 

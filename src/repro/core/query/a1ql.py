@@ -84,6 +84,18 @@ def _parse_hints(node) -> CapHints:
     return CapHints(**vals)
 
 
+def _parse_cursor(q) -> int:
+    """Root-level ``gid_cursor``: a runtime final predicate ``gid > cursor``
+    (deep-pagination refills page in O(page) without retracing — the cursor
+    never enters the physical plan)."""
+    v = q.get("gid_cursor")
+    if v is None:
+        return -1
+    if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+        raise ParseError(f"gid_cursor must be a non-negative int, got {v!r}")
+    return int(v)
+
+
 def parse(db, q: dict):
     """Parse one A1QL document into its logical-plan IR root."""
     if "intersect" in q:
@@ -145,14 +157,16 @@ def _parse_chain(db, q: dict):
 def _terminal(db, node, body, vtype_name: Optional[str], root=None):
     term, kinds, cols = _parse_select(db, node, vtype_name=vtype_name)
     hints = _parse_hints(node)
+    cursor = _parse_cursor(root if root is not None else node)
     if root is not None and root is not node:
         # chains: hints may sit at the terminal AND/OR the root; per-key
         # merge with the ROOT winning, so a caller can wrap any document
         # with an override (serve's continuation refills do exactly this)
         hints = hints.override(_parse_hints(root))
     if term == "count":
-        return ir.Count(child=body, hints=hints)
-    return ir.Select(child=body, kinds=kinds, cols=cols, hints=hints)
+        return ir.Count(child=body, hints=hints, gid_cursor=cursor)
+    return ir.Select(child=body, kinds=kinds, cols=cols, hints=hints,
+                     gid_cursor=cursor)
 
 
 def parse_legacy(db, q: dict):

@@ -75,31 +75,62 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
             read_ts: Union[None, int, Sequence[int]] = None,
             mesh=None, storage_axes=("data", "model"),
             parsed: Optional[list] = None,
-            fused: Optional[bool] = None) -> QueryResult:
+            fused: Optional[bool] = None,
+            budget: Optional[str] = None) -> QueryResult:
     """Execute a batch of A1QL queries at consistent snapshot timestamps.
 
     See the module docstring for routing; all queries in one call observe
     MVCC snapshots pinned for the whole call, and results (``counts`` /
     ``rows_gid`` / ``rows`` / ``truncated`` / fast-fail flags) scatter back
     into input order.
+
+    ``budget`` selects the fused frontier discipline: ``"per-query"`` (the
+    default) gives every query its own §3.4 working-set budget —
+    bit-identical to solo runs; ``"shared"`` pools all live queries'
+    frontiers into one shared-capacity pool (O(F*sqrt(Q)) peak memory, the
+    serving-cap shape) whose overflow is owner-attributed via ``failed_q``
+    — results can differ from per-query mode only via those flags.
+    ``budget="shared"`` always runs the fused planner.
+
+    Documents may carry a root-level ``"gid_cursor": <gid>`` — a runtime
+    final predicate ``gid > cursor`` (deep-pagination refills); cursor
+    batches always run fused, and the cursor never retraces a program.
+    Cursors are local-executor only: SPMD select rows are ordered
+    shard-major, so a max-gid cursor could silently skip rows — a cursor
+    under ``mesh=`` raises (serve's refills fall back to the pow2 growing
+    window there).
     """
     from repro.core.query import planner
     if not queries:
         raise ValueError("execute() needs at least one query")
+    if budget not in (None, "per-query", "shared"):
+        raise ValueError(f"budget must be 'per-query' or 'shared', "
+                         f"got {budget!r}")
     caps = caps or QueryCaps()
     be = backend_mod.resolve(backend or getattr(db, "backend", None))
     lowered = _normalize_parsed(db, queries, parsed)
     Q = len(lowered)
     ts_list = _normalize_ts(db, Q, read_ts)
     eff_caps = [lo.hints.apply(caps) for lo in lowered]
+    cursors = [lo.cursor for lo in lowered]
+    any_cursor = any(c >= 0 for c in cursors)
+    if any_cursor and mesh is not None:
+        # SPMD select truncation is shard-major, not gid-ascending: paging
+        # by max-gid cursor could permanently skip rows on later shards
+        raise ValueError("gid_cursor is not supported under mesh= "
+                         "(SPMD rows are shard-major; use the growing-"
+                         "window continuation instead)")
 
     uniform = (all(lo.plan == lowered[0].plan for lo in lowered[1:])
                and all(c == eff_caps[0] for c in eff_caps[1:])
-               and len(set(ts_list)) == 1)
+               and len(set(ts_list)) == 1
+               and not any_cursor)
     if fused is False and not uniform:
         raise ValueError("fused=False requires a uniform batch "
-                         "(one plan shape, caps, and snapshot)")
-    run_fused = bool(fused) or not uniform
+                         "(one plan shape, caps, snapshot, no cursors)")
+    if fused is False and budget == "shared":
+        raise ValueError("budget='shared' requires the fused planner")
+    run_fused = bool(fused) or not uniform or budget == "shared"
 
     pins = sorted(set(ts_list))
     for t in pins:                            # pin versions (GC barrier)
@@ -107,7 +138,9 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
     try:
         if run_fused:
             return planner.execute_fused(db, lowered, eff_caps, ts_list, be,
-                                         mesh=mesh, storage_axes=storage_axes)
+                                         mesh=mesh, storage_axes=storage_axes,
+                                         budget=budget or "per-query",
+                                         cursors=cursors)
         return _execute_uniform(db, lowered, eff_caps[0], ts_list[0], be,
                                 mesh, storage_axes)
     finally:

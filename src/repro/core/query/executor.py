@@ -41,6 +41,12 @@ class QueryCaps:
     results: int = 64          # rows returned per query (continuation beyond)
     # spmd-only:
     bucket: int = 256          # per-destination-shard routing bucket
+    # shared-frontier mode only (GraphDB.query(..., budget="shared")):
+    # explicit shared-pool sizes; 0 = the planner's auto policy
+    # (per-cap * ceil(sqrt(units)), pow2 — see planner.shared_budget)
+    shared_frontier: int = 0
+    shared_expand: int = 0
+    shared_bucket: int = 0
 
 
 @dataclasses.dataclass

@@ -183,9 +183,14 @@ class Intersect:
 
 @dataclasses.dataclass(frozen=True)
 class Count:
-    """Terminal: count the final frontier."""
+    """Terminal: count the final frontier.
+
+    ``gid_cursor`` (-1 = none) is a *runtime* final predicate
+    ``gid > cursor`` — like start keys it never enters the physical plan,
+    so continuation refills with moving cursors reuse compiled programs."""
     child: "Body"
     hints: CapHints = NO_HINTS
+    gid_cursor: int = -1
 
     def signature(self):
         return ("count", self.child.signature())
@@ -193,11 +198,14 @@ class Count:
 
 @dataclasses.dataclass(frozen=True)
 class Select:
-    """Terminal: materialize rows (gid + the named attribute columns)."""
+    """Terminal: materialize rows (gid + the named attribute columns).
+
+    ``gid_cursor``: see :class:`Count` — runtime data, not plan identity."""
     child: "Body"
     kinds: tuple = ()            # per col: 'f32'|'i32'|'key'
     cols: tuple = ()
     hints: CapHints = NO_HINTS
+    gid_cursor: int = -1
 
     def signature(self):
         return ("select", self.kinds, self.cols, self.child.signature())
@@ -226,10 +234,11 @@ class Lowered:
 
     ``keys`` holds one start key per chain unit (1 for a chain, one per
     branch for a star) — always a tuple, never the historical int-vs-list
-    split."""
+    split.  ``cursor`` is the runtime gid-cursor (-1 = none)."""
     plan: Plan
     keys: tuple[int, ...]
     hints: CapHints = NO_HINTS
+    cursor: int = -1
 
     @property
     def is_intersect(self) -> bool:
@@ -291,13 +300,15 @@ def lower(root) -> Lowered:
         plan = Plan(start_vtype=-1, hops=(), terminal=terminal,
                     select_kind=kinds, select_cols=cols,
                     branches=tuple(chains), final_pred=final_pred)
-        return Lowered(plan=plan, keys=tuple(keys), hints=root.hints)
+        return Lowered(plan=plan, keys=tuple(keys), hints=root.hints,
+                       cursor=root.gid_cursor)
     vt, hops, key = _lower_chain(body)
     if not hops:
         raise LoweringError("query needs at least one traversal step")
     plan = Plan(start_vtype=vt, hops=hops, terminal=terminal,
                 select_kind=kinds, select_cols=cols, final_pred=final_pred)
-    return Lowered(plan=plan, keys=(key,), hints=root.hints)
+    return Lowered(plan=plan, keys=(key,), hints=root.hints,
+                   cursor=root.gid_cursor)
 
 
 def from_legacy(plan: Plan, key_or_keys) -> Lowered:

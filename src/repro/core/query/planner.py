@@ -156,26 +156,17 @@ def _unit_tables(plans: Sequence[Plan]):
 # fused wave primitives (shared by the local and SPMD programs)
 # ---------------------------------------------------------------------------
 
-def _dedup_rows(cand_g, cand_v, F: int):
+def _dedup_rows(cand_g, cand_v, F: int,
+                backend: backend_mod.Backend = backend_mod.REF):
     """Per-unit dedup/compact: (R, W) candidates -> (R, F) regions.
 
     Row r ends up with its first F unique gids in ascending order (PAD
     beyond), exactly what ``dedup_compact`` produces for the unit alone.
-    Returns (gids, valid, overflow_r)."""
-    Q = cand_g.shape[0]
+    Dispatches through ``backend.dedup_compact_rows`` — the jnp sort oracle
+    on ref, the VMEM-resident ``kernels/dedup_compact`` bitonic network on
+    pallas, bit-identical.  Returns (gids, valid, overflow_r)."""
     key = jnp.where(cand_v, cand_g, PAD)
-    key_s = jax.lax.sort(key, dimension=1)
-    valid_s = key_s != PAD
-    prev = jnp.concatenate(
-        [jnp.full((Q, 1), -1, key_s.dtype), key_s[:, :-1]], axis=1)
-    first = valid_s & (key_s != prev)
-    f32i = first.astype(jnp.int32)
-    n_q = jnp.sum(f32i, axis=1)
-    rank = jnp.cumsum(f32i, axis=1) - 1
-    col = jnp.where(first & (rank < F), rank, F)     # F = out of range, drop
-    rows = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None],
-                            col.shape)
-    g = jnp.full((Q, F), PAD, jnp.int32).at[rows, col].set(key_s, mode="drop")
+    g, n_q = backend_mod.dedup_compact_rows(key, F, backend=backend)
     return g, g != PAD, n_q > F
 
 
@@ -276,7 +267,8 @@ def _check_rows(st, rows, valid, ts_q, tvt_q, preds):
     return alive
 
 
-def _merge_rows(g, valid, n_br, rows_of_q, F: int):
+def _merge_rows(g, valid, n_br, rows_of_q, F: int,
+                backend: backend_mod.Backend = backend_mod.REF):
     """The intersect-merge wave: (R, F) unit regions -> (Q, F) query regions.
 
     Each query keeps the gids present in *every* one of its branch rows
@@ -284,12 +276,13 @@ def _merge_rows(g, valid, n_br, rows_of_q, F: int):
     rows are sorted-unique, so multiplicity == branch coverage).  Chains
     (one branch) pass through unchanged modulo compaction.  The merged
     region cannot overflow: a full-coverage gid consumes one slot per
-    branch, so uniques with full runs never exceed F."""
+    branch, so uniques with full runs never exceed F.  The sort dispatches
+    through ``backend.sort_rows`` (``kernels/dedup_compact`` on pallas)."""
     Q, Bmax = rows_of_q.shape
     gp = jnp.concatenate([jnp.where(valid, g, PAD),
                           jnp.full((1, F), PAD, jnp.int32)], axis=0)
     key = gp[jnp.asarray(rows_of_q)].reshape(Q, Bmax * F)
-    key_s = jax.lax.sort(key, dimension=1)
+    key_s = backend_mod.sort_rows(key, backend=backend)
     valid_s = key_s != PAD
     prev = jnp.concatenate([jnp.full((Q, 1), -1, key_s.dtype),
                             key_s[:, :-1]], axis=1)
@@ -370,6 +363,34 @@ def _pow2ceil(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
+# peak frontier footprint (bytes) of the programs executed so far, per
+# budget mode — the memory claim of the shared-frontier mode, observable
+# the same way CACHE_STATS is (serve /stats and bench metadata stamp it)
+FRONTIER_STATS = {"per_query_peak_bytes": 0, "shared_peak_bytes": 0}
+
+
+def _ceil_sqrt(n: int) -> int:
+    import math
+    return math.isqrt(max(0, int(n) - 1)) + 1
+
+
+def shared_budget(n_units: int, per_cap: int, explicit: int = 0) -> int:
+    """The shared-capacity policy: ``per_cap * ceil(sqrt(R))`` (pow2).
+
+    Concurrent queries' frontiers rarely peak together, so the shared pool
+    grows sub-linearly in the unit count R — O(F*sqrt(R)) instead of the
+    per-query mode's O(F*R) — while still giving every unit its full
+    per-unit budget when few peak at once.  ``explicit`` (from
+    ``QueryCaps.shared_*``) overrides the policy; the result is clamped to
+    the per-query footprint (never pay more than per-query mode would).
+    """
+    r = max(1, int(n_units))
+    if explicit:
+        return min(int(explicit), r * per_cap)
+    auto = max(_pow2ceil(per_cap * _ceil_sqrt(r)), _pow2ceil(r))
+    return min(r * per_cap, auto)
+
+
 def delta_window(db) -> int:
     """Static per-shard edge-delta-log window for the next fused program.
 
@@ -425,7 +446,7 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
 
     @jax.jit
-    def run(store, keys, valid_in, ts_q):
+    def run(store, keys, valid_in, ts_q, cur_q):
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
         failed_r = jnp.zeros((R,), bool)
         # ---- lookup wave: one probe for every chain unit ------------------
@@ -467,7 +488,8 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 parts_g += [out_n, dn]
                 parts_v += [out_n >= 0, dn >= 0]
             g, valid, ovf = _dedup_rows(jnp.concatenate(parts_g, axis=1),
-                                        jnp.concatenate(parts_v, axis=1), F)
+                                        jnp.concatenate(parts_v, axis=1), F,
+                                        backend)
             failed_r = failed_r | ovf
             rows = cfg.row_of_gid(jnp.where(valid, g, 0))
             valid = valid & _check_rows(store, rows, valid, ts_r,
@@ -475,7 +497,7 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
 
         # ---- intersect-merge wave (units -> queries) ----------------------
         if has_star:
-            g, valid = _merge_rows(g, valid, n_br, rows_of_q, F)
+            g, valid = _merge_rows(g, valid, n_br, rows_of_q, F, backend)
         failed_q = jax.ops.segment_sum(
             failed_r.astype(jnp.int32), jnp.asarray(row2q),
             num_segments=Q) > 0
@@ -486,6 +508,10 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             valid = valid & _check_rows(store, rows, valid, ts_q,
                                         jnp.full((Q,), -1, jnp.int32),
                                         final_preds)
+        # gid-cursor continuations: runtime per-query final predicate
+        # ``gid > cursor`` (-1 = no cursor, a no-op) — serve's deep-page
+        # refills stay O(page) without baking the cursor into the program
+        valid = valid & (g > cur_q[:, None])
         out = {"failed_q": failed_q}
         if terminal == "count":
             out["counts"] = jnp.sum(valid.astype(jnp.int32), axis=1)
@@ -562,32 +588,58 @@ def _fusion_groups(lowered, eff_caps):
 
 def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
                   be: backend_mod.Backend, mesh=None,
-                  storage_axes=("data", "model")) -> QueryResult:
-    """Run pre-lowered plans as fused multi-query waves (per-query budgets).
+                  storage_axes=("data", "model"),
+                  budget: str = "per-query",
+                  cursors: Optional[Sequence[int]] = None) -> QueryResult:
+    """Run pre-lowered plans as fused multi-query waves.
 
     The engine (``core.query.engine.execute``) owns parsing, snapshot
-    pinning, and routing; this is the fused leg.  Every query gets its
-    *own* §3.4 capacity budget and MVCC snapshot, arbitrary plan shapes —
-    chains and stars — fuse into one program per (terminal signature,
-    effective caps) group, and results (with per-query ``failed_q`` flags)
-    are bit-identical to running each query through the per-plan executor
-    alone."""
+    pinning, and routing; this is the fused leg.  With the default
+    ``budget="per-query"`` every query gets its *own* §3.4 capacity budget
+    and MVCC snapshot, arbitrary plan shapes — chains and stars — fuse into
+    one program per (terminal signature, effective caps) group, and results
+    (with per-query ``failed_q`` flags) are bit-identical to running each
+    query through the per-plan executor alone.  ``budget="shared"`` runs
+    the shared-frontier programs (``planner_shared``) instead: one flat
+    (seg, gid) frontier pool per group with an O(F*sqrt(R)) shared capacity
+    — results can differ from per-query mode only via fast-fail flags under
+    shared overflow.  ``cursors`` is the per-query runtime gid-cursor
+    vector (-1 = none), applied as a final ``gid > cursor`` predicate
+    without retracing (the cursor stays runtime data)."""
+    from repro.core.query import planner_shared
     Q = len(lowered)
     out = _Assembly(Q, max(c.results for c in eff_caps))
     dwin = delta_window(db)
     xwin = index_window(db)
+    cursors = [-1] * Q if cursors is None else list(cursors)
     for caps_g, idxs in _fusion_groups(lowered, eff_caps):
         plans_g = tuple(lowered[i].plan for i in idxs)
         keys = jnp.asarray([k for i in idxs for k in lowered[i].keys],
                            jnp.int32)
         ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
+        cur = jnp.asarray([cursors[i] for i in idxs], jnp.int32)
         R = int(keys.shape[0])
-        if mesh is not None:
-            fn = compile_batch_spmd(db.cfg, plans_g, caps_g, mesh,
-                                    storage_axes, be, dwin, xwin)
+        if budget == "shared":
+            FS = shared_budget(R, caps_g.frontier, caps_g.shared_frontier)
+            FRONTIER_STATS["shared_peak_bytes"] = max(
+                FRONTIER_STATS["shared_peak_bytes"], 2 * 4 * FS)
+            if mesh is not None:
+                fn = planner_shared.compile_batch_shared_spmd(
+                    db.cfg, plans_g, caps_g, mesh, storage_axes, be,
+                    dwin, xwin)
+            else:
+                fn = planner_shared.compile_batch_shared(
+                    db.cfg, plans_g, caps_g, be, dwin, xwin)
         else:
-            fn = compile_batch(db.cfg, plans_g, caps_g, be, dwin, xwin)
-        out.put(idxs, fn(db.store, keys, jnp.ones((R,), bool), ts))
+            FRONTIER_STATS["per_query_peak_bytes"] = max(
+                FRONTIER_STATS["per_query_peak_bytes"],
+                4 * R * caps_g.frontier)
+            if mesh is not None:
+                fn = compile_batch_spmd(db.cfg, plans_g, caps_g, mesh,
+                                        storage_axes, be, dwin, xwin)
+            else:
+                fn = compile_batch(db.cfg, plans_g, caps_g, be, dwin, xwin)
+        out.put(idxs, fn(db.store, keys, jnp.ones((R,), bool), ts, cur))
     return out.result()
 
 
@@ -710,7 +762,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     def _local_rows(st, g, valid):
         return jnp.where(valid, g // S, 0)
 
-    def body(st, keys, valid_in, ts_q):
+    def body(st, keys, valid_in, ts_q, cur_q):
         me = jax.lax.axis_index(axes).astype(jnp.int32)
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
         failed_r = jnp.zeros((R,), bool)
@@ -727,7 +779,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             # 1) batched RPCs: ship active pairs to their owners
             arr, am, ovf = _route_rows(g, valid & act[:, None], S, B, axes)
             failed_r = failed_r | ovf
-            ag, am, ovf2 = _dedup_rows(arr, am, F)
+            ag, am, ovf2 = _dedup_rows(arr, am, F, backend)
             failed_r = failed_r | ovf2
             # 2) owner-side pending checks (previous hop's vertex checks)
             alive = am & _check_rows(st, _local_rows(st, ag, am), am, ts_r,
@@ -770,13 +822,14 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 parts_g += [out_n, dn]
                 parts_v += [out_n >= 0, dn >= 0]
             g, valid, ovf3 = _dedup_rows(jnp.concatenate(parts_g, axis=1),
-                                         jnp.concatenate(parts_v, axis=1), F)
+                                         jnp.concatenate(parts_v, axis=1), F,
+                                         backend)
             failed_r = failed_r | ovf3
 
         # ---- finalize: route everything, owed checks, merge, aggregate ----
         arr, am, ovf = _route_rows(g, valid, S, B, axes)
         failed_r = failed_r | ovf
-        ag, valid, ovf2 = _dedup_rows(arr, am, F)
+        ag, valid, ovf2 = _dedup_rows(arr, am, F, backend)
         failed_r = failed_r | ovf2
         rows_l = _local_rows(st, ag, valid)
         valid = valid & _check_rows(st, rows_l, valid, ts_r,
@@ -785,7 +838,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
         # lives on the gid's owner shard (ownership routing = equi-join
         # locality), so local run-length == global branch coverage
         if has_star:
-            g2, valid = _merge_rows(ag, valid, n_br, rows_of_q, F)
+            g2, valid = _merge_rows(ag, valid, n_br, rows_of_q, F, backend)
         else:
             g2 = ag
         rows_l = _local_rows(st, g2, valid)
@@ -796,6 +849,8 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             valid = valid & _check_rows(st, rows_l, valid, ts_q,
                                         jnp.full((Q,), -1, jnp.int32),
                                         final_preds)
+        # gid-cursor continuations (runtime; -1 = no cursor, a no-op)
+        valid = valid & (g2 > cur_q[:, None])
         out = {"failed_q":
                jax.lax.psum(failed_q.astype(jnp.int32), axes) > 0}
         if terminal == "count":
@@ -852,7 +907,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
         out_specs.update(rows_gid=P(), truncated=P(),
                          attrs={k: P() for k in select})
     fn = jax.jit(compat.shard_map(
-        body, mesh=mesh, in_specs=(store_specs, P(), P(), P()),
+        body, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
         out_specs=out_specs, check_vma=False))
     _cache_put(key, fn)
     return fn

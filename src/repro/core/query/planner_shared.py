@@ -1,0 +1,657 @@
+"""Shared-frontier fused execution (§3.4 at serving scale).
+
+The per-query-budget fused waves (``planner.py``) give every chain unit a
+private ``(frontier,)`` region — an ``(R, F)`` matrix whose footprint grows
+linearly in the number of concurrent units, and whose per-hop compaction is
+R row-wise sorts.  A1 sustains its serving batch sizes by keeping per-query
+state tiny and letting all in-flight queries share the read machinery; this
+module is that shape: **one** flat pool of ``(seg, gid)`` pairs shared by
+every live query, compacted once per hop.
+
+  * the frontier is three flat ``(FS,)`` arrays — ``seg`` (which chain unit
+    owns the pair; R = empty), ``gid`` (PAD = empty), and a liveness mask —
+    kept sorted lexicographically by (seg, gid), so per-segment runs stay
+    ascending and binary search works everywhere the per-query mode used
+    row-wise search;
+  * ``FS = planner.shared_budget(R, caps.frontier)`` — O(F*sqrt(R)) instead
+    of O(F*R); the expansion pool (``ES``) and the SPMD routing buckets
+    (``SB``) scale the same way;
+  * every capacity keeps its **per-unit** meaning too: a segment may hold at
+    most ``caps.frontier`` uniques and enumerate at most ``caps.expand``
+    raw edges (the same §3.4 flags per-query mode raises), and *on top* the
+    shared pools may overflow — in which case every owner whose pair was
+    dropped gets its ``failed_q`` flag set (**owner-attributed fast-fail**:
+    a hot query can evict its batch mates' slots only by flagging them);
+  * consequence (the contract ``tests/test_shared_frontier.py`` pins):
+    whenever a query's flag is clear, its results are **bit-identical** to
+    per-query-budget mode — shared mode may differ only via fast-fail flags
+    under shared overflow.
+
+Entry point: ``GraphDB.query(..., budget="shared")`` →
+``engine.execute`` → ``planner.execute_fused(budget="shared")`` → the
+compilers here.  Program caches, grouping, and the assembly scatter are
+shared with ``planner.py``; the hop compaction goes through the
+``kernels/dedup_compact`` seam (one pair sort per hop instead of R row
+sorts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_mod
+from repro.core import edges as edges_mod
+from repro.core import index as index_mod
+from repro.core.addressing import NULL, StoreConfig
+from repro.core.edges import TILE
+from repro.core.query.executor import (I32MAX, QueryCaps, build_select,
+                                       eval_pred, sort_pairs)
+from repro.core.query.planner import (PAD, _cache_get, _cache_put,
+                                      _final_pred_groups, _pred_groups,
+                                      _unit_tables, _wave_tables,
+                                      shared_budget)
+from repro.core.store import GraphStore, visible, window_shard_major
+
+
+# ---------------------------------------------------------------------------
+# flat wave primitives
+# ---------------------------------------------------------------------------
+
+def _flag_segs(failed_r, cond, segc, R: int):
+    """OR per-segment flags: any True in ``cond`` flags its owner segment."""
+    hit = jnp.zeros((R + 1,), bool).at[
+        jnp.where(cond, segc, R)].set(True, mode="drop")
+    return failed_r | hit[:R]
+
+
+def _dedup_pairs(seg, gid, valid, R: int, F: int, FS: int,
+                 backend: backend_mod.Backend):
+    """The shared compaction: flat (seg, gid) candidates -> (FS,) pool.
+
+    One lexicographic pair sort (``backend.sort_pairs`` — the
+    ``kernels/dedup_compact`` bitonic network on pallas), then: keep the
+    first F uniques *per segment* (the per-unit §3.4 budget, flagging
+    segments that exceed it exactly like per-query mode), then the first FS
+    survivors overall (the shared budget, flagging every owner whose pair
+    is dropped — owner-attributed fast-fail).  Returns (seg', gid',
+    failed_seg) with outputs sorted by (seg, gid), ghosts (R, PAD) last."""
+    s = jnp.where(valid, seg, R)
+    g = jnp.where(valid, gid, PAD)
+    s, g = backend_mod.sort_pairs(s, g, backend=backend)
+    ok = s < R
+    prev_s = jnp.concatenate([jnp.full((1,), -1, s.dtype), s[:-1]])
+    prev_g = jnp.concatenate([jnp.full((1,), -1, g.dtype), g[:-1]])
+    first = ok & ((s != prev_s) | (g != prev_g))
+    fi = first.astype(jnp.int32)
+    excl = jnp.cumsum(fi) - fi                  # uniques before each slot
+    seg_start = jnp.searchsorted(s, s, side="left").astype(jnp.int32)
+    rank_seg = excl - excl[seg_start]           # unique rank within my seg
+    over_seg = first & (rank_seg >= F)
+    keep = first & (rank_seg < F)
+    ki = keep.astype(jnp.int32)
+    gcol = jnp.cumsum(ki) - ki
+    over_shared = keep & (gcol >= FS)
+    keep = keep & (gcol < FS)
+    col = jnp.where(keep, gcol, FS)
+    out_s = jnp.full((FS,), R, jnp.int32).at[col].set(s, mode="drop")
+    out_g = jnp.full((FS,), PAD, jnp.int32).at[col].set(g, mode="drop")
+    failed = jnp.zeros((R,), bool)
+    failed = _flag_segs(failed, over_seg | over_shared, jnp.minimum(s, R), R)
+    return out_s, out_g, failed
+
+
+def _expand_flat(start, deg, pools, et_s, ts_s, ES: int,
+                 backend: backend_mod.Backend):
+    """Flat CSR expansion: (FS,) spans -> (ES,) entries + source slots.
+
+    The shared-pool analogue of ``planner._expand_rows``: raw span entry j
+    of slot i lands at position ``excl_cumsum[i] + j`` (entries at >= ES
+    are truncated — the caller flags their owners), masked by the *slot's*
+    MVCC snapshot and edge type.  Both backends emit bit-identical buffers.
+    """
+    nbr, typ, ecre, edel = pools
+    FS = deg.shape[0]
+    cum = jnp.cumsum(deg)
+    excl = cum - deg
+    k = jnp.arange(ES, dtype=jnp.int32)
+    item_k = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+    item_kc = jnp.minimum(item_k, FS - 1)
+    if backend.is_pallas:
+        deg_eff = jnp.clip(ES - excl, 0, deg)
+        cap_tiles = FS + 1 + (ES + TILE - 1) // TILE
+        (nbr_t, typ_t, cre_t, del_t), item, tw, _ = backend_mod.expand_tiles(
+            start, deg_eff, pools, tile=TILE, cap_tiles=cap_tiles,
+            backend=backend)
+        item_c = jnp.minimum(item, FS - 1)
+        lane = jnp.arange(TILE, dtype=jnp.int32)
+        shape = (cap_tiles, TILE)
+        nbr_t, typ_t = nbr_t.reshape(shape), typ_t.reshape(shape)
+        cre_t, del_t = cre_t.reshape(shape), del_t.reshape(shape)
+        et_t = et_s[item_c][:, None]
+        # invalid lanes carry -1 in every pool: visible(-1,-1,ts) is False
+        e_ok = (visible(cre_t, del_t, ts_s[item_c][:, None])
+                & ((et_t < 0) | (typ_t == et_t)) & (nbr_t >= 0))
+        posq = excl[item_c][:, None] + tw[:, None] * TILE + lane[None, :]
+        pos = jnp.where(e_ok, posq, ES)
+        out_n = jnp.full((ES,), NULL, jnp.int32).at[pos.reshape(-1)].set(
+            nbr_t.reshape(-1), mode="drop")
+    else:
+        in_range = k < cum[-1]
+        epos = jnp.where(in_range, start[item_kc] + (k - excl[item_kc]), 0)
+        e_ok = (in_range & visible(ecre[epos], edel[epos], ts_s[item_kc])
+                & ((et_s[item_kc] < 0) | (typ[epos] == et_s[item_kc]))
+                & (nbr[epos] >= 0))
+        out_n = jnp.where(e_ok, nbr[epos], NULL)
+    return out_n, item_kc
+
+
+def _delta_flat(gid_sorted, m, lo_r, hi_r, d_gid, dnbr, dtyp, dcre, ddel,
+                et_r, ts_r, R: int, backend: backend_mod.Backend):
+    """Delta-log matches: (R, D) membership probes into the flat pool.
+
+    The pool is sorted by (seg, gid), so "(unit r, delta gid) is a live
+    frontier pair" is one windowed binary search per (r, d) — the windows
+    ``[lo_r, hi_r)`` are unit r's run, probed through the same
+    ``searchsorted_ranged`` seam the primary index uses.  Returns flat
+    (R*D,) candidate (seg, nbr) pairs."""
+    D = d_gid.shape[0]
+    q = jnp.broadcast_to(d_gid[None, :], (R, D)).reshape(-1)
+    lo = jnp.broadcast_to(lo_r[:, None], (R, D)).reshape(-1)
+    hi = jnp.broadcast_to(hi_r[:, None], (R, D)).reshape(-1)
+    pos = backend_mod.searchsorted_ranged(gid_sorted, q, lo, hi,
+                                          backend=backend)
+    at = jnp.minimum(lo + pos, gid_sorted.shape[0] - 1)
+    found = ((lo + pos < hi) & (gid_sorted[at] == q)
+             & m[at]).reshape(R, D)
+    hit = (found & (dnbr >= 0)[None, :]
+           & visible(dcre[None, :], ddel[None, :], ts_r[:, None])
+           & ((et_r[:, None] < 0) | (dtyp[None, :] == et_r[:, None])))
+    dn = jnp.where(hit, jnp.broadcast_to(dnbr[None, :], hit.shape), NULL)
+    ds = jnp.where(hit, jnp.arange(R, dtype=jnp.int32)[:, None], R)
+    return ds.reshape(-1), dn.reshape(-1)
+
+
+def _check_flat(st, rows, valid, ts_s, tvt_s, preds, segc):
+    """Per-slot liveness/type/predicate check (flat analogue of
+    ``planner._check_rows``); per-slot tables are gathered by ``segc``."""
+    alive = valid & visible(st.v_create[rows], st.v_delete[rows], ts_s)
+    alive = alive & ((tvt_s < 0) | (st.vtype[rows] == tvt_s))
+    if preds:
+        use_cur = (st.vdata_ts[rows] <= ts_s)[:, None]
+        f = jnp.where(use_cur, st.vdata_f[rows], st.vprev_f[rows])
+        i = jnp.where(use_cur, st.vdata_i[rows], st.vprev_i[rows])
+        keys = st.vkey[rows]
+        for pred, qmask in preds:
+            pm = jnp.concatenate([jnp.asarray(qmask),
+                                  jnp.zeros((1,), bool)])[segc]
+            alive = alive & (~pm | eval_pred(pred, f, i, keys))
+    return alive
+
+
+def _seg_windows(seg, R: int):
+    """[lo, hi) of every segment's run in the sorted pool."""
+    r = jnp.arange(R, dtype=seg.dtype)
+    lo = jnp.searchsorted(seg, r, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(seg, r, side="right").astype(jnp.int32)
+    return lo, hi
+
+
+def _merge_flat(seg, gid, live, row2q_x, n_br, Q: int, FS: int,
+                backend: backend_mod.Backend):
+    """Intersect-merge on the flat pool: (seg, gid) -> (query, gid) pairs.
+
+    Branch runs are sorted-unique, so after mapping segments to their
+    owning query and one pair sort, a gid's run length equals its branch
+    coverage; ``run == n_branches`` keeps exactly the §3.4 star semantics
+    (chains pass through, run == 1).  Output is compacted and sorted by
+    (query, gid); it cannot overflow FS (kept <= input)."""
+    segc = jnp.minimum(seg, row2q_x.shape[0] - 1)
+    qv = jnp.where(live, row2q_x[segc], Q)
+    gv = jnp.where(live, gid, PAD)
+    q_s, g_s = backend_mod.sort_pairs(qv, gv, backend=backend)
+    ok = q_s < Q
+    prev_q = jnp.concatenate([jnp.full((1,), -1, q_s.dtype), q_s[:-1]])
+    prev_g = jnp.concatenate([jnp.full((1,), -1, g_s.dtype), g_s[:-1]])
+    first = ok & ((q_s != prev_q) | (g_s != prev_g))
+    run_id = jnp.where(ok, jnp.cumsum(first.astype(jnp.int32)) - 1, FS - 1)
+    run_len = jax.ops.segment_sum(ok.astype(jnp.int32), run_id,
+                                  num_segments=FS)
+    nbr_x = jnp.concatenate([jnp.asarray(n_br), jnp.full((1,), -1,
+                                                         jnp.int32)])
+    keep = first & (run_len[run_id] == nbr_x[jnp.minimum(q_s, Q)])
+    ki = keep.astype(jnp.int32)
+    col = jnp.where(keep, jnp.cumsum(ki) - ki, FS)
+    qf = jnp.full((FS,), Q, jnp.int32).at[col].set(q_s, mode="drop")
+    gf = jnp.full((FS,), PAD, jnp.int32).at[col].set(g_s, mode="drop")
+    return qf, gf, qf < Q
+
+
+def _ext(a, fill):
+    """Append the ghost-segment entry to a per-unit table."""
+    a = np.asarray(a)
+    return np.concatenate([a, np.asarray([fill], a.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# the local shared-frontier program
+# ---------------------------------------------------------------------------
+
+def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
+                         backend: backend_mod.Backend = backend_mod.REF,
+                         dwin: Optional[int] = None,
+                         xwin: Optional[int] = None):
+    """Build the jitted shared-frontier program for one batch shape.
+
+    Same grouping/caching contract as ``planner.compile_batch``; the
+    frontier is the flat shared pool described in the module docstring."""
+    dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
+    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, "shared-local")
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    Q = len(plans)
+    F, E, K = caps.frontier, caps.expand, caps.results
+    S, cap_v, cap_e = cfg.n_shards, cfg.cap_v, cfg.cap_e
+    chains, row2q, n_br, _rows_of_q = _unit_tables(plans)
+    R = len(chains)
+    FS = shared_budget(R, F, caps.shared_frontier)
+    ES = shared_budget(R, E, caps.shared_expand)
+    if FS < R:
+        raise ValueError(f"shared frontier budget {FS} below unit count {R}")
+    has_star = any(p.is_intersect for p in plans)
+    waves = _wave_tables(chains)
+    final_preds = _final_pred_groups(plans)
+    start_vt = jnp.asarray([c.start_vtype for c in chains], jnp.int32)
+    row2q_x = jnp.asarray(np.concatenate([row2q, [Q]]), jnp.int32)
+    terminal = plans[0].terminal
+    _delta_windowed = window_shard_major
+
+    @jax.jit
+    def run(store, keys, valid_in, ts_q, cur_q):
+        ts_r = jnp.take(ts_q, jnp.asarray(row2q))          # (R,) per unit
+        ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
+        failed_r = jnp.zeros((R,), bool)
+        # ---- lookup wave --------------------------------------------------
+        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
+                                        ts_r, backend=backend, xd_win=xwin)
+        seg0 = jnp.where(found & valid_in, jnp.arange(R, dtype=jnp.int32), R)
+        gid0 = jnp.where(found & valid_in, gids0, PAD)
+        seg, gid, f0 = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS, backend)
+        failed_r = failed_r | f0
+        live = seg < R
+
+        for wave in waves:
+            segc = jnp.minimum(seg, R)
+            act_x = jnp.asarray(_ext(wave.act, False))
+            out_x = jnp.asarray(_ext(wave.is_out, False))
+            et_x = jnp.asarray(_ext(wave.etype, -1))
+            a_slot = live & act_x[segc]
+            parked = live & ~act_x[segc]
+            parts_s = [jnp.where(parked, seg, R)]
+            parts_g = [jnp.where(parked, gid, PAD)]
+            lo_r, hi_r = _seg_windows(seg, R)
+            for direction, dmask, present in (
+                    ("out", out_x, wave.any_out),
+                    ("in", ~out_x, wave.any_in)):
+                if not present:
+                    continue
+                m = a_slot & dmask[segc]
+                indptr, nbr, typ, ecre, edel = edges_mod._csr_arrays(
+                    store, direction)
+                safe_g = jnp.where(m, gid, 0)
+                shard = safe_g % S
+                iprow = shard * (cap_v + 1) + safe_g // S
+                start = indptr[iprow] + shard * cap_e
+                deg = (indptr[iprow + 1] - indptr[iprow]) * m
+                # per-unit expand budget: the same §3.4 flag per-query
+                # mode raises, so flags agree whenever shared caps idle
+                segdeg = jax.ops.segment_sum(deg, segc,
+                                             num_segments=R + 1)[:R]
+                failed_r = failed_r | (segdeg > E)
+                # shared-pool truncation: flag every owner it touches
+                failed_r = _flag_segs(failed_r, m & (jnp.cumsum(deg) > ES),
+                                      segc, R)
+                out_n, item = _expand_flat(start, deg,
+                                           (nbr, typ, ecre, edel),
+                                           et_x[segc], ts_x[segc], ES,
+                                           backend)
+                out_s = jnp.where(out_n >= 0, segc[item], R)
+                dslot, dnbr, dtyp, dcre, ddel = _delta_windowed(
+                    edges_mod._delta_arrays(store, direction),
+                    S, cfg.cap_delta, dwin)
+                D = dslot.shape[0]
+                d_gid = dslot * S + jnp.arange(D, dtype=jnp.int32) // dwin
+                ds, dn = _delta_flat(gid, m, lo_r, hi_r, d_gid, dnbr, dtyp,
+                                     dcre, ddel, jnp.asarray(wave.etype),
+                                     ts_r, R, backend)
+                parts_s += [out_s, ds]
+                parts_g += [out_n, dn]
+            cand_s = jnp.concatenate(parts_s)
+            cand_g = jnp.concatenate(parts_g)
+            seg, gid, f = _dedup_pairs(cand_s, cand_g, cand_s < R,
+                                       R, F, FS, backend)
+            failed_r = failed_r | f
+            live = seg < R
+            segc = jnp.minimum(seg, R)
+            rows = cfg.row_of_gid(jnp.where(live, gid, 0))
+            live = live & _check_flat(store, rows, live, ts_x[segc],
+                                      jnp.asarray(_ext(wave.tvt, -1))[segc],
+                                      wave.preds, segc)
+
+        # ---- merge units -> queries --------------------------------------
+        if has_star:
+            qf, gf, live = _merge_flat(seg, gid, live, row2q_x, n_br, Q, FS,
+                                       backend)
+        else:          # chains: seg == query index, pairs already sorted
+            qf, gf = jnp.minimum(seg, Q), gid
+        failed_q = jax.ops.segment_sum(
+            failed_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
+
+        # ---- terminal wave ------------------------------------------------
+        qc = jnp.minimum(qf, Q)
+        ts_qx = jnp.concatenate([ts_q, jnp.zeros((1,), ts_q.dtype)])
+        if final_preds:
+            rows = cfg.row_of_gid(jnp.where(live, gf, 0))
+            live = live & _check_flat(store, rows, live, ts_qx[qc],
+                                      jnp.full(rows.shape, -1, jnp.int32),
+                                      final_preds, qc)
+        cur_x = jnp.concatenate([cur_q, jnp.full((1,), -1, jnp.int32)])
+        live = live & (gf > cur_x[qc])          # gid-cursor continuations
+        out = {"failed_q": failed_q}
+        if terminal == "count":
+            out["counts"] = jax.ops.segment_sum(
+                live.astype(jnp.int32), jnp.where(live, qf, Q),
+                num_segments=Q + 1)[:Q]
+        else:
+            plan0 = plans[0]
+            rows_gid, attrs, trunc = build_select(
+                store, cfg, plan0, jnp.where(live, qf, NULL),
+                jnp.where(live, gf, NULL), live, ts_q[:, None], Q, K)
+            out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
+        return out
+
+    _cache_put(key, run)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# the SPMD shared-frontier program
+# ---------------------------------------------------------------------------
+
+def _route_flat(seg, gid, m, S: int, SB: int, R: int, axes):
+    """Shared-bucket routing: flat pairs -> all_to_all -> (S*SB,) arrivals.
+
+    Buckets are per destination shard and *shared* by every unit (SB slots,
+    the shared analogue of per-query mode's per-(unit, owner) buckets);
+    dropped pairs flag their owner segment.  Returns (seg', gid',
+    failed_seg)."""
+    N = seg.shape[0]
+    ow = jnp.where(m, gid % S, S)
+    segk = jnp.where(m, seg, R)
+    gidk = jnp.where(m, gid, PAD)
+    ow_s, s_s, g_s = jax.lax.sort((ow, segk, gidk), num_keys=3)
+    starts = jnp.searchsorted(ow_s, jnp.arange(S, dtype=ow_s.dtype),
+                              side="left").astype(jnp.int32)
+    idx = jnp.arange(N, dtype=jnp.int32)
+    col = idx - starts[jnp.minimum(ow_s, S - 1)]
+    ok = ow_s < S
+    failed = jnp.zeros((R,), bool)
+    failed = _flag_segs(failed, ok & (col >= SB), jnp.minimum(s_s, R), R)
+    keep = ok & (col < SB)
+    row = jnp.where(keep, ow_s, S)
+    colc = jnp.where(keep, col, SB)
+    bs = jnp.full((S, SB), R, jnp.int32).at[row, colc].set(s_s, mode="drop")
+    bg = jnp.full((S, SB), PAD, jnp.int32).at[row, colc].set(g_s, mode="drop")
+    rs = jax.lax.all_to_all(bs, axes, split_axis=0, concat_axis=0, tiled=True)
+    rg = jax.lax.all_to_all(bg, axes, split_axis=0, concat_axis=0, tiled=True)
+    return rs.reshape(-1), rg.reshape(-1), failed
+
+
+def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
+                              caps: QueryCaps, mesh,
+                              storage_axes=("data", "model"),
+                              backend: backend_mod.Backend = backend_mod.REF,
+                              dwin: Optional[int] = None,
+                              xwin: Optional[int] = None):
+    """Shared-frontier waves on a mesh: the §3.4 coordinator/worker
+    protocol with one shared (seg, gid) pool per shard."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.query.executor_spmd import _lookup_local
+    from repro.dist import compat
+
+    dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
+    key = (cfg, plans, caps, len(plans), id(mesh), storage_axes, backend,
+           dwin, xwin, "shared-spmd")
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    Q = len(plans)
+    F, E, B, K = caps.frontier, caps.expand, caps.bucket, caps.results
+    S = cfg.n_shards
+    axes = storage_axes
+    chains, row2q, n_br, _rows_of_q = _unit_tables(plans)
+    R = len(chains)
+    FS = shared_budget(R, F, caps.shared_frontier)
+    ES = shared_budget(R, E, caps.shared_expand)
+    SB = shared_budget(R, B, caps.shared_bucket)
+    if FS < R:
+        raise ValueError(f"shared frontier budget {FS} below unit count {R}")
+    has_star = any(p.is_intersect for p in plans)
+    waves = _wave_tables(chains)
+    final_preds = _final_pred_groups(plans)
+    start_vt_np = np.array([c.start_vtype for c in chains], np.int32)
+    row2q_x = jnp.asarray(np.concatenate([row2q, [Q]]), jnp.int32)
+    terminal = plans[0].terminal
+    select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
+    # pending owner-side checks, exactly as in planner.compile_batch_spmd
+    pend_tvt, pend_preds = [], []
+    for w in range(len(waves)):
+        if w == 0:
+            pend_tvt.append(start_vt_np)
+            pend_preds.append([])
+        else:
+            pend_tvt.append(np.array(
+                [c.hops[w - 1].target_vtype if len(c.hops) > w else -1
+                 for c in chains], np.int32))
+            pend_preds.append(_pred_groups(
+                [(ri, c.hops[w - 1].pred, R) for ri, c in enumerate(chains)
+                 if len(c.hops) > w and c.hops[w - 1].pred]))
+    fin_tvt = np.array([c.hops[-1].target_vtype for c in chains], np.int32)
+    fin_preds = _pred_groups([(ri, c.hops[-1].pred, R)
+                              for ri, c in enumerate(chains)
+                              if c.hops[-1].pred])
+
+    def body(st, keys, valid_in, ts_q, cur_q):
+        me = jax.lax.axis_index(axes).astype(jnp.int32)
+        ts_r = jnp.take(ts_q, jnp.asarray(row2q))
+        ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
+        failed_r = jnp.zeros((R,), bool)
+        g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
+                           valid_in, ts_r, backend, xd_win=xwin)
+        seg0 = jnp.where(g0 >= 0, jnp.arange(R, dtype=jnp.int32), R)
+        gid0 = jnp.where(g0 >= 0, g0, PAD)
+        seg, gid, f0 = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS, backend)
+        failed_r = failed_r | f0
+        live = seg < R
+
+        for w, wave in enumerate(waves):
+            segc = jnp.minimum(seg, R)
+            act_x = jnp.asarray(_ext(wave.act, False))
+            out_x = jnp.asarray(_ext(wave.is_out, False))
+            et_x = jnp.asarray(_ext(wave.etype, -1))
+            # parked pairs stay put until the final routing
+            parked = live & ~act_x[segc]
+            parts_s = [jnp.where(parked, seg, R)]
+            parts_g = [jnp.where(parked, gid, PAD)]
+            # 1) batched RPCs: ship active pairs to their owners
+            a_s, a_g, fr = _route_flat(seg, gid, live & act_x[segc], S, SB,
+                                       R, axes)
+            failed_r = failed_r | fr
+            seg_a, gid_a, fd = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS,
+                                            backend)
+            failed_r = failed_r | fd
+            live_a = seg_a < R
+            segc_a = jnp.minimum(seg_a, R)
+            # 2) owner-side pending checks (previous hop's vertex checks)
+            rows_l = jnp.where(live_a, gid_a // S, 0)
+            alive = live_a & _check_flat(
+                st, rows_l, live_a, ts_x[segc_a],
+                jnp.asarray(_ext(pend_tvt[w], -1))[segc_a],
+                pend_preds[w], segc_a)
+            lo_r, hi_r = _seg_windows(seg_a, R)
+            # 3) worker step: my CSR block + delta log
+            for direction, dmask, present in (
+                    ("out", out_x, wave.any_out),
+                    ("in", ~out_x, wave.any_in)):
+                if not present:
+                    continue
+                m = alive & act_x[segc_a] & dmask[segc_a]
+                if direction == "out":
+                    indptr, nbr, typ, ecre, edel = (
+                        st.oe_indptr, st.oe_dst, st.oe_type, st.oe_create,
+                        st.oe_delete)
+                    dslot, dnbr, dtyp, dcre, ddel = (
+                        st.dl_slot, st.dl_nbr, st.dl_type, st.dl_create,
+                        st.dl_delete)
+                else:
+                    indptr, nbr, typ, ecre, edel = (
+                        st.ie_indptr, st.ie_src, st.ie_type, st.ie_create,
+                        st.ie_delete)
+                    dslot, dnbr, dtyp, dcre, ddel = (
+                        st.il_slot, st.il_nbr, st.il_type, st.il_create,
+                        st.il_delete)
+                slot = jnp.where(m, gid_a // S, 0)
+                start = indptr[slot]
+                deg = (indptr[slot + 1] - indptr[slot]) * m
+                segdeg = jax.ops.segment_sum(deg, segc_a,
+                                             num_segments=R + 1)[:R]
+                failed_r = failed_r | (segdeg > E)
+                failed_r = _flag_segs(failed_r, m & (jnp.cumsum(deg) > ES),
+                                      segc_a, R)
+                out_n, item = _expand_flat(start, deg,
+                                           (nbr, typ, ecre, edel),
+                                           et_x[segc_a], ts_x[segc_a], ES,
+                                           backend)
+                out_s = jnp.where(out_n >= 0, segc_a[item], R)
+                # inside shard_map the delta block is one shard: [:dwin]
+                dslot, dnbr, dtyp, dcre, ddel = (
+                    a[:dwin] for a in (dslot, dnbr, dtyp, dcre, ddel))
+                # my pairs all live on my shard: gid // S is the local
+                # slot and stays ascending within each segment's run
+                gl = jnp.where(live_a, gid_a // S, PAD)
+                ds, dn = _delta_flat(gl, m, lo_r, hi_r, dslot, dnbr, dtyp,
+                                     dcre, ddel, jnp.asarray(wave.etype),
+                                     ts_r, R, backend)
+                parts_s += [out_s, ds]
+                parts_g += [out_n, dn]
+            cand_s = jnp.concatenate(parts_s)
+            cand_g = jnp.concatenate(parts_g)
+            seg, gid, f = _dedup_pairs(cand_s, cand_g, cand_s < R,
+                                       R, F, FS, backend)
+            failed_r = failed_r | f
+            live = seg < R
+
+        # ---- finalize: route all, owed checks, merge, aggregate -----------
+        a_s, a_g, fr = _route_flat(seg, gid, live, S, SB, R, axes)
+        failed_r = failed_r | fr
+        seg, gid, fd = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS, backend)
+        failed_r = failed_r | fd
+        live = seg < R
+        segc = jnp.minimum(seg, R)
+        rows_l = jnp.where(live, gid // S, 0)
+        live = live & _check_flat(st, rows_l, live, ts_x[segc],
+                                  jnp.asarray(_ext(fin_tvt, -1))[segc],
+                                  fin_preds, segc)
+        # intersect-merge is shard-local (each gid has one owner shard)
+        if has_star:
+            qf, gf, live = _merge_flat(seg, gid, live, row2q_x, n_br, Q, FS,
+                                       backend)
+        else:
+            qf, gf = jnp.minimum(seg, Q), gid
+        failed_q = jax.ops.segment_sum(
+            failed_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
+        qc = jnp.minimum(qf, Q)
+        ts_qx = jnp.concatenate([ts_q, jnp.zeros((1,), ts_q.dtype)])
+        if final_preds:
+            rows_l = jnp.where(live, gf // S, 0)
+            live = live & _check_flat(st, rows_l, live, ts_qx[qc],
+                                      jnp.full(rows_l.shape, -1, jnp.int32),
+                                      final_preds, qc)
+        cur_x = jnp.concatenate([cur_q, jnp.full((1,), -1, jnp.int32)])
+        live = live & (gf > cur_x[qc])          # gid-cursor continuations
+        out = {"failed_q":
+               jax.lax.psum(failed_q.astype(jnp.int32), axes) > 0}
+        if terminal == "count":
+            out["counts"] = jax.lax.psum(jax.ops.segment_sum(
+                live.astype(jnp.int32), jnp.where(live, qf, Q),
+                num_segments=Q + 1)[:Q], axes)
+            return out
+
+        # select: globally consistent row positions (shard-rank offsets)
+        q_s, g_s, v_s, _first = sort_pairs(jnp.where(live, qf, NULL),
+                                           jnp.where(live, gf, NULL), live)
+        local_counts = jax.ops.segment_sum(
+            v_s.astype(jnp.int32), jnp.where(v_s, q_s, Q),
+            num_segments=Q + 1)[:Q]
+        all_counts = jax.lax.all_gather(local_counts, axes)     # (S, Q)
+        before = (jnp.arange(all_counts.shape[0]) < me)[:, None]
+        base = jnp.sum(all_counts * before, axis=0)             # (Q,)
+        q_srch = jnp.where(v_s, q_s, I32MAX)
+        run_start = jnp.searchsorted(q_srch, q_srch,
+                                     side="left").astype(jnp.int32)
+        excl = jnp.cumsum(v_s.astype(jnp.int32)) - v_s.astype(jnp.int32)
+        pos_local = excl - excl[run_start]
+        qsafe = jnp.where(v_s, q_s, 0)
+        pos = base[qsafe] + pos_local
+        over = v_s & (pos >= K)
+        row = jnp.where(v_s & ~over, q_s, I32MAX)
+        col = jnp.where(v_s & ~over, pos, I32MAX)
+        rows_gid = jnp.zeros((Q, K), jnp.int32).at[row, col].set(
+            g_s + 1, mode="drop")
+        rows_gid = jax.lax.psum(rows_gid, axes) - 1             # 0 -> NULL
+        trunc = jax.lax.psum(jnp.zeros((Q,), jnp.int32).at[
+            jnp.where(over, q_s, I32MAX)].set(1, mode="drop"), axes) > 0
+        rows_local = jnp.where(v_s, g_s // S, 0)
+        use_cur = st.vdata_ts[rows_local] <= ts_qx[jnp.minimum(qsafe, Q)]
+        attrs = {}
+        for kind, colid in select:
+            if kind == "key":
+                vals = st.vkey[rows_local]
+                acc = jnp.zeros((Q, K), jnp.int32)
+            elif kind == "f32":
+                vals = jnp.where(use_cur, st.vdata_f[rows_local][..., colid],
+                                 st.vprev_f[rows_local][..., colid])
+                acc = jnp.zeros((Q, K), jnp.float32)
+            else:
+                vals = jnp.where(use_cur, st.vdata_i[rows_local][..., colid],
+                                 st.vprev_i[rows_local][..., colid])
+                acc = jnp.zeros((Q, K), jnp.int32)
+            summed = jax.lax.psum(acc.at[row, col].set(vals, mode="drop"),
+                                  axes)
+            if kind == "key":     # empty cells read NULL like the local path
+                summed = jnp.where(rows_gid >= 0, summed, NULL)
+            attrs[(kind, colid)] = summed
+        out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
+        return out
+
+    store_specs = jax.tree.map(lambda _: P(axes), GraphStore(
+        **{f.name: 0 for f in dataclasses.fields(GraphStore)}))
+    out_specs = {"failed_q": P()}
+    if terminal == "count":
+        out_specs["counts"] = P()
+    else:
+        out_specs.update(rows_gid=P(), truncated=P(),
+                         attrs={k: P() for k in select})
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
+        out_specs=out_specs, check_vma=False))
+    _cache_put(key, fn)
+    return fn

@@ -1,0 +1,192 @@
+"""Dedup/compact Pallas TPU kernel (the per-hop frontier compaction, §3.4).
+
+Hardware adaptation: the reference path compacts every hop with a full-width
+``jax.lax.sort`` over the candidate matrix — an XLA sort that materializes
+the whole (R, W) buffer in HBM per comparison pass.  Here each row block is
+sorted *inside VMEM* with a bitonic network: W is padded to a power of two,
+every compare-exchange stage is one vectorized min/max over the resident
+block, and the dedup ("mark duplicates PAD, sort again, slice the cap") is
+fused into the same kernel so the full-width sorted intermediate never
+leaves VMEM.
+
+Three entry points mirroring the ref oracle (bit-identical by construction —
+integer sorting has one answer):
+
+  * :func:`sort_rows`            — row-wise ascending sort;
+  * :func:`dedup_compact_rows`   — sorted-unique first-``cap`` compaction +
+                                   per-row unique counts;
+  * :func:`sort_pairs`           — lexicographic flat (seg, gid) pair sort
+                                   (the shared-frontier compaction), a
+                                   two-key compare-exchange on both arrays.
+
+Grid: (row_blocks,); the whole (padded) width lives in VMEM per program —
+at serving caps (W ~ 16K i32) a row block is well under VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32MAX = 2**31 - 1
+PAD = I32MAX
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _stages(W: int):
+    """The bitonic network: (k, j) compare-exchange stages for width W."""
+    out = []
+    k = 2
+    while k <= W:
+        j = k // 2
+        while j >= 1:
+            out.append((k, j))
+            j //= 2
+        k *= 2
+    return out
+
+
+def _partner(x, j):
+    """Exchange partner view: element i sees element i ^ j (axis -1)."""
+    R, W = x.shape
+    xr = x.reshape(R, W // (2 * j), 2, j)
+    return xr[:, :, ::-1, :].reshape(R, W)
+
+
+def _bitonic_rows(x, idx):
+    """In-register bitonic ascending sort along axis 1 (W = pow2)."""
+    W = x.shape[1]
+    for k, j in _stages(W):
+        px = _partner(x, j)
+        is_lower = (idx & j) == 0
+        up = (idx & k) == 0
+        want_min = is_lower == up
+        x = jnp.where(want_min, jnp.minimum(x, px), jnp.maximum(x, px))
+    return x
+
+
+def _bitonic_pairs(s, g, idx):
+    """Two-key (lexicographic) bitonic ascending sort along axis 1."""
+    W = s.shape[1]
+    for k, j in _stages(W):
+        ps, pg = _partner(s, j), _partner(g, j)
+        le = (s < ps) | ((s == ps) & (g <= pg))     # self <= partner
+        is_lower = (idx & j) == 0
+        up = (idx & k) == 0
+        keep_self = le == (is_lower == up)
+        s = jnp.where(keep_self, s, ps)
+        g = jnp.where(keep_self, g, pg)
+    return s, g
+
+
+def _row_idx(shape):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+
+
+def _sort_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = _bitonic_rows(x, _row_idx(x.shape))
+
+
+def _dedup_kernel(x_ref, o_ref, n_ref, *, cap: int):
+    x = x_ref[...]
+    R = x.shape[0]
+    idx = _row_idx(x.shape)
+    x = _bitonic_rows(x, idx)
+    prev = jnp.concatenate(
+        [jnp.full((R, 1), -1, x.dtype), x[:, :-1]], axis=1)
+    first = (x != PAD) & (x != prev)
+    n_ref[...] = jnp.sum(first.astype(jnp.int32), axis=1)
+    y = jnp.where(first, x, PAD)                 # non-first -> PAD, resort
+    y = _bitonic_rows(y, idx)
+    o_ref[...] = y[:, :cap]
+
+
+def _pairs_kernel(s_ref, g_ref, os_ref, og_ref):
+    s, g = s_ref[...], g_ref[...]
+    s, g = _bitonic_pairs(s, g, _row_idx(s.shape))
+    os_ref[...] = s
+    og_ref[...] = g
+
+
+def _pad_rows(x, W2: int, R2: int, fill):
+    R, W = x.shape
+    return jnp.pad(x, ((0, R2 - R), (0, W2 - W)), constant_values=fill)
+
+
+def sort_rows(x, *, block_r: int = 8, interpret: bool = False):
+    """Row-wise ascending sort of (R, W) i32; == jax.lax.sort(x, dim=1).
+
+    Values must be <= INT32_MAX (the pad fill), which every frontier gid
+    and the PAD sentinel satisfy.
+    """
+    R, W = x.shape
+    W2 = max(128, _pow2ceil(W))
+    br = min(block_r, max(1, R))
+    R2 = pl.cdiv(R, br) * br
+    out = pl.pallas_call(
+        _sort_kernel,
+        grid=(pl.cdiv(R2, br),),
+        in_specs=[pl.BlockSpec((br, W2), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((br, W2), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R2, W2), jnp.int32),
+        interpret=interpret,
+    )(_pad_rows(x, W2, R2, I32MAX))
+    # pad values are I32MAX: they sort behind every real value, so the
+    # leading W columns of each padded row are exactly the sorted row
+    return out[:R, :W]
+
+
+def dedup_compact_rows(x, cap: int, *, block_r: int = 8,
+                       interpret: bool = False):
+    """(R, W) candidates -> ((R, cap), (R,) unique counts); see ref oracle."""
+    R, W = x.shape
+    W2 = max(128, _pow2ceil(W))
+    # a row of width W holds <= W <= W2 uniques, so when cap exceeds the
+    # padded width the kernel emits W2 columns and the tail is pure PAD
+    kcap = min(cap, W2)
+    br = min(block_r, max(1, R))
+    R2 = pl.cdiv(R, br) * br
+    out, n = pl.pallas_call(
+        functools.partial(_dedup_kernel, cap=kcap),
+        grid=(pl.cdiv(R2, br),),
+        in_specs=[pl.BlockSpec((br, W2), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((br, kcap), lambda r: (r, 0)),
+                   pl.BlockSpec((br,), lambda r: (r,))],
+        out_shape=[jax.ShapeDtypeStruct((R2, kcap), jnp.int32),
+                   jax.ShapeDtypeStruct((R2,), jnp.int32)],
+        interpret=interpret,
+    )(_pad_rows(x, W2, R2, I32MAX))
+    out = out[:R]
+    if kcap < cap:
+        out = jnp.pad(out, ((0, 0), (0, cap - kcap)), constant_values=I32MAX)
+    return out, n[:R]
+
+
+def sort_pairs(k1, k2, *, interpret: bool = False):
+    """Lexicographic ascending sort of flat (k1, k2) i32 pairs.
+
+    == jax.lax.sort((k1, k2), num_keys=2).  Pads with (I32MAX, I32MAX),
+    which sorts behind every real pair.
+    """
+    (W,) = k1.shape
+    W2 = max(128, _pow2ceil(W))
+    s = jnp.pad(k1, (0, W2 - W), constant_values=I32MAX)[None, :]
+    g = jnp.pad(k2, (0, W2 - W), constant_values=I32MAX)[None, :]
+    os_, og = pl.pallas_call(
+        _pairs_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, W2), lambda r: (0, 0)),
+                  pl.BlockSpec((1, W2), lambda r: (0, 0))],
+        out_specs=[pl.BlockSpec((1, W2), lambda r: (0, 0)),
+                   pl.BlockSpec((1, W2), lambda r: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, W2), jnp.int32),
+                   jax.ShapeDtypeStruct((1, W2), jnp.int32)],
+        interpret=interpret,
+    )(s, g)
+    return os_[0, :W], og[0, :W]

@@ -1,0 +1,26 @@
+"""Jitted wrappers for the dedup/compact wave primitives."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.dedup_compact import ref as _ref
+from repro.kernels.dedup_compact.kernel import (
+    dedup_compact_rows as _dedup_kernel, sort_rows as _sort_kernel)
+
+_USE_KERNEL = jax.default_backend() == "tpu"
+
+
+@jax.jit
+def sort_rows(x):
+    if _USE_KERNEL:
+        return _sort_kernel(x)
+    return _ref.sort_rows(x)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def dedup_compact_rows(x, cap: int):
+    if _USE_KERNEL:
+        return _dedup_kernel(x, cap)
+    return _ref.dedup_compact_rows(x, cap)

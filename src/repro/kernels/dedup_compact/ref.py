@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the per-hop dedup/compact wave (§3.4 "aggregated,
+duplicates removed").
+
+The fused multi-query planner compacts every hop's candidate neighbors into
+sorted-unique frontier regions.  Three shapes of the same operator:
+
+  * :func:`sort_rows` — row-wise ascending sort of an ``(R, W)`` i32 matrix
+    (the intersect-merge wave needs the *sorted* rows, duplicates included,
+    because a gid's run length is its branch coverage);
+  * :func:`dedup_compact_rows` — ``(R, W)`` candidates (``PAD`` = invalid)
+    to ``(R, cap)`` regions: row r keeps its first ``cap`` unique gids in
+    ascending order, PAD beyond, plus the per-row unique count (count >
+    cap is the §3.4 fast-fail condition);
+  * :func:`sort_pairs` — lexicographic sort of flat ``(seg, gid)`` pairs,
+    the shared-frontier mode's one compaction per hop.
+
+``PAD`` is INT32_MAX: it sorts last, so compacted rows stay ascending and
+row-wise binary search keeps working downstream.
+"""
+import jax
+import jax.numpy as jnp
+
+PAD = 2**31 - 1                  # plain int: safe to create under a trace
+
+
+def sort_rows(x):
+    """Row-wise ascending sort of an (R, W) i32 matrix."""
+    return jax.lax.sort(x, dimension=1)
+
+
+def sort_pairs(k1, k2):
+    """Lexicographic ascending sort of flat (k1, k2) i32 pairs."""
+    return jax.lax.sort((k1, k2), num_keys=2)
+
+
+def dedup_compact_rows(x, cap: int):
+    """(R, W) candidates -> ((R, cap) sorted-unique regions, (R,) counts).
+
+    Invalid slots carry ``PAD``; row r's output is its first ``cap`` unique
+    non-PAD values ascending, PAD beyond.  ``counts`` is the number of
+    uniques *before* capping (``counts > cap`` == §3.4 overflow).
+    """
+    R = x.shape[0]
+    x_s = jax.lax.sort(x, dimension=1)
+    valid = x_s != PAD
+    prev = jnp.concatenate(
+        [jnp.full((R, 1), -1, x_s.dtype), x_s[:, :-1]], axis=1)
+    first = valid & (x_s != prev)
+    fi = first.astype(jnp.int32)
+    n = jnp.sum(fi, axis=1)
+    rank = jnp.cumsum(fi, axis=1) - 1
+    col = jnp.where(first & (rank < cap), rank, cap)     # cap = dropped
+    rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None],
+                            col.shape)
+    out = jnp.full((R, cap), PAD, jnp.int32).at[rows, col].set(
+        x_s, mode="drop")
+    return out, n

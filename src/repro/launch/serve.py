@@ -54,12 +54,14 @@ class Continuation:
     expires: float
     hints: dict           # the document's effective cap hints (parse-time)
     max_rows: int         # refill-window ceiling (constant per token)
+    cursor_mode: bool = False   # last refill used a gid-cursor predicate
 
 
 class A1Server:
     def __init__(self, db, *, caps: Optional[QueryCaps] = None,
                  page_size: int = 16, continuation_ttl: float = 60.0,
-                 use_spmd: bool = False, mesh=None):
+                 use_spmd: bool = False, mesh=None,
+                 budget: Optional[str] = None):
         self.db = db
         self.caps = caps or QueryCaps()
         self.page = page_size
@@ -69,10 +71,17 @@ class A1Server:
         self._pending: list[str] = []       # tokens awaiting a refill fetch
         self.use_spmd = use_spmd
         self.mesh = mesh
+        # fused frontier discipline: None/"per-query" or "shared" (the
+        # serving-cap memory shape; overflow is owner-attributed fast-fail
+        # and the hedged retry re-runs flagged queries as usual)
+        self.budget = budget
         self.latencies: dict[str, list[float]] = {}
         self.stats = {"queries": 0, "fastfails": 0, "hedged": 0,
                       "continuations": 0, "continuation_joins": 0,
-                      "continuation_flushes": 0}
+                      "continuation_flushes": 0, "cursor_refills": 0,
+                      "planner_cache_hit_rate": 0.0,
+                      "peak_frontier_bytes_per_query": 0,
+                      "peak_frontier_bytes_shared": 0}
 
     # ------------------------------------------------------------------
     def execute(self, queries: list[dict], *, qclass: str = "q",
@@ -103,16 +112,30 @@ class A1Server:
         dt = time.perf_counter() - t0
         self.latencies.setdefault(qclass, []).append(dt)
         self.stats["queries"] += len(queries)
+        self._update_planner_stats()
         # cooperative maintenance between batches (§3.3 low-priority pump)
         self.tasks.pump(1)
         return res
 
+    def _update_planner_stats(self) -> None:
+        """Surface the planner's cache hit-rate and peak frontier footprint
+        (per budget mode) in the server's /stats counters."""
+        from repro.core.query import planner
+        cs = planner.CACHE_STATS
+        total = cs["hits"] + cs["misses"]
+        self.stats["planner_cache_hit_rate"] = (
+            round(cs["hits"] / total, 4) if total else 0.0)
+        self.stats["peak_frontier_bytes_per_query"] = (
+            planner.FRONTIER_STATS["per_query_peak_bytes"])
+        self.stats["peak_frontier_bytes_shared"] = (
+            planner.FRONTIER_STATS["shared_peak_bytes"])
+
     def _run(self, queries, caps, read_ts, fused: Optional[bool] = None):
-        """The unified entry point; ``fused=True`` forces per-query budgets
-        + ``failed_q`` (what hedged retries want)."""
+        """The unified entry point; ``fused=True`` forces per-query
+        ``failed_q`` flags (what hedged retries want)."""
         mesh = self.mesh if self.use_spmd else None
         return self.db.query(queries, caps=caps, read_ts=read_ts, mesh=mesh,
-                             fused=fused)
+                             fused=fused, budget=self.budget)
 
     def _doc_hints(self, q: dict) -> dict:
         """Effective cap hints of a document, exactly as the parser merges
@@ -263,13 +286,30 @@ class A1Server:
     def _drain_pending(self):
         """Pending refills -> (token, hinted query, read_ts) triples.
 
-        The refill re-enters batching as a regular A1QL document whose
-        ``results`` cap hint doubles the materialized window (pow2, so the
-        fused program cache only sees a few K bands)."""
+        Two refill plans:
+
+        * **gid-cursor** (preferred): the document gains a root-level
+          ``gid_cursor`` — a runtime ``gid > cursor`` final predicate — and
+          a *constant* O(page) ``results`` window, so every deep-page
+          refill costs one page instead of re-materializing a pow2-growing
+          window.  Requires the local executors (rows are globally
+          gid-ascending there; under SPMD positions are shard-major, so a
+          max-gid cursor could skip rows) and no pinned document hints.
+        * **pow2 fallback**: the historical growing-window refill (kept for
+          SPMD and hint-pinned documents)."""
         out = []
         for token in self._pending:
             c = self._continuations.get(token)
             if c is None:
+                continue
+            c.cursor_mode = (not self.use_spmd and not c.hints
+                             and len(c.rows) > 0)
+            if c.cursor_mode:
+                self.stats["cursor_refills"] += 1
+                want = _pow2ceil(2 * self.page)          # O(page), constant
+                doc = {**c.query, "gid_cursor": int(c.rows[-1]),
+                       "hints": {"results": want}}
+                out.append((token, doc, c.read_ts))
                 continue
             want = min(_pow2ceil(max(c.want * 2, c.cursor + 2 * self.page)),
                        c.max_rows)
@@ -294,6 +334,16 @@ class A1Server:
             return
         rows = res.rows_gid[idx]
         new_rows = rows[rows >= 0]
+        if c.cursor_mode:
+            # cursor refill: every row is past the window's last gid, so
+            # the fetch *appends* — the window stays ascending and each
+            # refill did O(page) work.  A truncated cursor fetch always
+            # returned >= 1 row, so pagination is guaranteed to progress.
+            if len(new_rows):
+                c.rows = np.concatenate([c.rows, new_rows])
+            c.truncated = bool(res.truncated[idx])
+            c.expires = time.monotonic() + self.ttl
+            return
         # once the window can no longer grow (want at ceiling) AND a refill
         # stopped delivering new rows, the token must complete — otherwise
         # every next_page would re-dispatch the same doomed fetch

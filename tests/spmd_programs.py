@@ -175,23 +175,79 @@ def prog_multiquery_parity():
         solo = db.query([queries[i]], caps=caps, read_ts=ts[i])
         assert rl.counts[i] == solo.counts[0], (i, rl.counts, solo.counts)
 
-    for be in ("ref", "pallas"):
-        rs = db.query(queries, caps=caps, mesh=mesh, backend=be,
-                      read_ts=ts, fused=True)
-        assert np.array_equal(rl.counts, rs.counts), (be, rl.counts,
-                                                      rs.counts)
-        assert np.array_equal(rl.failed_q, rs.failed_q), be
-        assert np.array_equal(rl.truncated, rs.truncated), be
-        for qi in (4, 5):       # select rows: set-equal (shard order differs)
-            for col in (("key", 0), ("i32", 0)):
-                kl = sorted(int(x) for x, gg in
-                            zip(rl.rows[col][qi], rl.rows_gid[qi]) if gg >= 0)
-                ks = sorted(int(x) for x, gg in
-                            zip(rs.rows[col][qi], rs.rows_gid[qi]) if gg >= 0)
-                assert kl == ks, (be, qi, col, kl, ks)
-            assert (sorted(x for x in rl.rows_gid[qi] if x >= 0)
-                    == sorted(x for x in rs.rows_gid[qi] if x >= 0)), (be, qi)
+    # the shared-frontier mode must agree too (no overflow at these caps:
+    # bit-identical to per-query mode, locally and under shard_map)
+    budgets = [(None, "fused"), ("shared", "shared")]
+    for budget, tag in budgets:
+        for be in ("ref", "pallas"):
+            rs = db.query(queries, caps=caps, mesh=mesh, backend=be,
+                          read_ts=ts, fused=True, budget=budget)
+            assert np.array_equal(rl.counts, rs.counts), (tag, be, rl.counts,
+                                                          rs.counts)
+            assert np.array_equal(rl.failed_q, rs.failed_q), (tag, be)
+            assert np.array_equal(rl.truncated, rs.truncated), (tag, be)
+            for qi in (4, 5):   # select rows: set-equal (shard order differs)
+                for col in (("key", 0), ("i32", 0)):
+                    kl = sorted(int(x) for x, gg in
+                                zip(rl.rows[col][qi], rl.rows_gid[qi])
+                                if gg >= 0)
+                    ks = sorted(int(x) for x, gg in
+                                zip(rs.rows[col][qi], rs.rows_gid[qi])
+                                if gg >= 0)
+                    assert kl == ks, (tag, be, qi, col, kl, ks)
+                assert (sorted(x for x in rl.rows_gid[qi] if x >= 0)
+                        == sorted(x for x in rs.rows_gid[qi] if x >= 0)), \
+                    (tag, be, qi)
+        sl = db.query(queries, caps=caps, read_ts=ts, fused=True,
+                      budget=budget)
+        assert np.array_equal(rl.counts, sl.counts), (tag, sl.counts)
     print("MQ_OK")
+
+
+def prog_dedup_compact():
+    """kernels/dedup_compact under shard_map: every shard sorts/compacts its
+    own candidate block, ref and pallas-interpret bit-identical (the same
+    layout the fused wave programs dispatch through core/backend.py)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import backend as backend_mod
+    from repro.dist import compat
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    PAD = 2**31 - 1
+    rng = np.random.default_rng(7)
+    S, R, W, cap = 8, 4, 96, 16
+    x = rng.integers(0, 40, (S * R, W)).astype(np.int32)
+    x[rng.random(x.shape) < 0.3] = PAD
+    s_flat = rng.integers(0, 6, (S * 128,)).astype(np.int32)
+    g_flat = rng.integers(0, 40, (S * 128,)).astype(np.int32)
+
+    def body(be):
+        def f(xb, sb, gb):
+            out, n = backend_mod.dedup_compact_rows(xb, cap, backend=be)
+            srt = backend_mod.sort_rows(xb, backend=be)
+            ps, pg = backend_mod.sort_pairs(sb, gb, backend=be)
+            return out, n, srt, ps, pg
+        return jax.jit(compat.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(("data", "model")), P(("data", "model")),
+                      P(("data", "model"))),
+            out_specs=(P(("data", "model")),) * 5, check_vma=False))
+
+    ref = backend_mod.REF
+    pal = backend_mod.Backend("pallas", interpret=True)
+    a = body(ref)(jnp.asarray(x), jnp.asarray(s_flat), jnp.asarray(g_flat))
+    b = body(pal)(jnp.asarray(x), jnp.asarray(s_flat), jnp.asarray(g_flat))
+    for i, (ai, bi) in enumerate(zip(a, b)):
+        assert np.array_equal(np.asarray(ai), np.asarray(bi)), i
+    # shard-local oracle: each shard block == the plain jnp compaction
+    from repro.kernels.dedup_compact import ref as dc_ref
+    want, n_want = dc_ref.dedup_compact_rows(jnp.asarray(x), cap)
+    assert np.array_equal(np.asarray(a[0]), np.asarray(want))
+    assert np.array_equal(np.asarray(a[1]), np.asarray(n_want))
+    print("DEDUP_OK")
 
 
 def prog_collective_matmul():

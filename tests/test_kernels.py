@@ -89,6 +89,96 @@ def test_sorted_lookup_ranged_sweep(S, cap, q, bk):
 
 
 # ---------------------------------------------------------------------------
+# dedup_compact
+# ---------------------------------------------------------------------------
+DC_PAD = 2**31 - 1
+
+
+@pytest.mark.parametrize("R,W,cap", [(5, 37, 8), (1, 1, 4), (8, 300, 16),
+                                     (3, 128, 128), (16, 1000, 64)])
+def test_dedup_compact_sweep(R, W, cap):
+    from repro.kernels.dedup_compact import ref
+    from repro.kernels.dedup_compact.kernel import (dedup_compact_rows,
+                                                    sort_rows)
+    rng = np.random.default_rng(R * 1000 + W)
+    x = rng.integers(0, max(2, W // 2), (R, W)).astype(np.int32)
+    x[rng.random((R, W)) < 0.3] = DC_PAD               # invalid slots
+    xj = jnp.asarray(x)
+    assert np.array_equal(np.asarray(sort_rows(xj, interpret=True)),
+                          np.asarray(ref.sort_rows(xj)))
+    got, n = dedup_compact_rows(xj, cap, interpret=True)
+    want, n_ref = ref.dedup_compact_rows(xj, cap)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(n), np.asarray(n_ref))
+    # the oracle itself: sorted-unique first-cap values per row
+    for r in range(R):
+        uniq = np.unique(x[r][x[r] != DC_PAD])
+        assert int(n_ref[r]) == len(uniq)
+        w = np.asarray(want[r])
+        assert np.array_equal(w[w != DC_PAD], uniq[:cap])
+
+
+def test_dedup_compact_edge_cases():
+    """PAD handling, all-dup rows, and the empty frontier (all-PAD)."""
+    from repro.kernels.dedup_compact import ref
+    from repro.kernels.dedup_compact.kernel import dedup_compact_rows
+    x = jnp.asarray(np.array([[DC_PAD] * 6,           # empty frontier
+                              [7] * 6,                # one big dup run
+                              [1, 2, 3, 1, 2, 3],     # all rows dup'd
+                              [5, DC_PAD, 5, DC_PAD, 9, 5]], np.int32))
+    got, n = dedup_compact_rows(x, 4, interpret=True)
+    want, n_ref = ref.dedup_compact_rows(x, 4)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(n), np.asarray(n_ref))
+    assert np.asarray(n_ref).tolist() == [0, 1, 3, 2]
+    assert (np.asarray(want[0]) == DC_PAD).all()
+
+
+def test_dedup_compact_cap_wider_than_input():
+    """cap > input width (routed-arrival dedups: S*bucket can be under the
+    frontier cap): the tail pads with PAD, bit-identical to the oracle."""
+    from repro.kernels.dedup_compact import ref
+    from repro.kernels.dedup_compact.kernel import dedup_compact_rows
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 20, (5, 48)).astype(np.int32))
+    got, n = dedup_compact_rows(x, 1024, interpret=True)
+    want, n_ref = ref.dedup_compact_rows(x, 1024)
+    assert got.shape == (5, 1024)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(n), np.asarray(n_ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 40)),
+                min_size=1, max_size=200))
+def test_dedup_sort_pairs_property(pairs):
+    """Two-key bitonic pair sort == jax.lax.sort(num_keys=2)."""
+    from repro.kernels.dedup_compact import ref
+    from repro.kernels.dedup_compact.kernel import sort_pairs
+    s = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    g = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    ks, kg = sort_pairs(s, g, interpret=True)
+    rs, rg = ref.sort_pairs(s, g)
+    assert np.array_equal(np.asarray(ks), np.asarray(rs))
+    assert np.array_equal(np.asarray(kg), np.asarray(rg))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 64), st.integers(1, 32),
+       st.integers(0, 5))
+def test_dedup_compact_property(R, W, cap, seed):
+    from repro.kernels.dedup_compact import ref
+    from repro.kernels.dedup_compact.kernel import dedup_compact_rows
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-1, 30, (R, W)).astype(np.int32)
+    x[x < 0] = DC_PAD
+    got, n = dedup_compact_rows(jnp.asarray(x), cap, interpret=True)
+    want, n_ref = ref.dedup_compact_rows(jnp.asarray(x), cap)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(n), np.asarray(n_ref))
+
+
+# ---------------------------------------------------------------------------
 # embedding_bag
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("V,D,B,L", [(100, 128, 8, 4), (531, 256, 16, 7)])

@@ -168,3 +168,68 @@ def test_hedged_retry_patches_only_failed_queries():
         solo = db.query([q], caps=big)
         if not solo.failed:
             assert res.counts[i] == solo.counts[0], i
+
+
+def test_cursor_refills_are_page_sized():
+    """Deep pagination uses gid-cursor refills: each refill fetches an
+    O(page) window past the materialized rows (``gid_cursor`` runtime
+    predicate) instead of re-materializing a pow2-growing window — and the
+    moving cursor never retraces the fused program."""
+    from repro.core.query import planner
+    db = busy_db()
+    want = full_rows(db, SEL)
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    m_after_first = None
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)
+        got.extend(page)
+        if m_after_first is None and srv.stats["cursor_refills"] >= 2:
+            m_after_first = planner.CACHE_STATS["misses"]
+    assert token is None
+    assert sorted(int(x) for x in got) == want
+    assert srv.stats["cursor_refills"] >= 2
+    # refills after the first compile reuse the program: the cursor is
+    # runtime data, so a moving cursor can't retrace
+    assert planner.CACHE_STATS["misses"] == m_after_first
+
+
+def test_cursor_refill_falls_back_when_hints_pinned():
+    """Documents with pinned cap hints keep the pow2 growing-window path
+    (the hint would fight the cursor's constant results override)."""
+    db = busy_db()
+    hinted = {**SEL, "hints": {"frontier": 128}}
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2)
+    want = full_rows(db, hinted)
+    page, token = srv.select_paged(hinted)
+    got = list(page)
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)
+        got.extend(page)
+    assert sorted(int(x) for x in got) == want
+    assert srv.stats["cursor_refills"] == 0       # pow2 fallback used
+    assert not db.active_query_ts
+
+
+def test_serve_stats_expose_planner_counters():
+    """/stats carries the planner cache hit-rate and peak frontier bytes
+    per budget mode (the shared-mode memory claim, observable)."""
+    db = busy_db()
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=16),
+                   budget="shared")
+    srv.execute([q_chain(0), q_star(0, 301)], qclass="Q1")
+    srv.execute([q_chain(0), q_star(0, 301)], qclass="Q1")
+    assert srv.stats["peak_frontier_bytes_shared"] > 0
+    assert 0.0 < srv.stats["planner_cache_hit_rate"] <= 1.0
+    # shared serving still answers correctly
+    res = srv.execute([q_chain(1)], qclass="Q1")
+    solo = db.query([q_chain(1)],
+                    caps=QueryCaps(frontier=128, expand=512, results=16))
+    assert res.counts[0] == solo.counts[0]

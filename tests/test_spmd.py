@@ -32,6 +32,10 @@ def test_spmd_multiquery_parity():
     assert "MQ_OK" in run_prog("multiquery_parity")
 
 
+def test_spmd_dedup_compact():
+    assert "DEDUP_OK" in run_prog("dedup_compact")
+
+
 def test_collective_matmul():
     assert "CM_OK" in run_prog("collective_matmul")
 
