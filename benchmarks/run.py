@@ -36,7 +36,7 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        only = {"queries", "reads", "multiquery"}
+        only = {"queries", "reads", "multiquery", "writes"}
     if args.backend:
         # before any repro import: every suite resolves the env default
         os.environ["REPRO_BACKEND"] = args.backend
@@ -44,7 +44,7 @@ def main() -> None:
     import jax
 
     from benchmarks import (bench_multiquery, bench_queries, bench_reads,
-                            bench_scaling, bench_throughput)
+                            bench_scaling, bench_throughput, bench_writes)
     from benchmarks import common
     from repro.core import backend as backend_mod
     from repro.data.kg import build_film_kg
@@ -72,6 +72,8 @@ def main() -> None:
         bench_throughput.run(kg)
     if only is None or "reads" in only:
         bench_reads.run(kg)
+    if only is None or "writes" in only:
+        bench_writes.run(smoke=args.smoke)
     if only is None or "scaling" in only:
         bench_scaling.run()
     wall = time.time() - t0

@@ -35,25 +35,21 @@ def main():
     db = GraphDB(cfg)
     db.vertex_type("user", i_attrs=("grp",))
     db.edge_type("follows")
-    gids = []
-    t = db.create_transaction()
     labels_host = rng.integers(0, n_classes, N).astype(np.int32)
-    for i in range(N):
-        gids.append(db.create_vertex("user", i, {"grp": int(labels_host[i])},
-                                     txn=t))
-    db.commit(t)
-    t = db.create_transaction()
+    from repro.core.writes import CreateEdge, CreateVertex, DeleteVertex
+    res = db.write([CreateVertex("user", i, {"grp": int(labels_host[i])})
+                    for i in range(N)])
+    assert not res.failed
+    gids = res.gids
+    e_ops, seen = [], set()
     for i in range(N):
         for j in rng.choice(N, deg, replace=False):
-            if int(j) != i:
-                try:
-                    db.create_edge(gids[i], gids[int(j)], "follows", txn=t)
-                except ValueError:
-                    pass
-        if len(t.create_e) > 400:       # stay under the commit batch caps
-            db.commit(t)
-            t = db.create_transaction()
-    db.commit(t)
+            if int(j) != i and (i, int(j)) not in seen:
+                seen.add((i, int(j)))
+                e_ops.append(CreateEdge(gids[i], gids[int(j)], "follows",
+                                        check=False))
+    for off in range(0, len(e_ops), 400):   # stay under the commit batch caps
+        assert not db.write(e_ops[off:off + 400]).failed
     db.run_compaction()
 
     # ---- pull a consistent CSR snapshot through the query engine ----------
@@ -108,7 +104,7 @@ def main():
     print("final seed accuracy:", float(acc))
 
     # ---- live mutation + fresh snapshot keeps working ---------------------
-    db.delete_vertex(gids[0])
+    db.write([DeleteVertex(gids[0])])
     db.run_compaction()
     print("deleted a vertex; store still serves: ",
           len(db.get_edges(gids[1])), "edges at vertex 1")

@@ -17,6 +17,7 @@ from repro.core.graphdb import GraphDB
 from repro.core.query.executor import QueryCaps
 from repro.core.recovery import best_effort_recover
 from repro.core.replication import ObjectStore, ReplicationLog
+from repro.core.writes import CreateEdge, CreateVertex, UpdateVertex
 
 
 def main():
@@ -36,18 +37,26 @@ def main():
     db.edge_type("film.actor")
 
     # -- one atomic transaction builds the graph ----------------------------
+    # mutation-op records stage into an open transaction (gids returned
+    # positionally at staging time); the transaction then commits as a
+    # mutation wave.  The intra-txn edges use check=False — their endpoints
+    # are uncommitted until the same wave lands.
     t = db.create_transaction()
-    spielberg = db.create_vertex("director", 1, {"dob": 1946}, txn=t)
-    hanks = db.create_vertex("actor", 100, {"dob": 1956}, txn=t)
-    ryan = db.create_vertex("actor", 101, {"dob": 1961}, txn=t)
-    private_ryan = db.create_vertex(
-        "film", 1000, {"year": 1998, "genre": 1, "gross": 482.0}, txn=t)
-    mail = db.create_vertex(
-        "film", 1001, {"year": 1998, "genre": 2, "gross": 250.0}, txn=t)
-    t.create_e += [(spielberg, private_ryan, 0),
-                   (private_ryan, hanks, 1),
-                   (mail, hanks, 1), (mail, ryan, 1)]
-    assert db.commit(t) == "COMMITTED"
+    staged = db.write([
+        CreateVertex("director", 1, {"dob": 1946}),
+        CreateVertex("actor", 100, {"dob": 1956}),
+        CreateVertex("actor", 101, {"dob": 1961}),
+        CreateVertex("film", 1000, {"year": 1998, "genre": 1, "gross": 482.0}),
+        CreateVertex("film", 1001, {"year": 1998, "genre": 2, "gross": 250.0}),
+    ], txn=t)
+    spielberg, hanks, ryan, private_ryan, mail = staged.gids
+    db.write([
+        CreateEdge(spielberg, private_ryan, "film.director", check=False),
+        CreateEdge(private_ryan, hanks, "film.actor", check=False),
+        CreateEdge(mail, hanks, "film.actor", check=False),
+        CreateEdge(mail, ryan, "film.actor", check=False),
+    ], txn=t)
+    assert db.write([t]).statuses == ["COMMITTED"]
     print("graph committed; replication lag:", log.lag())
 
     # -- the paper's Fig. 8 query: actors who worked with Spielberg ---------
@@ -73,15 +82,16 @@ def main():
 
     # -- snapshot isolation: readers never block on writers -----------------
     old_ts = db.snapshot_ts()
-    db.update_vertex(hanks, "actor", {"dob": 1900})
+    db.write([UpdateVertex(hanks, "actor", {"dob": 1900})])
     f, i = db._read_data_host(hanks, old_ts)
     print("dob at old snapshot:", int(i[0]), "(still 1956)")
 
-    # -- OCC: conflicting writers abort and retry ---------------------------
+    # -- OCC: conflicting writers fused into one wave; first wins -----------
     t1, t2 = db.create_transaction(), db.create_transaction()
-    db.update_vertex(ryan, "actor", {"dob": 1}, txn=t1)
-    db.update_vertex(ryan, "actor", {"dob": 2}, txn=t2)
-    print("conflicting commits:", db.commit_many([t1, t2]))
+    db.write([UpdateVertex(ryan, "actor", {"dob": 1})], txn=t1)
+    db.write([UpdateVertex(ryan, "actor", {"dob": 2})], txn=t2)
+    wave = db.write([t1, t2])
+    print("conflicting commits:", wave.statuses, "-", wave.reasons[1])
 
     # -- disaster recovery from ObjectStore ---------------------------------
     recovered = best_effort_recover(store, db, cfg)

@@ -18,6 +18,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.query.executor import QueryCaps
+from repro.core.writes import UpdateVertex
 from repro.data.kg import build_film_kg
 from repro.launch.serve import A1Server
 
@@ -85,12 +86,15 @@ def main():
         if b % 3 == 0:          # interleave the paper's stress query
             acts = rng.choice(kg.actor_keys[:50], args.batch_size)
             server.execute([q4(a) for a in acts], qclass="Q4")
-        if b % 5 == 0:          # live updates against the serving store
+        if b % 5 == 0:          # live updates via the write-admission queue:
+            # staged at the admission snapshot, committed when the next
+            # query batch closes the mutation wave (max-batch-or-deadline)
             f = int(rng.choice(kg.film_keys))
             gid, found = db.lookup_vertex("film", f)
             if found:
-                db.update_vertex(gid, "film",
-                                 {"gross": float(rng.uniform(1, 500))})
+                server.submit_write([UpdateVertex(
+                    gid, "film", {"gross": float(rng.uniform(1, 500))})])
+    server.flush_writes()       # close any wave still waiting on a deadline
 
     # continuation tokens: a select query with a larger-than-page result
     star = int(kg.actor_keys[0])

@@ -14,6 +14,7 @@ created for that operation").
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -23,14 +24,12 @@ import numpy as np
 from repro.core import edges as edges_mod
 from repro.core import index as index_mod
 from repro.core import txn as txn_mod
+from repro.core import writes as writes_mod
 from repro.core.addressing import NULL, TS_INF, StoreConfig, gid_of
 from repro.core.catalog import Catalog, EdgeType, VertexType
 from repro.core.store import (GraphStore, gather_data, gather_headers,
-                              make_store)
-
-
-class CapacityError(RuntimeError):
-    pass
+                              make_store, replay_log_tail)
+from repro.core.writes import CapacityError
 
 
 class GraphDB:
@@ -65,8 +64,20 @@ class GraphDB:
         self.il_count = np.zeros(S, np.int64)
         self.xd_count = np.zeros(S, np.int64)
         self.replication_log = replication_log       # recovery hook (§4)
-        self.stats = {"commits": 0, "aborts": 0, "compactions": 0}
+        self.stats = {"commits": 0, "aborts": 0, "compactions": 0,
+                      "write_waves": 0, "bg_compactions": 0,
+                      "compaction_rebuilds": 0}
         self.active_query_ts: list[int] = []         # pins for GC (§2.2)
+        # -- background compaction (§2.2 concurrent GC; §3.3 tasks) -----------
+        # Structural epochs: a shadow compaction built at epoch E can only be
+        # handed off if the epochs it depends on are still E — deletes
+        # tombstone CSR/index positions that shift under compaction, and a
+        # concurrent inline compaction makes the shadow's base stale.
+        self.epochs = {"delete_e": 0, "delete_v": 0,
+                       "compact_edges": 0, "compact_index": 0}
+        self.task_queue = None              # attached by the serving tier
+        self.compaction_watermark = 0.5     # delta fill fraction that triggers
+        self._bg_compaction_pending = False
 
     # ------------------------------------------------------------------
     # schema (control plane; each call = its own implicit txn, §3)
@@ -115,55 +126,44 @@ class GraphDB:
         raise CapacityError("vertex store full on all shards")
 
     # ------------------------------------------------------------------
-    # data plane (stage into txn; commit immediately when txn is None)
+    # writes (the one entry point; per-op methods are staging wrappers)
     # ------------------------------------------------------------------
+    def write(self, ops, *, txn=None, caps=None) -> writes_mod.WriteResult:
+        """Execute a batch of mutations — the write twin of :meth:`query`.
+
+        ``ops`` is either a list of mutation-op records
+        (:class:`~repro.core.writes.CreateVertex` et al.) or a list of staged
+        :class:`~repro.core.txn.Transaction` objects (never mixed):
+
+        * op records + ``txn=`` — stage into the open transaction, return
+          per-op ``STAGED`` statuses and created gids positionally;
+        * op records alone — one implicit atomic transaction, committed
+          immediately (§3);
+        * transactions — fuse them into batched mutation waves: one jitted
+          OCC-validation wave over all read sets, one fused apply program per
+          mutation-shape group (programs cached like the read planner's),
+          per-txn status/abort-reason positionally.
+
+        Staging contract violations (duplicate key, missing endpoint, ...)
+        raise ``ValueError`` synchronously; OCC outcomes come back as
+        statuses.  ``caps=`` overrides the per-chunk :class:`BatchCaps`.
+        """
+        return writes_mod.write(self, ops, txn=txn, caps=caps)
+
     def create_vertex(self, vtype: str, key: int, attrs: Optional[dict] = None,
                       txn: Optional[txn_mod.Transaction] = None,
                       hint: Optional[int] = None) -> int:
-        t, implicit = self._txn(txn)
-        vt = self.vt(vtype)
-        # uniqueness: probe the primary index inside the transaction
-        g, found = self.lookup_vertex(vtype, key, read_ts=t.read_ts)
-        if found:
-            raise ValueError(f"vertex ({vtype}, {key}) already exists")
-        f, i = self._encode_attrs(vt, attrs or {})
-        gid = self._alloc_vertex(hint)
-        t.create_v.append((gid, vt.type_id, int(key), f, i))
-        if implicit:
-            self.commit(t)
-        return gid
+        return self.write([writes_mod.CreateVertex(vtype, int(key), attrs,
+                                                   hint)], txn=txn).gids[0]
 
     def update_vertex(self, gid: int, vtype: str, attrs: dict,
                       txn: Optional[txn_mod.Transaction] = None) -> None:
-        t, implicit = self._txn(txn)
-        vt = self.vt(vtype)
-        cur_f, cur_i = self._read_data_host(gid, t.read_ts)
-        t.record_read(gid)
-        f, i = self._encode_attrs(vt, attrs, base_f=cur_f, base_i=cur_i)
-        t.update_v.append((gid, f, i))
-        if implicit:
-            self.commit(t)
+        self.write([writes_mod.UpdateVertex(int(gid), vtype, attrs)], txn=txn)
 
     def delete_vertex(self, gid: int, txn: Optional[txn_mod.Transaction] = None
                       ) -> None:
-        """Delete a vertex and all its half-edges (the paper's §3.2 cascade:
-
-        the incoming edge list tells us every source vertex whose outgoing
-        half-edge must also be retired)."""
-        t, implicit = self._txn(txn)
-        vtid, key, alive = self._read_header_host(gid, t.read_ts)
-        t.record_read(gid)
-        if not alive:
-            raise ValueError(f"vertex {gid} not found")
-        outs = self.get_edges(gid, direction="out", read_ts=t.read_ts)
-        ins = self.get_edges(gid, direction="in", read_ts=t.read_ts)
-        for nbr, et in outs:
-            t.delete_e.append((gid, int(nbr), int(et)))
-        for nbr, et in ins:
-            t.delete_e.append((int(nbr), gid, int(et)))
-        t.delete_v.append((gid, int(vtid), int(key)))
-        if implicit:
-            self.commit(t)
+        """Delete a vertex and all its half-edges (§3.2 cascade)."""
+        self.write([writes_mod.DeleteVertex(int(gid))], txn=txn)
 
     def create_edge(self, src: int, dst: int, etype: str,
                     txn: Optional[txn_mod.Transaction] = None,
@@ -173,33 +173,13 @@ class GraphDB:
         fast path (the paper's daily map-reduce KG build bypasses the
         read-validate round-trips too; uniqueness is then the loader's
         contract)."""
-        t, implicit = self._txn(txn)
-        et = self.et(etype)
-        if check:
-            # endpoints must exist; reads recorded for OCC
-            for g in (src, dst):
-                _, _, alive = self._read_header_host(g, t.read_ts)
-                t.record_read(g)
-                if not alive:
-                    raise ValueError(f"endpoint {g} not found")
-            # single-edge-per-(src,type,dst) invariant (§3)
-            existing = self.get_edges(src, direction="out",
-                                      read_ts=t.read_ts, etype=et.type_id)
-            t.reads.append((int(src), "e"))
-            if any(int(n) == int(dst) for n, _ in existing):
-                raise ValueError("edge already exists")
-        t.create_e.append((int(src), int(dst), et.type_id))
-        if implicit:
-            self.commit(t)
+        self.write([writes_mod.CreateEdge(int(src), int(dst), etype, check)],
+                   txn=txn)
 
     def delete_edge(self, src: int, dst: int, etype: str,
                     txn: Optional[txn_mod.Transaction] = None) -> None:
-        t, implicit = self._txn(txn)
-        et = self.et(etype)
-        t.reads.append((int(src), "e"))
-        t.delete_e.append((int(src), int(dst), et.type_id))
-        if implicit:
-            self.commit(t)
+        self.write([writes_mod.DeleteEdge(int(src), int(dst), etype)],
+                   txn=txn)
 
     # ------------------------------------------------------------------
     # queries (A1QL v2: the one entry point)
@@ -287,163 +267,24 @@ class GraphDB:
         return np.concatenate([csr_t, dt])
 
     # ------------------------------------------------------------------
-    # commit
+    # commit (deprecated shims; the wave lives in core/writes.py)
     # ------------------------------------------------------------------
     def commit(self, txn: txn_mod.Transaction) -> str:
-        return self.commit_many([txn])[0]
+        """Deprecated: use ``write([txn])``."""
+        warnings.warn(
+            "GraphDB.commit is deprecated; use GraphDB.write([txn])",
+            DeprecationWarning, stacklevel=2)
+        return self.write([txn]).statuses[0]
 
     def commit_many(self, txns: Sequence[txn_mod.Transaction]) -> list[str]:
-        """Validate + apply a commit batch.  Returns per-txn status."""
-        caps = self.caps
-        # 1) OCC validation against committed state -------------------------
-        gids, kinds, owner = [], [], []
-        for i, t in enumerate(txns):
-            for g, kind in t.reads:
-                gids.append(g)
-                kinds.append(1 if kind == "e" else 0)
-                owner.append(i)
-        status = ["COMMITTED"] * len(txns)
-        R = self.caps.reads
-        for off in range(0, len(gids), R):
-            lw = np.asarray(txn_mod.last_write_ts(
-                self.store, self.cfg,
-                txn_mod.pad_i32(gids[off:off + R], R),
-                txn_mod.pad_i32(kinds[off:off + R], R, fill=0)))
-            for g, k, i, w in zip(gids[off:off + R], kinds[off:off + R],
-                                  owner[off:off + R], lw):
-                if int(w) > txns[i].read_ts:
-                    status[i] = "ABORTED"
-        # 2) intra-batch conflicts, first-wins: a later txn aborts if it
-        #    writes an object an earlier winner wrote, or reads an object an
-        #    earlier winner wrote (so every winner reads pre-batch state and
-        #    the batch serializes in any order).
-        taken: set = set()
-        for i, t in enumerate(txns):
-            if status[i] == "ABORTED":
-                continue
-            wk = t.write_keys()
-            if (wk & taken) or (t.read_keys() & taken):
-                status[i] = "ABORTED"
-            else:
-                taken |= wk
-        winners = [t for i, t in enumerate(txns) if status[i] == "COMMITTED"]
-        for i, t in enumerate(txns):
-            t.status = status[i]
-        if not winners:
-            self.stats["aborts"] += len(txns)
-            return status
-
-        # 3) capacity management: compact if the logs would overflow ----------
-        n_ce = sum(len(t.create_e) for t in winners)
-        n_cv = sum(len(t.create_v) for t in winners)
-        n_dv = sum(len(t.delete_v) for t in winners)
-        if (self.dl_count.max(initial=0) + n_ce > self.cfg.cap_delta
-                or self.il_count.max(initial=0) + n_ce > self.cfg.cap_delta):
-            self.run_compaction()
-        if self.xd_count.max(initial=0) + n_cv + n_dv > self.cfg.cap_idx_delta:
-            self.run_index_compaction()
-
-        # 4) apply winners, chunked under the static batch caps.  Winners are
-        #    mutually conflict-free, so chunked application at increasing
-        #    timestamps preserves the batch's serializable order.
-        for chunk in self._chunks(winners):
-            ts = self.clock + 1
-            b = self._build_batch(chunk)
-            assert b is not None
-            self.store = txn_mod.apply_batch(self.store, self.cfg,
-                                             jnp.int32(ts), *b)
-            self.clock = ts
-            if self.replication_log is not None:
-                self.replication_log.append(ts, chunk)
-        self.stats["commits"] += len(winners)
-        self.stats["aborts"] += len(txns) - len(winners)
-        return status
-
-    def _chunks(self, winners):
-        caps = self.caps
-        out, acc = [], []
-        ncv = nuv = ndv = nce = nde = 0
-        for t in winners:
-            if acc and (ncv + len(t.create_v) > caps.create_v
-                        or nuv + len(t.update_v) > caps.update_v
-                        or ndv + len(t.delete_v) > caps.delete_v
-                        or nce + len(t.create_e) > caps.create_e
-                        or nde + len(t.delete_e) > caps.delete_e):
-                out.append(acc)
-                acc, ncv, nuv, ndv, nce, nde = [], 0, 0, 0, 0, 0
-            acc.append(t)
-            ncv += len(t.create_v)
-            nuv += len(t.update_v)
-            ndv += len(t.delete_v)
-            nce += len(t.create_e)
-            nde += len(t.delete_e)
-            if (len(t.create_v) > caps.create_v or len(t.update_v) > caps.update_v
-                    or len(t.delete_v) > caps.delete_v
-                    or len(t.create_e) > caps.create_e
-                    or len(t.delete_e) > caps.delete_e):
-                raise CapacityError(
-                    "single transaction exceeds batch caps; raise BatchCaps")
-        if acc:
-            out.append(acc)
-        return out
-
-    def _build_batch(self, winners):
-        caps, cfg = self.caps, self.cfg
-        S = cfg.n_shards
-        cv, uv, dv, ce, de = [], [], [], [], []
-        for t in winners:
-            cv += t.create_v
-            uv += t.update_v
-            dv += t.delete_v
-            ce += t.create_e
-            de += t.delete_e
-        if (len(cv) > caps.create_v or len(uv) > caps.update_v
-                or len(dv) > caps.delete_v or len(ce) > caps.create_e
-                or len(de) > caps.delete_e):
-            return None
-
-        # index-delta positions for creates (host-assigned, per index shard)
-        xpos = []
-        for gid, vtid, key, f, i in cv:
-            sh = index_mod.route_host(vtid, key, S)
-            xpos.append(sh * cfg.cap_idx_delta + int(self.xd_count[sh]))
-            self.xd_count[sh] += 1
-        # delta-log positions for edge creates
-        opos, ipos = [], []
-        for s, d, et in ce:
-            so, sd = s % S, d % S
-            opos.append(so * cfg.cap_delta + int(self.dl_count[so]))
-            self.dl_count[so] += 1
-            ipos.append(sd * cfg.cap_delta + int(self.il_count[sd]))
-            self.il_count[sd] += 1
-
-        p32 = txn_mod.pad_i32
-        b = (
-            p32([x[0] for x in cv], caps.create_v),
-            p32([x[1] for x in cv], caps.create_v),
-            p32([x[2] for x in cv], caps.create_v),
-            txn_mod.pad_f32([x[3] for x in cv], caps.create_v, cfg.d_f32),
-            txn_mod.pad_i32_2d([x[4] for x in cv], caps.create_v, cfg.d_i32),
-            p32(xpos, caps.create_v),
-            p32([x[0] for x in uv], caps.update_v),
-            txn_mod.pad_f32([x[1] for x in uv], caps.update_v, cfg.d_f32),
-            txn_mod.pad_i32_2d([x[2] for x in uv], caps.update_v, cfg.d_i32),
-            p32([x[0] for x in dv], caps.delete_v),
-            p32([x[1] for x in dv], caps.delete_v),
-            p32([x[2] for x in dv], caps.delete_v),
-            p32([x[0] for x in ce], caps.create_e),
-            p32([x[1] for x in ce], caps.create_e),
-            p32([x[2] for x in ce], caps.create_e),
-            p32(opos, caps.create_e),
-            p32(ipos, caps.create_e),
-            p32([x[0] for x in de], caps.delete_e),
-            p32([x[1] for x in de], caps.delete_e),
-            p32([x[2] for x in de], caps.delete_e),
-            jnp.asarray(self.dl_count, jnp.int32),
-            jnp.asarray(self.il_count, jnp.int32),
-            jnp.asarray(self.xd_count, jnp.int32),
-        )
-        return b
+        """Deprecated: use ``write(txns)``.  Returns per-txn status."""
+        warnings.warn(
+            "GraphDB.commit_many is deprecated; use GraphDB.write(txns)",
+            DeprecationWarning, stacklevel=2)
+        txns = list(txns)
+        if not txns:
+            return []
+        return self.write(txns).statuses
 
     # ------------------------------------------------------------------
     # maintenance (invoked by the Task framework)
@@ -457,16 +298,142 @@ class GraphDB:
         return min(pins) if pins else self.clock
 
     def run_compaction(self) -> None:
+        """Inline (stop-the-world) edge compaction — overflow backstop."""
         self.store = edges_mod.compact(self.store, self.cfg,
                                        jnp.int32(self.gc_ts()))
         self.dl_count[:] = 0
         self.il_count[:] = 0
         self.stats["compactions"] += 1
+        self.epochs["compact_edges"] += 1
 
     def run_index_compaction(self) -> None:
         self.store = index_mod.compact_index(self.store, self.cfg,
                                              jnp.int32(self.gc_ts()))
         self.xd_count[:] = 0
+        self.epochs["compact_index"] += 1
+
+    # -- background compaction: build a shadow, hand it off (§2.2) ----------
+    def _kinds_needed(self) -> list:
+        """Compaction kinds whose delta fill crossed the watermark."""
+        kinds = []
+        wm = self.compaction_watermark
+        fill = max(self.dl_count.max(initial=0), self.il_count.max(initial=0))
+        if fill >= wm * self.cfg.cap_delta:
+            kinds.append("edges")
+        if self.xd_count.max(initial=0) >= wm * self.cfg.cap_idx_delta:
+            kinds.append("index")
+        return kinds
+
+    def _maybe_schedule_compaction(self) -> None:
+        """Called after every write wave: threshold-trigger the background
+        task instead of compacting on the commit path.  Without an attached
+        task queue the inline overflow backstop still guarantees capacity."""
+        if self.task_queue is None or self._bg_compaction_pending:
+            return
+        if self._kinds_needed():
+            from repro.core.tasks import background_compaction_task
+            self._bg_compaction_pending = True
+            self.task_queue.enqueue(background_compaction_task())
+
+    def begin_compaction(self, kinds=("edges", "index")) -> dict:
+        """Phase 1 of background compaction: build compacted shadow state.
+
+        Folds the delta logs into base CSR/index at ``gc_ts()`` (respecting
+        ``active_query_ts`` pins, §2.2) *without* touching the live store —
+        ``edges.compact``/``index.compact_index`` are pure.  Returns a handle
+        carrying the shadow, the per-shard fill watermarks at build time, and
+        the structural-epoch snapshot that :meth:`try_handoff` validates.
+        """
+        handle = {"gc_ts": self.gc_ts(), "kinds": tuple(kinds),
+                  "epochs": dict(self.epochs), "shadow": {}, "marks": {}}
+        if "edges" in kinds:
+            handle["shadow"]["edges"] = edges_mod.compact(
+                self.store, self.cfg, jnp.int32(handle["gc_ts"]))
+            handle["marks"]["dl"] = self.dl_count.copy()
+            handle["marks"]["il"] = self.il_count.copy()
+        if "index" in kinds:
+            handle["shadow"]["index"] = index_mod.compact_index(
+                self.store, self.cfg, jnp.int32(handle["gc_ts"]))
+            handle["marks"]["xd"] = self.xd_count.copy()
+        return handle
+
+    def try_handoff(self, handle: dict) -> dict:
+        """Phase 2: merge the shadow into the live store, or refuse.
+
+        Per kind, succeeds only if the structural epochs the shadow depends
+        on are unchanged since the build (edge/vertex deletes tombstone
+        CSR/index *positions*, which the fold moved; an inline compaction
+        staled the base).  On success the store keeps its live vertex-data
+        arrays, adopts the shadow's compacted CSR/index, and replays the
+        delta-log tail appended since the build (``replay_log_tail``), so
+        concurrent create-only ingest loses nothing.  MVCC pin safety: any
+        pin taken after the build is >= the build's ``gc_ts``, so every
+        record the fold dropped was already invisible to it.
+
+        Only the shadow's *compacted* fields are read here — the shadow
+        shares its other arrays with a store version that later waves may
+        have donated back to jax.
+
+        Returns ``{kind: bool}``; a ``False`` kind needs a rebuild.
+        """
+        out = {}
+        for kind in handle["kinds"]:
+            if kind == "edges":
+                ok = (self.epochs["delete_e"] == handle["epochs"]["delete_e"]
+                      and self.epochs["compact_edges"]
+                      == handle["epochs"]["compact_edges"])
+                if ok:
+                    self._handoff_edges(handle)
+                out[kind] = ok
+            elif kind == "index":
+                ok = (self.epochs["delete_v"] == handle["epochs"]["delete_v"]
+                      and self.epochs["compact_index"]
+                      == handle["epochs"]["compact_index"])
+                if ok:
+                    self._handoff_index(handle)
+                out[kind] = ok
+        return out
+
+    def _handoff_edges(self, handle: dict) -> None:
+        sh = handle["shadow"]["edges"]
+        cap = self.cfg.cap_delta
+        w_dl = jnp.asarray(handle["marks"]["dl"], jnp.int32)
+        w_il = jnp.asarray(handle["marks"]["il"], jnp.int32)
+        n_dl = jnp.asarray(self.dl_count, jnp.int32)
+        n_il = jnp.asarray(self.il_count, jnp.int32)
+        repl = {f: getattr(sh, f) for f in (
+            "oe_indptr", "oe_dst", "oe_type", "oe_create", "oe_delete",
+            "ie_indptr", "ie_src", "ie_type", "ie_create", "ie_delete")}
+        for f in ("dl_slot", "dl_nbr", "dl_type", "dl_create", "dl_delete"):
+            repl[f] = replay_log_tail(getattr(sh, f), getattr(self.store, f),
+                                      w_dl, n_dl, cap=cap)
+        for f in ("il_slot", "il_nbr", "il_type", "il_create", "il_delete"):
+            repl[f] = replay_log_tail(getattr(sh, f), getattr(self.store, f),
+                                      w_il, n_il, cap=cap)
+        self.dl_count -= handle["marks"]["dl"]
+        self.il_count -= handle["marks"]["il"]
+        repl["dl_count"] = jnp.asarray(self.dl_count, jnp.int32)
+        repl["il_count"] = jnp.asarray(self.il_count, jnp.int32)
+        self.store = dataclasses.replace(self.store, **repl)
+        self.epochs["compact_edges"] += 1
+        self.stats["bg_compactions"] += 1
+
+    def _handoff_index(self, handle: dict) -> None:
+        sh = handle["shadow"]["index"]
+        cap = self.cfg.cap_idx_delta
+        w_xd = jnp.asarray(handle["marks"]["xd"], jnp.int32)
+        n_xd = jnp.asarray(self.xd_count, jnp.int32)
+        repl = {f: getattr(sh, f) for f in (
+            "ix_vtype", "ix_key", "ix_gid", "ix_create", "ix_delete",
+            "ix_count")}
+        for f in ("xd_vtype", "xd_key", "xd_gid", "xd_create", "xd_delete"):
+            repl[f] = replay_log_tail(getattr(sh, f), getattr(self.store, f),
+                                      w_xd, n_xd, cap=cap)
+        self.xd_count -= handle["marks"]["xd"]
+        repl["xd_count"] = jnp.asarray(self.xd_count, jnp.int32)
+        self.store = dataclasses.replace(self.store, **repl)
+        self.epochs["compact_index"] += 1
+        self.stats["bg_compactions"] += 1
 
     def vacuum(self) -> int:
         """Reclaim vertex slots dead before gc_ts (offline GC of tombstones)."""

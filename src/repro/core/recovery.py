@@ -36,14 +36,23 @@ from repro.core.replication import TOMBSTONE, ObjectStore
 def _rebuild(db: GraphDB, vrows: dict, erows: dict, *,
              drop_dangling: bool) -> GraphDB:
     """Load logical rows through the transactional write path."""
+    from repro.core.writes import CreateEdge, CreateVertex
     id2name = {vt.type_id: name
                for name, vt in db.catalog.tenants[db.tenant][db.graph]
                .vtypes.items()}
     e2name = {et.type_id: name
               for name, et in db.catalog.tenants[db.tenant][db.graph]
               .etypes.items()}
-    gid_of = {}
-    t = db.create_transaction()
+
+    def load(ops, chunk):
+        gids = []
+        for off in range(0, len(ops), chunk):
+            res = db.write(ops[off:off + chunk])
+            assert not res.failed
+            gids += res.gids
+        return gids
+
+    v_ops, v_keys = [], []
     for (vtid, key), (val, ts) in sorted(vrows.items()):
         if val == TOMBSTONE:
             continue
@@ -53,13 +62,11 @@ def _rebuild(db: GraphDB, vrows: dict, erows: dict, *,
         attrs = {}
         for a in vt.attrs:
             attrs[a.name] = (f[a.col] if a.kind == "f32" else i[a.col])
-        gid_of[(vtid, key)] = db.create_vertex(name, key, attrs, txn=t)
-        if len(t.create_v) > 200:
-            assert db.commit(t) == "COMMITTED"
-            t = db.create_transaction()
-    assert db.commit(t) == "COMMITTED"
+        v_ops.append(CreateVertex(name, key, attrs))
+        v_keys.append((vtid, key))
+    gid_of = dict(zip(v_keys, load(v_ops, 200)))
 
-    t = db.create_transaction()
+    e_ops = []
     for ekey, (val, ts) in sorted(erows.items()):
         if val == TOMBSTONE:
             continue
@@ -70,11 +77,10 @@ def _rebuild(db: GraphDB, vrows: dict, erows: dict, *,
             if drop_dangling:
                 continue                  # internal consistency repair
             raise ValueError(f"dangling edge {ekey} in consistent recovery")
-        t.create_e.append((s, d, int(et)))
-        if len(t.create_e) > 400:
-            assert db.commit(t) == "COMMITTED"
-            t = db.create_transaction()
-    assert db.commit(t) == "COMMITTED"
+        # endpoints were just validated against the recovered row set —
+        # the bulk-load fast path applies, like the original apply stream
+        e_ops.append(CreateEdge(s, d, e2name[int(et)], check=False))
+    load(e_ops, 400)
     db.run_compaction()
     db.run_index_compaction()
     return db
@@ -176,8 +182,16 @@ class FastRestartCache:
         db.il_count = s["il_count"].copy()
         db.xd_count = s["xd_count"].copy()
         db.replication_log = None
-        db.stats = {"commits": 0, "aborts": 0, "compactions": 0}
+        db.stats = {"commits": 0, "aborts": 0, "compactions": 0,
+                    "write_waves": 0, "bg_compactions": 0,
+                    "compaction_rebuilds": 0}
         db.active_query_ts = []
+        db.epochs = {"delete_e": 0, "delete_v": 0,
+                     "compact_edges": 0, "compact_index": 0}
+        db.task_queue = None
+        db.compaction_watermark = 0.5
+        db._bg_compaction_pending = False
+        db.backend = None
         return db
 
     def drop(self, name: str) -> None:

@@ -139,7 +139,7 @@ class ReplicationLog:
         self.db = None                       # backref set by GraphDB owner
         self.shipped_ts = 0                  # t_R candidate
 
-    # -- called transactionally with the commit (GraphDB.commit_many) --------
+    # -- called transactionally with each commit wave (writes.commit_wave) ---
     def append(self, ts: int, winners) -> None:
         assert self.db is not None, "attach with log.db = db"
         db = self.db

@@ -27,6 +27,7 @@ device, and inside ``shard_map`` each device sees exactly its local block.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
@@ -218,3 +219,27 @@ def gather_data(store: GraphStore, cfg: StoreConfig, gids, read_ts):
 def local_block(arr: jax.Array, shard: int, per_shard: int):
     """Host-side helper: slice one shard's block out of a flat array."""
     return arr[shard * per_shard:(shard + 1) * per_shard]
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def replay_log_tail(dst, src, w, n, *, cap: int):
+    """Copy each shard's log tail ``[w_s, n_s)`` from ``src`` onto ``dst``'s
+    prefix ``[0, n_s - w_s)``.  Flat shard-major ``(S*cap,)`` arrays.
+
+    The compaction-handoff primitive (§2.2 concurrent GC): ``dst`` is the
+    shadow store's freshly emptied delta log, ``src`` the live log, ``w``
+    the per-shard fill at shadow-build time and ``n`` the fill now.
+    Entries appended while the background build ran are replayed onto the
+    shadow so the merged store loses nothing; positions past the tail keep
+    ``dst``'s empty-log fill, preserving the prefix-fill invariant behind
+    ``planner.delta_window``.
+    """
+    S = w.shape[0]
+    OOB = jnp.int32(2**31 - 1)
+    k = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    base = (jnp.arange(S, dtype=jnp.int32) * cap)[:, None]
+    src_pos = w[:, None] + k
+    valid = src_pos < n[:, None]
+    vals = src[(base + jnp.where(valid, src_pos, 0)).reshape(-1)]
+    dst_rows = jnp.where(valid, base + k, OOB).reshape(-1)
+    return dst.at[dst_rows].set(vals, mode="drop")

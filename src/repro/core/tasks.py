@@ -89,6 +89,47 @@ def vacuum_task() -> Task:
     return Task("vacuum", run)
 
 
+def background_compaction_task(*, kinds=None, max_rebuilds: int = 4) -> Task:
+    """Two-phase threshold-triggered compaction (§2.2 concurrent GC, §3.3).
+
+    Pump 1 (*build*): fold the delta logs into compacted shadow CSR/index at
+    ``gc_ts`` — off the commit path; foreground reads and write waves keep
+    running against the live store.  Pump 2 (*handoff*): merge the shadow via
+    ``GraphDB.try_handoff``, which replays the delta tail appended in
+    between.  A raced structural mutation (edge/vertex delete, inline
+    compaction) invalidates the shadow → rebuild, up to ``max_rebuilds``;
+    after that fall back to inline stop-the-world compaction so progress is
+    guaranteed.  ``kinds=None`` re-reads the fill watermarks at build time.
+    """
+    def run(db, task):
+        st = task.state
+        if "kinds" not in st:
+            st["kinds"] = tuple(kinds) if kinds else tuple(db._kinds_needed())
+            st["rebuilds"] = 0
+        if not st["kinds"]:
+            db._bg_compaction_pending = False
+            return []
+        if "handle" not in st:
+            st["handle"] = db.begin_compaction(st["kinds"])
+            return [task]                     # handoff on a later quantum
+        res = db.try_handoff(st.pop("handle"))
+        st["kinds"] = tuple(k for k, ok in res.items() if not ok)
+        if not st["kinds"]:
+            db._bg_compaction_pending = False
+            return []
+        st["rebuilds"] += 1
+        db.stats["compaction_rebuilds"] += 1
+        if st["rebuilds"] >= max_rebuilds:
+            if "edges" in st["kinds"]:
+                db.run_compaction()
+            if "index" in st["kinds"]:
+                db.run_index_compaction()
+            db._bg_compaction_pending = False
+            return []
+        return [task]                         # rebuild the raced kinds
+    return Task("bg-compaction", run, priority=5)
+
+
 def delete_type_task(vtype: str, *, chunk: int = 64) -> Task:
     """Delete all vertices of a type, chunk by chunk, rescheduling itself
 
@@ -110,11 +151,19 @@ def delete_type_task(vtype: str, *, chunk: int = 64) -> Task:
                 break
         if not todo:
             return []
+        # stage each cascade in its own txn, commit the chunk as one wave;
+        # intra-batch losers (shared edges) stay live and retry next quantum
+        from repro.core.writes import DeleteVertex
+        txns = []
         for gid in todo:
+            t = db.create_transaction()
             try:
-                db.delete_vertex(gid)
+                db.write([DeleteVertex(gid)], txn=t)
             except ValueError:
-                pass
+                continue
+            txns.append(t)
+        if txns:
+            db.write(txns)
         return [task]       # reschedule until no vertices remain
     return Task(f"delete-type:{vtype}", run)
 

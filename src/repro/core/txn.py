@@ -150,20 +150,19 @@ def _csr_find(indptr, typ2d, nbr2d, sh, slot, etype, dst, cap_v):
     return jnp.where(found, lo, -1)
 
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def apply_batch(store: GraphStore, cfg: StoreConfig, ts,
-                # create vertices
-                cv_gid, cv_vtype, cv_key, cv_f, cv_i, cv_xpos,
-                # update vertices
-                uv_gid, uv_f, uv_i,
-                # delete vertices
-                dv_gid, dv_vtype, dv_key,
-                # create edges
-                ce_src, ce_dst, ce_type, ce_opos, ce_ipos,
-                # delete edges
-                de_src, de_dst, de_type,
-                # new per-shard log counts (host-computed)
-                new_dl_count, new_il_count, new_xd_count):
+def apply_batch_impl(store: GraphStore, cfg: StoreConfig, ts,
+                     # create vertices
+                     cv_gid, cv_vtype, cv_key, cv_f, cv_i, cv_xpos,
+                     # update vertices
+                     uv_gid, uv_f, uv_i,
+                     # delete vertices
+                     dv_gid, dv_vtype, dv_key,
+                     # create edges
+                     ce_src, ce_dst, ce_type, ce_opos, ce_ipos,
+                     # delete edges
+                     de_src, de_dst, de_type,
+                     # new per-shard log counts (host-computed)
+                     new_dl_count, new_il_count, new_xd_count):
     """Apply one validated commit batch.
 
     All vertex/edge-pool addressing is 2D (shard, local) so paper-scale
@@ -366,6 +365,16 @@ def apply_batch(store: GraphStore, cfg: StoreConfig, ts,
         il_delete=jnp.where(m_in, ts, store.il_delete),
     )
     return store
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def apply_batch(store: GraphStore, cfg: StoreConfig, ts, *ops):
+    """Jitted :func:`apply_batch_impl` at the fixed ``BatchCaps`` shapes.
+
+    The write planner (core/writes.py) instead jits ``apply_batch_impl``
+    per canonical op-shape bucket so small commits pay small scatters.
+    """
+    return apply_batch_impl(store, cfg, ts, *ops)
 
 
 def pad_i32(xs, cap, fill=-1):

@@ -4,9 +4,9 @@ The evaluation graph in the paper comes from a film knowledge base
 (3.7 B vertices, 6.2 B edges, ~220-byte payloads, heavy degree skew — some
 vertices exceed 10 M edges).  This generator reproduces its *shape* at a
 configurable scale: directors/actors/films/genres with Zipf-skewed degrees,
-loaded through the real transactional write path (create_vertex/create_edge
-commit batches), so benchmarks exercise the same code a production load
-would.
+loaded through the real transactional write path (``GraphDB.write`` batches
+of mutation-op records), so benchmarks exercise the same code a production
+load would.
 """
 from __future__ import annotations
 
@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.addressing import StoreConfig
 from repro.core.graphdb import GraphDB
+from repro.core.writes import CreateEdge, CreateVertex
 
 
 @dataclasses.dataclass
@@ -66,29 +67,23 @@ def build_film_kg(*, n_films: int = 200, n_actors: int = 300,
     f_keys = np.arange(100_000, 100_000 + n_films)
     g_keys = np.arange(500, 500 + n_genres)
 
-    dirs, acts, films, genres = [], [], [], []
-    t = db.create_transaction()
+    def load(ops, chunk):
+        """Commit op-record batches as implicit atomic writes, chunked to
+        stay under the commit batch caps; returns created gids in order."""
+        gids = []
+        for off in range(0, len(ops), chunk):
+            res = db.write(ops[off:off + chunk])
+            assert not res.failed
+            gids += res.gids
+        return gids
 
-    def maybe_flush(t):
-        if len(t.create_v) >= 200:      # stay under the commit batch caps
-            assert db.commit(t) == "COMMITTED"
-            return db.create_transaction()
-        return t
-
-    for k in d_keys:
-        dirs.append(db.create_vertex("director", int(k),
-                                     {"dob": int(rng.integers(1940, 1995))},
-                                     txn=t))
-        t = maybe_flush(t)
-    for k in a_keys:
-        acts.append(db.create_vertex("actor", int(k),
-                                     {"dob": int(rng.integers(1940, 2000))},
-                                     txn=t))
-        t = maybe_flush(t)
-    for k in g_keys:
-        genres.append(db.create_vertex("genre", int(k), txn=t))
-        t = maybe_flush(t)
-    assert db.commit(t) == "COMMITTED"
+    dirs = load([CreateVertex("director", int(k),
+                              {"dob": int(rng.integers(1940, 1995))})
+                 for k in d_keys], 200)
+    acts = load([CreateVertex("actor", int(k),
+                              {"dob": int(rng.integers(1940, 2000))})
+                 for k in a_keys], 200)
+    genres = load([CreateVertex("genre", int(k)) for k in g_keys], 200)
 
     # Zipf-skewed popularity: a few mega-actors, like the paper's skew
     pop = 1.0 / np.power(np.arange(1, n_actors + 1), zipf_a)
@@ -96,32 +91,24 @@ def build_film_kg(*, n_films: int = 200, n_actors: int = 300,
     dir_pop = 1.0 / np.power(np.arange(1, n_directors + 1), zipf_a)
     dir_pop /= dir_pop.sum()
 
-    t = db.create_transaction()
-    for i, k in enumerate(f_keys):
-        films.append(db.create_vertex(
-            "film", int(k),
-            {"gross": float(rng.uniform(1, 500)),
-             "year": int(rng.integers(1960, 2026)),
-             "genre": int(rng.integers(n_genres))}, txn=t))
-        if len(t.create_v) >= 200:
-            assert db.commit(t) == "COMMITTED"
-            t = db.create_transaction()
-    assert db.commit(t) == "COMMITTED"
+    films = load([CreateVertex(
+        "film", int(k),
+        {"gross": float(rng.uniform(1, 500)),
+         "year": int(rng.integers(1960, 2026)),
+         "genre": int(rng.integers(n_genres))}) for k in f_keys], 200)
 
-    t = db.create_transaction()
+    # bulk-load fast path (check=False): uniqueness is the loader's contract
+    e_ops = []
     for i, f in enumerate(films):
         d = int(rng.choice(n_directors, p=dir_pop))
-        db.create_edge(dirs[d], f, "film.director", txn=t, check=False)
-        db.create_edge(f, genres[int(rng.integers(n_genres))],
-                       "film.genre", txn=t, check=False)
+        e_ops.append(CreateEdge(dirs[d], f, "film.director", check=False))
+        e_ops.append(CreateEdge(f, genres[int(rng.integers(n_genres))],
+                                "film.genre", check=False))
         n_cast = int(rng.integers(*actors_per_film))
         for a in rng.choice(n_actors, size=n_cast, replace=False, p=pop):
-            db.create_edge(f, acts[int(a)], "film.actor", txn=t,
-                           check=False)
-        if len(t.create_e) >= 400:
-            assert db.commit(t) == "COMMITTED"
-            t = db.create_transaction()
-    assert db.commit(t) == "COMMITTED"
+            e_ops.append(CreateEdge(f, acts[int(a)], "film.actor",
+                                    check=False))
+    load(e_ops, 400)
     db.run_compaction()
     db.run_index_compaction()
     return FilmKG(db=db, n_directors=n_directors, n_actors=n_actors,

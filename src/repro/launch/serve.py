@@ -61,12 +61,16 @@ class A1Server:
     def __init__(self, db, *, caps: Optional[QueryCaps] = None,
                  page_size: int = 16, continuation_ttl: float = 60.0,
                  use_spmd: bool = False, mesh=None,
-                 budget: Optional[str] = None):
+                 budget: Optional[str] = None,
+                 write_batch: int = 16, write_deadline_ms: float = 5.0):
         self.db = db
         self.caps = caps or QueryCaps()
         self.page = page_size
         self.ttl = continuation_ttl
         self.tasks = TaskQueue(db)
+        # attach the queue so write waves can threshold-trigger background
+        # compaction (§2.2) instead of compacting on the commit path
+        db.task_queue = self.tasks
         self._continuations: dict[str, Continuation] = {}
         self._pending: list[str] = []       # tokens awaiting a refill fetch
         self.use_spmd = use_spmd
@@ -75,10 +79,19 @@ class A1Server:
         # serving-cap memory shape; overflow is owner-attributed fast-fail
         # and the hedged retry re-runs flagged queries as usual)
         self.budget = budget
+        # write admission: staged txns accumulate here and close into one
+        # fused mutation wave at max-batch-or-deadline
+        self.write_batch = write_batch
+        self.write_deadline_ms = write_deadline_ms
+        self._write_q: list[tuple] = []     # (wid, txn, staged gids)
+        self._write_results: dict[str, dict] = {}
+        self._wave_opened = 0.0
         self.latencies: dict[str, list[float]] = {}
         self.stats = {"queries": 0, "fastfails": 0, "hedged": 0,
                       "continuations": 0, "continuation_joins": 0,
                       "continuation_flushes": 0, "cursor_refills": 0,
+                      "write_waves": 0, "write_txns": 0,
+                      "write_aborts": 0, "write_rejects": 0,
                       "planner_cache_hit_rate": 0.0,
                       "peak_frontier_bytes_per_query": 0,
                       "peak_frontier_bytes_shared": 0}
@@ -93,6 +106,10 @@ class A1Server:
         continuation refills join the batch (at their own pinned
         snapshots, per-query ``read_ts`` vector) before it dispatches."""
         t0 = time.perf_counter()
+        # close a due mutation wave BEFORE pinning the read snapshot: readers
+        # then see the freshest committed state, and the pinned snapshot is
+        # never moved by writes admitted mid-flight (hedged retries included)
+        self._maybe_close_write_wave()
         ts0 = self.db.snapshot_ts() if read_ts is None else int(read_ts)
         self.db.active_query_ts.append(ts0)      # pin across run + hedge
         try:
@@ -375,6 +392,70 @@ class A1Server:
         for token in [t for t, c in self._continuations.items()
                       if now > c.expires]:
             self._drop(token)
+
+    # ------------------------------------------------------------------
+    # write admission (§3.4 grows its first write-side machinery)
+    # ------------------------------------------------------------------
+    def submit_write(self, ops) -> str:
+        """Admit one client write: a list of mutation-op records.
+
+        The ops stage into their own transaction at the admission snapshot
+        and queue for the next mutation wave, which closes at
+        ``write_batch`` transactions or ``write_deadline_ms`` — whichever
+        comes first (the deadline is serviced by query traffic via
+        :meth:`execute`, or by :meth:`flush_writes`).  Returns a write id;
+        poll :meth:`write_result` for the outcome.  Staging contract
+        violations (duplicate key, missing endpoint, ...) reject
+        immediately — the wave never sees them.
+        """
+        wid = uuid.uuid4().hex
+        t = self.db.create_transaction()
+        try:
+            staged = self.db.write(list(ops), txn=t)
+        except ValueError as e:
+            self.stats["write_rejects"] += 1
+            self._write_results[wid] = {"status": "ABORTED",
+                                        "reason": str(e), "gids": [], "ts": -1}
+            return wid
+        self._write_q.append((wid, t, staged.gids))
+        if len(self._write_q) == 1:
+            self._wave_opened = time.monotonic()
+        if len(self._write_q) >= self.write_batch:
+            self._close_write_wave()
+        return wid
+
+    def write_result(self, wid: str) -> Optional[dict]:
+        """Outcome of a submitted write: ``{status, reason, gids, ts}``, or
+        ``None`` while it is still queued for a wave."""
+        return self._write_results.pop(wid, None)
+
+    def flush_writes(self) -> int:
+        """Close the open mutation wave now (deadline expiry, shutdown)."""
+        return self._maybe_close_write_wave(force=True)
+
+    def _maybe_close_write_wave(self, force: bool = False) -> int:
+        if not self._write_q:
+            return 0
+        due = (time.monotonic() - self._wave_opened) * 1e3 \
+            >= self.write_deadline_ms
+        if force or due or len(self._write_q) >= self.write_batch:
+            return self._close_write_wave()
+        return 0
+
+    def _close_write_wave(self) -> int:
+        wave, self._write_q = self._write_q, []
+        res = self.db.write([t for _, t, _ in wave])
+        for i, (wid, _, gids) in enumerate(wave):
+            ok = res.statuses[i] == "COMMITTED"
+            self._write_results[wid] = {
+                "status": res.statuses[i], "reason": res.reasons[i],
+                "gids": gids if ok else [-1] * len(gids),
+                "ts": res.ts if ok else -1}
+            if not ok:
+                self.stats["write_aborts"] += 1
+        self.stats["write_waves"] += 1
+        self.stats["write_txns"] += len(wave)
+        return len(wave)
 
     # ------------------------------------------------------------------
     def enqueue_maintenance(self) -> None:

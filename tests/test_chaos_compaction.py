@@ -1,0 +1,230 @@
+"""Chaos suite: background MVCC compaction under concurrent traffic (§2.2).
+
+The contract being attacked: a pinned snapshot read returns the same rows
+before, during, and after a background compaction cycle — and always equals
+an *uncompacted replay* (a second DB that executed the identical write
+sequence and never compacted).  Structural mutations raced against an
+in-flight shadow build must force a rebuild, never a wrong handoff.
+
+The hypothesis sweep at the bottom drives random interleavings of write
+waves, task-queue pumps (build / handoff quanta), snapshot pins, and edge
+deletes — the serializability oracle for the two-phase handoff.
+"""
+import numpy as np
+import pytest
+
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.tasks import TaskQueue, background_compaction_task
+from repro.core.writes import CreateEdge, CreateVertex, DeleteEdge
+
+
+CFG = StoreConfig(n_shards=2, cap_v=128, cap_e=1024, cap_delta=64,
+                  cap_idx=256, cap_idx_delta=128, d_f32=1, d_i32=1)
+
+
+def chaos_db(*, tasks: bool):
+    db = GraphDB(CFG)
+    db.vertex_type("hub")
+    db.vertex_type("spoke")
+    db.edge_type("link")
+    if tasks:
+        db.task_queue = TaskQueue(db)
+    return db
+
+
+def twin_dbs():
+    """(db under test with a task queue, uncompacted replay twin)."""
+    return chaos_db(tasks=True), chaos_db(tasks=False)
+
+
+def both(dbs, ops):
+    outs = [db.write(list(ops)) for db in dbs]
+    assert not any(o.failed for o in outs)
+    assert len({db.clock for db in dbs}) == 1       # twins stay clock-locked
+    return outs[0].gids
+
+
+def edges_at(db, hub, ts=None):
+    return sorted(db.get_edges(hub, read_ts=ts))
+
+
+def test_pinned_reads_stable_across_bg_cycle():
+    db, ref = twin_dbs()
+    dbs = (db, ref)
+    hub = both(dbs, [CreateVertex("hub", 0)])[0]
+    spokes = both(dbs, [CreateVertex("spoke", 1 + i) for i in range(40)])
+    # hub's out-log crosses the 0.5 watermark (40 of cap_delta=64) -> the
+    # wave schedules the background task instead of compacting inline
+    both(dbs, [CreateEdge(hub, s, "link", check=False) for s in spokes])
+    assert db.task_queue.pending() == 1 and db._bg_compaction_pending
+    assert ref.stats["compactions"] == 0
+
+    ts0 = db.snapshot_ts()
+    db.active_query_ts.append(ts0)                  # reader pins the snapshot
+    read0 = edges_at(db, hub, ts0)
+    assert read0 == edges_at(ref, hub, ts0)
+
+    db.task_queue.pump(1)                           # phase 1: shadow build
+    assert edges_at(db, hub, ts0) == read0          # during: live store intact
+    extra = both(dbs, [CreateVertex("spoke", 100 + i) for i in range(5)])
+    both(dbs, [CreateEdge(hub, s, "link", check=False) for s in extra])
+    assert edges_at(db, hub, ts0) == read0          # tail doesn't leak into ts0
+
+    db.task_queue.pump(1)                           # phase 2: handoff + replay
+    assert db.stats["bg_compactions"] >= 1
+    assert db.stats["compactions"] == 0             # never went inline
+    assert int(db.dl_count.max()) == 5              # only the raced tail left
+    assert edges_at(db, hub, ts0) == read0 == edges_at(ref, hub, ts0)
+    assert edges_at(db, hub) == edges_at(ref, hub)  # current snapshot too
+    db.active_query_ts.remove(ts0)
+    assert edges_at(db, hub, ts0) == read0          # §2.2: ts0 <= build gc_ts
+
+
+def test_raced_delete_forces_rebuild():
+    db, ref = twin_dbs()
+    dbs = (db, ref)
+    hub = both(dbs, [CreateVertex("hub", 0)])[0]
+    spokes = both(dbs, [CreateVertex("spoke", 1 + i) for i in range(40)])
+    both(dbs, [CreateEdge(hub, s, "link", check=False) for s in spokes])
+    db.task_queue.pump(1)                           # build shadow
+    # structural race: a delete tombstones a CSR/log position the shadow
+    # already folded away -> the epoch guard must reject the handoff
+    both(dbs, [DeleteEdge(hub, spokes[0], "link")])
+    db.task_queue.pump(1)                           # handoff attempt -> rebuild
+    assert db.stats["compaction_rebuilds"] == 1
+    assert db.task_queue.pending() == 1             # rescheduled itself
+    db.task_queue.pump(2)                           # rebuild + clean handoff
+    assert db.stats["bg_compactions"] == 1
+    assert not db._bg_compaction_pending
+    assert edges_at(db, hub) == edges_at(ref, hub)
+    assert len(edges_at(db, hub)) == 39
+
+
+def test_rebuild_cap_falls_back_inline():
+    db = chaos_db(tasks=True)
+    hub = db.write([CreateVertex("hub", 0)]).gids[0]
+    spokes = db.write([CreateVertex("spoke", 1 + i)
+                       for i in range(10)]).gids
+    db.write([CreateEdge(hub, s, "link", check=False) for s in spokes])
+    expect = edges_at(db, hub)
+    tq = db.task_queue
+    db._bg_compaction_pending = True
+    tq.enqueue(background_compaction_task(kinds=("edges",), max_rebuilds=1))
+    tq.pump(1)                                      # build
+    db.write([DeleteEdge(hub, spokes[0], "link")])  # race it
+    tq.pump(1)                                      # handoff fails -> at cap
+    # progress guarantee: fell back to stop-the-world inline compaction
+    assert db.stats["compactions"] == 1
+    assert not db._bg_compaction_pending and tq.pending() == 0
+    assert int(db.dl_count.max()) == 0
+    assert edges_at(db, hub) == [e for e in expect if e[0] != spokes[0]]
+
+
+def test_index_compaction_handoff_with_tail():
+    db, ref = twin_dbs()
+    dbs = (db, ref)
+    db.compaction_watermark = 2.0                   # keep edges out of the way
+    ref_gids = both(dbs, [CreateVertex("spoke", i) for i in range(30)])
+    handle = db.begin_compaction(("index",))
+    late = both(dbs, [CreateVertex("spoke", 100 + i) for i in range(4)])
+    assert db.try_handoff(handle) == {"index": True}
+    assert int(db.xd_count.sum()) == 4              # only the late tail
+    for i, g in enumerate(ref_gids):
+        got, found = db.lookup_vertex("spoke", i)
+        assert found and got == g
+    for i, g in enumerate(late):
+        got, found = db.lookup_vertex("spoke", 100 + i)
+        assert found and got == g
+    _, found = db.lookup_vertex("spoke", 999)
+    assert not found
+
+
+def test_raced_vertex_delete_invalidates_index_shadow():
+    db = chaos_db(tasks=True)
+    gids = db.write([CreateVertex("spoke", i) for i in range(10)]).gids
+    handle = db.begin_compaction(("index",))
+    from repro.core.writes import DeleteVertex
+    db.write([DeleteVertex(gids[0])])               # bumps the delete_v epoch
+    assert db.try_handoff(handle) == {"index": False}
+    _, found = db.lookup_vertex("spoke", 0)
+    assert not found                                # live index untouched
+
+
+# ---------------------------------------------------------------------------
+# hypothesis interleaving sweep
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # CI installs it; local runs skip
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    actions = st.lists(
+        st.sampled_from(["write", "delete", "pump", "pin"]),
+        min_size=4, max_size=24)
+else:                                     # keep the decorators importable
+    def given(**kw):
+        return lambda fn: fn
+
+    def settings(**kw):
+        return lambda fn: fn
+    actions = None
+
+
+def _run_interleaving(acts):
+    db, ref = twin_dbs()
+    dbs = (db, ref)
+    db.compaction_watermark = 0.05                  # trigger early and often
+    hub = both(dbs, [CreateVertex("hub", 0)])[0]
+    nkey, alive, pins = 1, [], []
+    for act in acts:
+        if act == "write":
+            s = both(dbs, [CreateVertex("spoke", nkey)])[0]
+            both(dbs, [CreateEdge(hub, s, "link", check=False)])
+            alive.append(s)
+            nkey += 1
+        elif act == "delete" and alive:
+            both(dbs, [DeleteEdge(hub, alive.pop(0), "link")])
+        elif act == "pump":
+            db.task_queue.pump(1)
+        elif act == "pin":
+            ts = db.snapshot_ts()
+            assert ts == ref.snapshot_ts()
+            db.active_query_ts.append(ts)
+            pins.append((ts, edges_at(ref, hub, ts)))
+        # invariant after every step: current snapshots agree
+        assert edges_at(db, hub) == edges_at(ref, hub)
+    db.task_queue.drain()
+    assert edges_at(db, hub) == edges_at(ref, hub)
+    # every pinned snapshot still reads exactly the uncompacted replay
+    for ts, expect in pins:
+        assert edges_at(db, hub, ts) == expect
+        assert edges_at(ref, hub, ts) == expect
+
+
+# hand-picked adversarial interleavings: pins straddling both compaction
+# phases, deletes racing an in-flight shadow, back-to-back cycles
+FIXED_SCHEDULES = [
+    ["write"] * 4 + ["pin", "pump", "write", "pin", "pump", "pin"],
+    ["write"] * 5 + ["pump", "delete", "pump", "pump", "pin", "write"],
+    ["write", "pin", "write", "pump", "delete", "pin", "pump",
+     "write", "pump", "pump", "pin"],
+    ["write"] * 6 + ["pin", "pump", "delete", "delete", "pump",
+                     "pump", "pump", "write", "pin"],
+]
+
+
+@pytest.mark.parametrize("acts", FIXED_SCHEDULES)
+def test_interleaving_fixed_schedules(acts):
+    _run_interleaving(acts)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="interleaving sweep needs hypothesis (CI has it)")
+@settings(max_examples=10, deadline=None)
+@given(acts=actions)
+def test_interleaved_waves_pumps_and_pins(acts):
+    _run_interleaving(acts)

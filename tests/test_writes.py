@@ -1,0 +1,352 @@
+"""The unified write path: ``GraphDB.write``, mutation waves, shims, serving.
+
+Pins the PR's API contract:
+
+* typed mutation-op records + positional ``WriteResult`` outcomes;
+* batched ``write([t1..tn])`` bit-identical to sequential ``commit()``
+  (raw store arrays when chunking matches, logical state always — checked
+  under both read backends, ref and pallas-interpret);
+* ``commit``/``commit_many`` DeprecationWarning shims stay equivalent;
+* the apply-program cache reuses traces on repeated wave shapes;
+* the inline-compaction backstop counts ``delete_e`` entries;
+* the serving loop's write-admission queue (max-batch-or-deadline).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import writes
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.txn import BatchCaps
+from repro.core.writes import (CreateEdge, CreateVertex, DeleteEdge,
+                               DeleteVertex, UpdateVertex)
+
+
+def small_db(**kw):
+    cfg = StoreConfig(n_shards=4, cap_v=64, cap_e=512, cap_delta=128,
+                      cap_idx=128, cap_idx_delta=64, d_f32=2, d_i32=2, **kw)
+    db = GraphDB(cfg)
+    db.vertex_type("actor", f_attrs=("rating",), i_attrs=("dob",))
+    db.vertex_type("film", f_attrs=("gross",), i_attrs=("year",))
+    db.edge_type("film.actor")
+    return db
+
+
+def store_equal(a: GraphDB, b: GraphDB) -> bool:
+    la, lb = jax.tree.leaves(a.store), jax.tree.leaves(b.store)
+    return (len(la) == len(lb)
+            and all(np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(la, lb))
+            and a.clock == b.clock
+            and np.array_equal(a.dl_count, b.dl_count)
+            and np.array_equal(a.il_count, b.il_count)
+            and np.array_equal(a.xd_count, b.xd_count))
+
+
+# ---------------------------------------------------------------------------
+# op records + WriteResult
+# ---------------------------------------------------------------------------
+
+def test_op_record_crud_roundtrip():
+    db = small_db()
+    res = db.write([CreateVertex("actor", 1, {"rating": 4.5, "dob": 1956}),
+                    CreateVertex("film", 2, {"gross": 100.0, "year": 1998})])
+    assert res.statuses == ["COMMITTED", "COMMITTED"]
+    assert not res.failed and res.ts == db.clock
+    a, f = res.gids
+    assert a >= 0 and f >= 0
+    assert db.get_vertex("actor", 1)["gid"] == a
+
+    res = db.write([CreateEdge(f, a, "film.actor"),
+                    UpdateVertex(a, "actor", {"rating": 9.0})])
+    assert res.gids == [-1, -1]           # only CreateVertex allocates
+    assert db.get_edges(f) == [(a, 0)]
+    assert db.get_vertex("actor", 1)["rating"] == 9.0
+
+    res = db.write([DeleteEdge(f, a, "film.actor")])
+    assert res.statuses == ["COMMITTED"]
+    assert db.get_edges(f) == []
+
+    db.write([DeleteVertex(a)])
+    _, found = db.lookup_vertex("actor", 1)
+    assert not found
+
+
+def test_write_staging_into_open_txn():
+    db = small_db()
+    t = db.create_transaction()
+    res = db.write([CreateVertex("actor", 1), CreateVertex("film", 2)], txn=t)
+    assert res.statuses == ["STAGED", "STAGED"] and res.ts == -1
+    a, f = res.gids
+    db.write([CreateEdge(f, a, "film.actor", check=False)], txn=t)
+    # nothing visible until the wave lands
+    assert db.get_vertex("actor", 1) is None
+    wave = db.write([t])
+    assert wave.statuses == ["COMMITTED"]
+    assert db.get_edges(f) == [(a, 0)]
+
+
+def test_write_argument_contract():
+    db = small_db()
+    with pytest.raises(ValueError):
+        db.write([])
+    t = db.create_transaction()
+    with pytest.raises(TypeError):
+        db.write([t, CreateVertex("actor", 1)])      # no mixing
+    with pytest.raises(ValueError):
+        db.write([t], txn=t)                          # txn= is for records
+    with pytest.raises(TypeError):
+        db.write([{"not": "an op"}])
+    db.write([CreateVertex("actor", 1)])
+    with pytest.raises(ValueError):                   # staging contract
+        db.write([CreateVertex("actor", 1)])
+    with pytest.raises(ValueError):                   # missing endpoint
+        db.write([CreateEdge(9999, 9998, "film.actor")])
+
+
+def test_stale_read_abort_reason():
+    db = small_db()
+    a = db.create_vertex("actor", 1)
+    t = db.create_transaction()
+    db.write([UpdateVertex(a, "actor", {"rating": 5.0})], txn=t)
+    db.write([UpdateVertex(a, "actor", {"rating": 7.0})])     # moves the clock
+    res = db.write([t])
+    assert res.failed and res.statuses == ["ABORTED"]
+    assert res.reasons[0] == "stale read (OCC validation)"
+    assert db.get_vertex("actor", 1)["rating"] == 7.0
+
+
+def test_intra_batch_conflict_reasons():
+    db = small_db()
+    a = db.create_vertex("actor", 1)
+    f = db.create_vertex("film", 2)
+    t1, t2, t3 = (db.create_transaction() for _ in range(3))
+    db.write([UpdateVertex(a, "actor", {"rating": 1.0})], txn=t1)
+    db.write([UpdateVertex(a, "actor", {"rating": 2.0})], txn=t2)
+    # t3's endpoint check *reads* vertex a, which the winner t1 wrote
+    db.write([CreateEdge(f, a, "film.actor")], txn=t3)
+    res = db.write([t1, t2, t3])
+    assert res.statuses == ["COMMITTED", "ABORTED", "ABORTED"]
+    assert res.reasons[1] == "intra-batch write-write conflict (first wins)"
+    assert res.reasons[2] == "intra-batch read-write conflict (first wins)"
+    assert db.get_vertex("actor", 1)["rating"] == 1.0     # first won
+    assert db.get_edges(f) == []
+
+
+# ---------------------------------------------------------------------------
+# batched wave == sequential commit
+# ---------------------------------------------------------------------------
+
+def _stage_disjoint_txns(db):
+    """4 base actors, then 4 disjoint txns: update(base_i) + create film."""
+    base = db.write([CreateVertex("actor", i, {"rating": float(i)})
+                     for i in range(4)]).gids
+    txns = []
+    for i in range(4):
+        t = db.create_transaction()
+        db.write([UpdateVertex(base[i], "actor", {"rating": 50.0 + i}),
+                  CreateVertex("film", 100 + i, {"gross": 1.0 * i})], txn=t)
+        txns.append(t)
+    return txns
+
+
+def test_wave_bit_identical_to_sequential_commit():
+    """With chunk-per-txn caps the wave commits at the same per-txn
+    timestamps as sequential ``commit()`` — raw store arrays must match."""
+    db1, db2 = small_db(), small_db()
+    txns1 = _stage_disjoint_txns(db1)
+    txns2 = _stage_disjoint_txns(db2)
+    caps = BatchCaps(create_v=1, update_v=1)
+    res = db1.write(txns1, caps=caps)
+    assert res.statuses == ["COMMITTED"] * 4
+    for t in txns2:
+        assert db2.write([t]).statuses == ["COMMITTED"]
+    assert store_equal(db1, db2)
+
+
+def test_shims_bit_identical_to_write():
+    db1, db2 = small_db(), small_db()
+    txns1 = _stage_disjoint_txns(db1)
+    txns2 = _stage_disjoint_txns(db2)
+    with pytest.warns(DeprecationWarning):
+        sts = db1.commit_many(txns1)
+    assert sts == ["COMMITTED"] * 4
+    assert db2.write(txns2, caps=db2.caps).statuses == sts
+    assert store_equal(db1, db2)
+    with pytest.warns(DeprecationWarning):
+        assert db1.commit_many([]) == []
+    t1, t2 = db1.create_transaction(), db2.create_transaction()
+    db1.write([CreateVertex("actor", 9)], txn=t1)
+    db2.write([CreateVertex("actor", 9)], txn=t2)
+    with pytest.warns(DeprecationWarning):
+        assert db1.commit(t1) == "COMMITTED"
+    assert db2.write([t2]).statuses == ["COMMITTED"]
+    assert store_equal(db1, db2)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_wave_logical_parity_across_backends(backend):
+    """One fused wave vs one-op-at-a-time: timestamps differ (chunking),
+    logical state and query answers must not — on both read backends."""
+    ops = ([CreateVertex("film", 1, {"gross": 9.0})]
+           + [CreateVertex("actor", 10 + i, {"rating": float(i)})
+              for i in range(6)])
+    db1, db2 = small_db(), small_db()
+    g1 = db1.write(ops).gids
+    g2 = [db2.write([op]).gids[0] for op in ops]
+    e1 = [CreateEdge(g1[0], a, "film.actor") for a in g1[1:]]
+    e2 = [CreateEdge(g2[0], a, "film.actor") for a in g2[1:]]
+    db1.write(e1 + [DeleteEdge(g1[0], g1[1], "film.actor")])
+    for op in e2:
+        db2.write([op])
+    db2.write([DeleteEdge(g2[0], g2[1], "film.actor")])
+    assert g1 == g2
+    assert sorted(db1.get_edges(g1[0])) == sorted(db2.get_edges(g2[0]))
+    q = [{"type": "film", "id": 1,
+          "_out_edge": {"type": "film.actor",
+                        "_target": {"type": "actor", "select": "count"}}}]
+    c1 = int(db1.query(q, backend=backend).counts[0])
+    c2 = int(db2.query(q, backend=backend).counts[0])
+    assert c1 == c2 == 5
+
+
+# ---------------------------------------------------------------------------
+# program cache + backstop
+# ---------------------------------------------------------------------------
+
+def test_apply_program_cache_reuses_trace():
+    db = small_db()
+    a = db.create_vertex("actor", 1)
+    b = db.create_vertex("actor", 2)
+
+    def wave(r):
+        t1, t2 = db.create_transaction(), db.create_transaction()
+        db.write([UpdateVertex(a, "actor", {"rating": r})], txn=t1)
+        db.write([UpdateVertex(b, "actor", {"rating": r + 1})], txn=t2)
+        assert not db.write([t1, t2]).failed
+
+    wave(1.0)
+    h0, m0 = writes.CACHE_STATS["hits"], writes.CACHE_STATS["misses"]
+    wave(3.0)                     # same shape bucket -> cached programs
+    assert writes.CACHE_STATS["misses"] == m0
+    assert writes.CACHE_STATS["hits"] >= h0 + 2   # validate + apply
+
+
+def test_backstop_counts_delete_e():
+    """A delete-heavy wave must trigger the inline fold *before* applying:
+    tombstones reclaim space only at compaction, so the overflow check
+    counts them against the remaining log headroom."""
+    cfg = StoreConfig(n_shards=2, cap_v=64, cap_e=256, cap_delta=16,
+                      cap_idx=128, cap_idx_delta=64, d_f32=1, d_i32=1)
+    db = GraphDB(cfg)
+    db.vertex_type("film")
+    db.vertex_type("actor")
+    db.edge_type("film.actor")
+    f = db.write([CreateVertex("film", 1)]).gids[0]
+    acts = db.write([CreateVertex("actor", 10 + i)
+                     for i in range(12)]).gids
+    db.write([CreateEdge(f, a, "film.actor", check=False) for a in acts])
+    assert int(db.dl_count.max()) == 12       # all on f's out-log shard
+    assert db.stats["compactions"] == 0
+    db.write([DeleteEdge(f, a, "film.actor") for a in acts[:6]])
+    # 12 + 6 > cap_delta=16 -> the wave folded the log before applying
+    assert db.stats["compactions"] >= 1
+    assert int(db.dl_count.max()) == 0        # deletes append no fresh slots
+    assert sorted(db.get_edges(f)) == sorted((a, 0) for a in acts[6:])
+
+
+# ---------------------------------------------------------------------------
+# write-path wrappers stay exact
+# ---------------------------------------------------------------------------
+
+def test_wrappers_are_thin_shims_over_records():
+    db1, db2 = small_db(), small_db()
+    a1 = db1.create_vertex("actor", 1, {"rating": 2.0})
+    f1 = db1.create_vertex("film", 2)
+    db1.create_edge(f1, a1, "film.actor")
+    db1.update_vertex(a1, "actor", {"rating": 3.0})
+    db1.delete_edge(f1, a1, "film.actor")
+    db1.delete_vertex(a1)
+    a2 = db2.write([CreateVertex("actor", 1, {"rating": 2.0})]).gids[0]
+    f2 = db2.write([CreateVertex("film", 2)]).gids[0]
+    db2.write([CreateEdge(f2, a2, "film.actor")])
+    db2.write([UpdateVertex(a2, "actor", {"rating": 3.0})])
+    db2.write([DeleteEdge(f2, a2, "film.actor")])
+    db2.write([DeleteVertex(a2)])
+    assert (a1, f1) == (a2, f2)
+    assert store_equal(db1, db2)
+
+
+# ---------------------------------------------------------------------------
+# serving: the write-admission queue (§3.4)
+# ---------------------------------------------------------------------------
+
+def _serve_fixture(**kw):
+    from repro.launch.serve import A1Server
+    db = small_db()
+    f = db.create_vertex("film", 1)
+    a = db.create_vertex("actor", 2)
+    db.create_edge(f, a, "film.actor")
+    return A1Server(db, **kw), db, f, a
+
+
+COUNT_Q = {"type": "film", "id": 1,
+           "_out_edge": {"type": "film.actor",
+                         "_target": {"type": "actor", "select": "count"}}}
+
+
+def test_serve_wave_closes_at_max_batch():
+    server, db, f, a = _serve_fixture(write_batch=2, write_deadline_ms=1e9)
+    w1 = server.submit_write([UpdateVertex(a, "actor", {"rating": 5.0})])
+    assert server.write_result(w1) is None          # queued, wave still open
+    w2 = server.submit_write([CreateVertex("actor", 3)])
+    r1, r2 = server.write_result(w1), server.write_result(w2)
+    assert r1["status"] == r2["status"] == "COMMITTED"
+    assert r2["gids"][0] >= 0 and r1["ts"] == db.clock
+    assert server.stats["write_waves"] == 1
+    assert server.stats["write_txns"] == 2
+    assert db.get_vertex("actor", 2)["rating"] == 5.0
+
+
+def test_serve_wave_closes_on_deadline_via_execute():
+    server, db, f, a = _serve_fixture(write_batch=100, write_deadline_ms=0.0)
+    b = db.create_vertex("actor", 3)
+    wid = server.submit_write([CreateEdge(f, b, "film.actor")])
+    # the query batch services the due deadline BEFORE pinning its snapshot,
+    # so the result reflects the admitted write
+    res = server.execute([COUNT_Q])
+    assert int(res.counts[0]) == 2
+    assert server.write_result(wid)["status"] == "COMMITTED"
+
+
+def test_serve_flush_and_snapshot_isolation():
+    server, db, f, a = _serve_fixture(write_batch=100, write_deadline_ms=1e9)
+    ts0 = db.snapshot_ts()
+    server.submit_write([UpdateVertex(a, "actor", {"rating": 9.0})])
+    # wave open: not yet visible anywhere
+    assert db.get_vertex("actor", 2).get("rating", 0.0) != 9.0
+    assert server.flush_writes() == 1
+    assert db.get_vertex("actor", 2)["rating"] == 9.0
+    f_old, _ = db._read_data_host(a, ts0)           # pinned snapshot intact
+    assert f_old[0] != 9.0
+
+
+def test_serve_staging_reject_is_immediate():
+    server, db, f, a = _serve_fixture()
+    wid = server.submit_write([CreateVertex("actor", 2)])   # duplicate key
+    res = server.write_result(wid)
+    assert res["status"] == "ABORTED" and "already exists" in res["reason"]
+    assert res["gids"] == [] and server.stats["write_rejects"] == 1
+    assert server.stats["write_waves"] == 0         # the wave never saw it
+
+
+def test_serve_intra_wave_conflict_reported():
+    server, db, f, a = _serve_fixture(write_batch=2, write_deadline_ms=1e9)
+    w1 = server.submit_write([UpdateVertex(a, "actor", {"rating": 1.0})])
+    w2 = server.submit_write([UpdateVertex(a, "actor", {"rating": 2.0})])
+    assert server.write_result(w1)["status"] == "COMMITTED"
+    r2 = server.write_result(w2)
+    assert r2["status"] == "ABORTED" and r2["gids"] == [-1]
+    assert "first wins" in r2["reason"]
+    assert server.stats["write_aborts"] == 1
