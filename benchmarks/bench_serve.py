@@ -1,0 +1,211 @@
+"""Serving-tier benchmark: open-loop overload + §4/§5.3 recovery.
+
+Two claims, each with rows and an asserted gate:
+
+* **overload safety** — a closed calibration loop measures the sustainable
+  wave throughput, then open-loop arrivals are replayed at 1x and 2x that
+  rate.  2x is typically *absorbed*: bigger admission waves amortize the
+  fixed per-wave cost, so capacity grows with load (that IS the overload
+  story's first line of defense).  A third run escalates the rate until
+  the shed watermark trips — configured *below* the wave size there,
+  because the synchronous wave close bounds the queue at ``read_batch``
+  (a production watermark sheds what the next wave cannot drain, instead
+  of queueing it).  Gates (asserted, not just reported): goodput at 2x
+  and at saturation >= 0.8x the 1x goodput, shed responses are
+  sub-millisecond at the median, and **every** submitted request id
+  terminates in a stored result;
+
+* **recovery** — §4 consistent recovery (replay the versioned tables
+  through the transactional write path) vs §5.3 fast restart (re-attach
+  process-external regions): the wall-time gap is the paper's
+  order-of-magnitude restart story (``recovery_consistent`` vs
+  ``recovery_fast_restart``).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.query.executor import QueryCaps
+from repro.launch.serve import A1Server
+
+N_HUB, DEG = 8, 12
+CAPS = QueryCaps(frontier=64, expand=256, results=8)
+
+
+def _db():
+    cfg = StoreConfig(n_shards=4, cap_v=2048, cap_e=16384, cap_delta=256,
+                      cap_idx=4096, cap_idx_delta=2048, d_f32=2, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("hub")
+    db.vertex_type("spoke")
+    db.edge_type("link")
+    hubs = [db.create_vertex("hub", i) for i in range(N_HUB)]
+    spokes = [db.create_vertex("spoke", 1000 + k)
+              for k in range(N_HUB * DEG)]
+    k = 0
+    for h in hubs:                       # one wave per hub: modest txn sizes
+        t = db.create_transaction()
+        for _ in range(DEG):
+            db.create_edge(h, spokes[k], "link", txn=t)
+            k += 1
+        assert db.commit(t) == "COMMITTED"
+    db.run_compaction()
+    return db
+
+
+def _doc(i):
+    return {"type": "hub", "id": i % N_HUB,
+            "_out_edge": {"type": "link",
+                          "_target": {"type": "spoke", "select": "count"}}}
+
+
+def _server(db, read_batch=8, watermark=None):
+    return A1Server(db, caps=CAPS, read_batch=read_batch,
+                    read_deadline_ms=2.0,
+                    shed_watermark=watermark or 2 * read_batch)
+
+
+def _warmup(db, read_batch):
+    """Trace every wave size the admission tier can close (1..read_batch)
+    so the timed loops measure dispatch, not jit tracing."""
+    srv = _server(db, read_batch)
+    for q in range(1, read_batch + 1):
+        srv.execute([_doc(i) for i in range(q)], qclass="warmup")
+
+
+def _calibrate(db, read_batch, waves=12):
+    """Closed loop: full waves back to back -> sustainable QPS."""
+    srv = _server(db, read_batch)
+    t0 = time.perf_counter()
+    for w in range(waves):
+        for i in range(read_batch):
+            srv.submit_query(_doc(w * read_batch + i))
+        srv.flush_queries()
+    wall = time.perf_counter() - t0
+    return waves * read_batch / wall
+
+
+def _open_loop(db, read_batch, rate_qps, n_req, watermark=None):
+    """Open-loop arrivals at ``rate_qps``; the server sheds what it must.
+
+    Returns per-run metrics; asserts the no-silent-termination gate."""
+    srv = _server(db, read_batch, watermark)
+    submit_dt = {}
+    t0 = time.perf_counter()
+    next_t = t0
+    i = 0
+    while i < n_req:
+        now = time.perf_counter()
+        if now >= next_t:
+            s0 = time.perf_counter()
+            qid = srv.submit_query(_doc(i))
+            submit_dt[qid] = time.perf_counter() - s0
+            next_t += 1.0 / rate_qps
+            i += 1
+        # pump every iteration, not just when idle: the deadline clock must
+        # advance even while a burst of overdue arrivals is being admitted
+        srv.pump()
+    srv.flush_queries()
+    wall = time.perf_counter() - t0
+    rows = {q: srv.query_result(q) for q in submit_dt}
+    # the overload contract: no admitted request terminates silently
+    assert all(r is not None for r in rows.values())
+    assert srv.stats["admitted"] == srv.stats["served"]
+    ok = sum(r["status"] == "OK" for r in rows.values())
+    shed = [q for q, r in rows.items() if r["status"] == "SHED"]
+    lat = np.asarray(srv.latencies.get("q", [0.0])) * 1e3
+    shed_ms = (float(np.median([submit_dt[q] for q in shed])) * 1e3
+               if shed else 0.0)
+    return {"goodput": ok / wall, "ok": ok, "shed": len(shed),
+            "shed_rate": len(shed) / n_req, "shed_p50_ms": shed_ms,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99))}
+
+
+def _bench_overload(smoke):
+    db = _db()
+    B = 8
+    _warmup(db, B)
+    qps = _calibrate(db, B)
+    n = 300 if smoke else 1200
+    r1 = _open_loop(db, B, qps, n)
+    r2 = _open_loop(db, B, 2 * qps, n)
+    emit("serve_open_1x", 1e6 / r1["goodput"],
+         f"rate={qps:.0f}qps;p50_ms={r1['p50_ms']:.2f};"
+         f"p99_ms={r1['p99_ms']:.2f};shed_rate={r1['shed_rate']:.3f}")
+    emit("serve_open_2x", 1e6 / r2["goodput"],
+         f"rate={2 * qps:.0f}qps;p50_ms={r2['p50_ms']:.2f};"
+         f"p99_ms={r2['p99_ms']:.2f};shed_rate={r2['shed_rate']:.3f};"
+         f"shed_p50_ms={r2['shed_p50_ms']:.3f};"
+         f"goodput_ratio={r2['goodput'] / r1['goodput']:.2f}")
+    # the overload gate: shedding preserves goodput instead of collapsing
+    # the wave pipeline under queue growth
+    assert r2["goodput"] >= 0.8 * r1["goodput"], (r1, r2)
+    if r2["shed"]:
+        assert r2["shed_p50_ms"] < 1.0, r2   # sheds are immediate, not queued
+    # 2x is often still absorbed — bigger admission waves amortize the fixed
+    # per-wave cost, so capacity grows with load.  The synchronous wave
+    # close bounds the queue at read_batch, so for the saturation run the
+    # watermark sits BELOW the wave size (shed what the next wave cannot
+    # drain).  Escalate until it actually trips, then gate THAT regime:
+    # goodput holds and shed responses are immediate.
+    mult, rs = 4, r2
+    while rs["shed"] == 0 and mult <= 32:
+        rs = _open_loop(db, B, mult * qps, n, watermark=B - 1)
+        mult *= 2
+    emit("serve_open_sat", 1e6 / rs["goodput"],
+         f"rate={mult // 2 * qps:.0f}qps;p50_ms={rs['p50_ms']:.2f};"
+         f"p99_ms={rs['p99_ms']:.2f};shed_rate={rs['shed_rate']:.3f};"
+         f"shed_p50_ms={rs['shed_p50_ms']:.3f};"
+         f"goodput_ratio={rs['goodput'] / r1['goodput']:.2f}")
+    assert rs["shed"] > 0, rs                # saturation was actually reached
+    assert rs["shed_p50_ms"] < 1.0, rs       # sheds are immediate, not queued
+    assert rs["goodput"] >= 0.8 * r1["goodput"], (r1, rs)
+
+
+# ---------------------------------------------------------------------------
+# §4 consistent recovery vs §5.3 fast restart
+# ---------------------------------------------------------------------------
+
+def _bench_recovery(n=48):
+    from repro.core.recovery import FastRestartCache, consistent_recover
+    from repro.core.replication import ObjectStore, ReplicationLog
+    cfg = StoreConfig(n_shards=4, cap_v=512, cap_e=4096, cap_delta=256,
+                      cap_idx=1024, cap_idx_delta=512, d_f32=2, d_i32=2)
+    store = ObjectStore()
+    log = ReplicationLog(store)
+    db = GraphDB(cfg, replication_log=log)
+    log.db = db
+    db.vertex_type("node", f_attrs=("w",))
+    db.edge_type("link")
+    # vertices first (edge staging validates endpoints against committed
+    # state), then the edges as one transactional wave
+    vs = [db.create_vertex("node", i, {"w": float(i)}) for i in range(n)]
+    t = db.create_transaction()
+    for i in range(1, n):
+        db.create_edge(vs[0] if i % 3 else vs[i - 1], vs[i], "link", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    assert log.lag() == 0
+
+    t_cons, _, _ = timeit(lambda: consistent_recover(store, db, cfg),
+                          warmup=1, iters=2)
+    cache = FastRestartCache()
+    cache.hold("proc0", db)
+    t_fast, _, _ = timeit(lambda: cache.restart("proc0"), warmup=1, iters=2)
+    r = cache.restart("proc0")           # semantic spot-check, not just time
+    assert r is not None and r.get_vertex("node", n - 1)["w"] == float(n - 1)
+    emit("recovery_consistent", t_cons * 1e6, f"n={n};objectstore_replay")
+    emit("recovery_fast_restart", t_fast * 1e6,
+         f"n={n};region_reattach;speedup={t_cons / t_fast:.0f}x")
+
+
+def run(smoke: bool = False):
+    _bench_overload(smoke)
+    _bench_recovery()
+
+
+if __name__ == "__main__":
+    run(smoke=True)

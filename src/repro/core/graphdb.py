@@ -78,6 +78,7 @@ class GraphDB:
         self.task_queue = None              # attached by the serving tier
         self.compaction_watermark = 0.5     # delta fill fraction that triggers
         self._bg_compaction_pending = False
+        self.faults = None                  # FaultInjector (chaos tests only)
 
     # ------------------------------------------------------------------
     # schema (control plane; each call = its own implicit txn, §3)

@@ -100,9 +100,14 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
     under ``mesh=`` raises (serve's refills fall back to the pow2 growing
     window there).
     """
+    from repro.core import faults as faults_mod
     from repro.core.query import planner
     if not queries:
         raise ValueError("execute() needs at least one query")
+    # chaos site: a wave-execution crash ("raise") or straggler ("stall").
+    # Raising here — before any snapshot is pinned — models a worker dying
+    # mid-wave; the serving tier must retry or abort with attribution.
+    faults_mod.check(db, "engine.wave")
     if budget not in (None, "per-query", "shared"):
         raise ValueError(f"budget must be 'per-query' or 'shared', "
                          f"got {budget!r}")

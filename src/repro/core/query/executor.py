@@ -60,6 +60,14 @@ class QueryResult:
                                              # (set by the multi-query planner;
                                              # plain run_queries flags the
                                              # whole batch)
+    shared_ovf_q: Optional[np.ndarray] = None  # (Q,) subset of failed_q that
+                                             # was caused by the *shared* pool
+                                             # (budget="shared" truncation /
+                                             # bucket drops) rather than the
+                                             # query's own per-unit caps —
+                                             # serving re-dispatches these
+                                             # per-query instead of re-entering
+                                             # the saturated pool
 
 
 # ---------------------------------------------------------------------------

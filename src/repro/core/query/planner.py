@@ -368,6 +368,12 @@ def _pow2ceil(n: int) -> int:
 # the same way CACHE_STATS is (serve /stats and bench metadata stamp it)
 FRONTIER_STATS = {"per_query_peak_bytes": 0, "shared_peak_bytes": 0}
 
+# running overflow tallies across every fused dispatch — the serving tier's
+# hedge/breaker policy reads these (serve /stats surfaces them): how many
+# query slots fast-failed at all, and how many of those were evicted by the
+# *shared* pool rather than their own per-unit budget
+OVERFLOW_STATS = {"failed_queries": 0, "shared_ovf_queries": 0}
+
 
 def _ceil_sqrt(n: int) -> int:
     import math
@@ -535,6 +541,9 @@ class _Assembly:
     def __init__(self, Q: int, K: int):
         self.Q, self.K = Q, K
         self.failed_q = np.zeros(Q, bool)
+        # per-query "the shared pool did it" flags: zero for per-query-
+        # budget groups (their failures are always self-inflicted)
+        self.shared_ovf_q = np.zeros(Q, bool)
         self.counts = None
         self.rows_gid = None
         self.truncated = None
@@ -547,6 +556,8 @@ class _Assembly:
 
     def put(self, idxs, out: dict) -> None:
         self.failed_q[idxs] = np.asarray(out["failed_q"])
+        if "shared_q" in out:
+            self.shared_ovf_q[idxs] = np.asarray(out["shared_q"])
         if "counts" in out:
             if self.counts is None:
                 self.counts = np.full(self.Q, NULL, np.int32)
@@ -564,10 +575,13 @@ class _Assembly:
                 self.rows[k][idxs, :v0.shape[1]] = v0
 
     def result(self) -> QueryResult:
+        OVERFLOW_STATS["failed_queries"] += int(self.failed_q.sum())
+        OVERFLOW_STATS["shared_ovf_queries"] += int(self.shared_ovf_q.sum())
         return QueryResult(
             counts=self.counts, rows_gid=self.rows_gid,
             rows=self.rows or None, truncated=self.truncated,
-            failed=bool(self.failed_q.any()), failed_q=self.failed_q)
+            failed=bool(self.failed_q.any()), failed_q=self.failed_q,
+            shared_ovf_q=self.shared_ovf_q)
 
 
 def _fusion_groups(lowered, eff_caps):

@@ -78,7 +78,10 @@ def _dedup_pairs(seg, gid, valid, R: int, F: int, FS: int,
     segments that exceed it exactly like per-query mode), then the first FS
     survivors overall (the shared budget, flagging every owner whose pair
     is dropped — owner-attributed fast-fail).  Returns (seg', gid',
-    failed_seg) with outputs sorted by (seg, gid), ghosts (R, PAD) last."""
+    failed_unit, failed_shared) with outputs sorted by (seg, gid), ghosts
+    (R, PAD) last; the two flag vectors separate "my own §3.4 budget blew"
+    from "the shared pool evicted me" — serving's hedge policy re-dispatches
+    the latter per-query instead of re-entering the saturated pool."""
     s = jnp.where(valid, seg, R)
     g = jnp.where(valid, gid, PAD)
     s, g = backend_mod.sort_pairs(s, g, backend=backend)
@@ -99,9 +102,10 @@ def _dedup_pairs(seg, gid, valid, R: int, F: int, FS: int,
     col = jnp.where(keep, gcol, FS)
     out_s = jnp.full((FS,), R, jnp.int32).at[col].set(s, mode="drop")
     out_g = jnp.full((FS,), PAD, jnp.int32).at[col].set(g, mode="drop")
-    failed = jnp.zeros((R,), bool)
-    failed = _flag_segs(failed, over_seg | over_shared, jnp.minimum(s, R), R)
-    return out_s, out_g, failed
+    zero = jnp.zeros((R,), bool)
+    sc = jnp.minimum(s, R)
+    return (out_s, out_g, _flag_segs(zero, over_seg, sc, R),
+            _flag_segs(zero, over_shared, sc, R))
 
 
 def _expand_flat(start, deg, pools, et_s, ts_s, ES: int,
@@ -276,13 +280,16 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))          # (R,) per unit
         ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
         failed_r = jnp.zeros((R,), bool)
+        shared_r = jnp.zeros((R,), bool)     # subset caused by shared pools
         # ---- lookup wave --------------------------------------------------
         gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
                                         ts_r, backend=backend, xd_win=xwin)
         seg0 = jnp.where(found & valid_in, jnp.arange(R, dtype=jnp.int32), R)
         gid0 = jnp.where(found & valid_in, gids0, PAD)
-        seg, gid, f0 = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS, backend)
-        failed_r = failed_r | f0
+        seg, gid, fu, fs = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS,
+                                        backend)
+        failed_r = failed_r | fu | fs
+        shared_r = shared_r | fs
         live = seg < R
 
         for wave in waves:
@@ -314,8 +321,10 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                                              num_segments=R + 1)[:R]
                 failed_r = failed_r | (segdeg > E)
                 # shared-pool truncation: flag every owner it touches
-                failed_r = _flag_segs(failed_r, m & (jnp.cumsum(deg) > ES),
-                                      segc, R)
+                es_f = _flag_segs(jnp.zeros((R,), bool),
+                                  m & (jnp.cumsum(deg) > ES), segc, R)
+                failed_r = failed_r | es_f
+                shared_r = shared_r | es_f
                 out_n, item = _expand_flat(start, deg,
                                            (nbr, typ, ecre, edel),
                                            et_x[segc], ts_x[segc], ES,
@@ -333,9 +342,10 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 parts_g += [out_n, dn]
             cand_s = jnp.concatenate(parts_s)
             cand_g = jnp.concatenate(parts_g)
-            seg, gid, f = _dedup_pairs(cand_s, cand_g, cand_s < R,
-                                       R, F, FS, backend)
-            failed_r = failed_r | f
+            seg, gid, fu, fs = _dedup_pairs(cand_s, cand_g, cand_s < R,
+                                            R, F, FS, backend)
+            failed_r = failed_r | fu | fs
+            shared_r = shared_r | fs
             live = seg < R
             segc = jnp.minimum(seg, R)
             rows = cfg.row_of_gid(jnp.where(live, gid, 0))
@@ -352,6 +362,9 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
         failed_q = jax.ops.segment_sum(
             failed_r.astype(jnp.int32), jnp.asarray(row2q),
             num_segments=Q) > 0
+        shared_q = jax.ops.segment_sum(
+            shared_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
 
         # ---- terminal wave ------------------------------------------------
         qc = jnp.minimum(qf, Q)
@@ -363,7 +376,7 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                                       final_preds, qc)
         cur_x = jnp.concatenate([cur_q, jnp.full((1,), -1, jnp.int32)])
         live = live & (gf > cur_x[qc])          # gid-cursor continuations
-        out = {"failed_q": failed_q}
+        out = {"failed_q": failed_q, "shared_q": shared_q}
         if terminal == "count":
             out["counts"] = jax.ops.segment_sum(
                 live.astype(jnp.int32), jnp.where(live, qf, Q),
@@ -473,12 +486,15 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))
         ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
         failed_r = jnp.zeros((R,), bool)
+        shared_r = jnp.zeros((R,), bool)     # subset caused by shared pools
         g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
                            valid_in, ts_r, backend, xd_win=xwin)
         seg0 = jnp.where(g0 >= 0, jnp.arange(R, dtype=jnp.int32), R)
         gid0 = jnp.where(g0 >= 0, g0, PAD)
-        seg, gid, f0 = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS, backend)
-        failed_r = failed_r | f0
+        seg, gid, fu, fs = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS,
+                                        backend)
+        failed_r = failed_r | fu | fs
+        shared_r = shared_r | fs
         live = seg < R
 
         for w, wave in enumerate(waves):
@@ -490,13 +506,16 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
             parked = live & ~act_x[segc]
             parts_s = [jnp.where(parked, seg, R)]
             parts_g = [jnp.where(parked, gid, PAD)]
-            # 1) batched RPCs: ship active pairs to their owners
+            # 1) batched RPCs: ship active pairs to their owners (bucket
+            # drops are a shared-capacity casualty, like pool eviction)
             a_s, a_g, fr = _route_flat(seg, gid, live & act_x[segc], S, SB,
                                        R, axes)
             failed_r = failed_r | fr
-            seg_a, gid_a, fd = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS,
-                                            backend)
-            failed_r = failed_r | fd
+            shared_r = shared_r | fr
+            seg_a, gid_a, fu, fs = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS,
+                                                backend)
+            failed_r = failed_r | fu | fs
+            shared_r = shared_r | fs
             live_a = seg_a < R
             segc_a = jnp.minimum(seg_a, R)
             # 2) owner-side pending checks (previous hop's vertex checks)
@@ -533,8 +552,10 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
                 segdeg = jax.ops.segment_sum(deg, segc_a,
                                              num_segments=R + 1)[:R]
                 failed_r = failed_r | (segdeg > E)
-                failed_r = _flag_segs(failed_r, m & (jnp.cumsum(deg) > ES),
-                                      segc_a, R)
+                es_f = _flag_segs(jnp.zeros((R,), bool),
+                                  m & (jnp.cumsum(deg) > ES), segc_a, R)
+                failed_r = failed_r | es_f
+                shared_r = shared_r | es_f
                 out_n, item = _expand_flat(start, deg,
                                            (nbr, typ, ecre, edel),
                                            et_x[segc_a], ts_x[segc_a], ES,
@@ -553,16 +574,19 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
                 parts_g += [out_n, dn]
             cand_s = jnp.concatenate(parts_s)
             cand_g = jnp.concatenate(parts_g)
-            seg, gid, f = _dedup_pairs(cand_s, cand_g, cand_s < R,
-                                       R, F, FS, backend)
-            failed_r = failed_r | f
+            seg, gid, fu, fs = _dedup_pairs(cand_s, cand_g, cand_s < R,
+                                            R, F, FS, backend)
+            failed_r = failed_r | fu | fs
+            shared_r = shared_r | fs
             live = seg < R
 
         # ---- finalize: route all, owed checks, merge, aggregate -----------
         a_s, a_g, fr = _route_flat(seg, gid, live, S, SB, R, axes)
         failed_r = failed_r | fr
-        seg, gid, fd = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS, backend)
-        failed_r = failed_r | fd
+        shared_r = shared_r | fr
+        seg, gid, fu, fs = _dedup_pairs(a_s, a_g, a_s < R, R, F, FS, backend)
+        failed_r = failed_r | fu | fs
+        shared_r = shared_r | fs
         live = seg < R
         segc = jnp.minimum(seg, R)
         rows_l = jnp.where(live, gid // S, 0)
@@ -578,6 +602,9 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
         failed_q = jax.ops.segment_sum(
             failed_r.astype(jnp.int32), jnp.asarray(row2q),
             num_segments=Q) > 0
+        shared_q = jax.ops.segment_sum(
+            shared_r.astype(jnp.int32), jnp.asarray(row2q),
+            num_segments=Q) > 0
         qc = jnp.minimum(qf, Q)
         ts_qx = jnp.concatenate([ts_q, jnp.zeros((1,), ts_q.dtype)])
         if final_preds:
@@ -588,7 +615,9 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
         cur_x = jnp.concatenate([cur_q, jnp.full((1,), -1, jnp.int32)])
         live = live & (gf > cur_x[qc])          # gid-cursor continuations
         out = {"failed_q":
-               jax.lax.psum(failed_q.astype(jnp.int32), axes) > 0}
+               jax.lax.psum(failed_q.astype(jnp.int32), axes) > 0,
+               "shared_q":
+               jax.lax.psum(shared_q.astype(jnp.int32), axes) > 0}
         if terminal == "count":
             out["counts"] = jax.lax.psum(jax.ops.segment_sum(
                 live.astype(jnp.int32), jnp.where(live, qf, Q),
@@ -644,7 +673,7 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
 
     store_specs = jax.tree.map(lambda _: P(axes), GraphStore(
         **{f.name: 0 for f in dataclasses.fields(GraphStore)}))
-    out_specs = {"failed_q": P()}
+    out_specs = {"failed_q": P(), "shared_q": P()}
     if terminal == "count":
         out_specs["counts"] = P()
     else:

@@ -191,6 +191,7 @@ class FastRestartCache:
         db.task_queue = None
         db.compaction_watermark = 0.5
         db._bg_compaction_pending = False
+        db.faults = None
         db.backend = None
         return db
 

@@ -35,6 +35,11 @@ class TaskQueue:
         self._q: list[Task] = []
         self._ids = itertools.count()
         self.completed: list[str] = []
+        # serving hook: runs at the top of every pump quantum, so deadline
+        # work (e.g. closing a due write wave) makes progress even when the
+        # query stream is empty and nothing is queued
+        self.on_pump: Optional[Callable] = None
+        self.fault_restarts = 0
 
     def enqueue(self, task: Task) -> int:
         task.task_id = next(self._ids)
@@ -46,11 +51,27 @@ class TaskQueue:
         return len(self._q)
 
     def pump(self, budget: int = 1) -> int:
-        """Run up to ``budget`` tasks (one worker-thread quantum each)."""
+        """Run up to ``budget`` tasks (one worker-thread quantum each).
+
+        A quantum killed by an injected fault models a crashed low-priority
+        worker: the queue survives, the task re-enqueues (its ``state`` dict
+        carries whatever progress the quantum had checkpointed), and the
+        next pump retries — the paper's workers are stateless for exactly
+        this reason."""
+        from repro.core.faults import InjectedFault, check
+        if self.on_pump is not None:
+            self.on_pump()
         ran = 0
         while self._q and ran < budget:
             task = self._q.pop(0)
-            spawned = task.fn(self.db, task) or []
+            try:
+                check(self.db, "tasks.quantum")
+                spawned = task.fn(self.db, task) or []
+            except InjectedFault:
+                self.fault_restarts += 1
+                self.enqueue(task)              # crashed worker: retry later
+                ran += 1
+                continue
             for s in spawned:
                 self.enqueue(s)
             self.completed.append(task.name)
@@ -112,6 +133,12 @@ def background_compaction_task(*, kinds=None, max_rebuilds: int = 4) -> Task:
         if "handle" not in st:
             st["handle"] = db.begin_compaction(st["kinds"])
             return [task]                     # handoff on a later quantum
+        from repro.core.faults import check
+        if check(db, "tasks.compaction.handoff"):
+            # chaos site ("race"): a structural mutation landed between
+            # build and handoff — bump the epoch so the shadow is genuinely
+            # stale and the rebuild path below is the one exercised
+            db.epochs["delete_e"] += 1
         res = db.try_handoff(st.pop("handle"))
         st["kinds"] = tuple(k for k, ok in res.items() if not ok)
         if not st["kinds"]:

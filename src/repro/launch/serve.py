@@ -19,15 +19,31 @@ Reproduces the paper's serving architecture end to end on one host:
   * interleaved writes through the transactional path + replication log;
   * the Task framework pumped between batches (compaction, sweeper,
     vacuum — "low priority workers", §3.3);
-  * hedged dispatch: a query batch that fast-fails is retried once with
+  * **read admission** mirroring the PR-6 write wave: clients
+    ``submit_query`` into an async queue that closes into one fused wave at
+    ``read_batch`` requests or ``read_deadline_ms`` — whichever first —
+    with per-tenant in-flight caps and load shedding: past the queue
+    watermark a request gets an immediate ``SHED`` response with a
+    retry-after hint instead of growing the queue (the backpressure
+    contract; every admitted id terminates in a result or an attributed
+    shed/abort);
+  * **circuit-breaker hedging**: a fast-failed batch is retried once at
     quadrupled capacities (straggler/outlier mitigation — the latency-tail
-    policy the paper enforces with its 100 ms budget).  When per-query
-    fast-fail flags are available (the fused path), only the failed
-    queries are re-dispatched and their rows patched into the batch result;
-  * latency accounting per query class (avg + P99, the paper's metrics).
+    policy the paper enforces with its 100 ms budget), but each query
+    class's failure-rate window can open a breaker that skips the hedge
+    (truncated-with-flag) under sustained overflow; with per-query flags
+    (the fused path) only the failed slice re-dispatches — and it always
+    re-dispatches **per-query-budget**, so ``budget="shared"`` overflow
+    never re-enters the saturated pool (``shared_ovf_q`` attribution) and
+    ``budget="auto"`` can pick shared mode safely at batch >= the knee;
+  * latency accounting per query class (avg + P99, the paper's metrics);
+  * named fault-injection sites (``core/faults.py``) so chaos tests can
+    drive the admission→execute→hedge→respond loop under wave crashes,
+    stalls, and stale-continuation storms.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 import uuid
@@ -35,6 +51,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core.query.executor import QueryCaps, QueryResult
 from repro.core.query.planner import _pow2ceil
 from repro.core.tasks import (TaskQueue, compaction_task,
@@ -57,12 +74,69 @@ class Continuation:
     cursor_mode: bool = False   # last refill used a gid-cursor predicate
 
 
+@dataclasses.dataclass
+class _ReadReq:
+    """One admitted read waiting for its wave."""
+    qid: str
+    query: dict
+    tenant: str
+    qclass: str
+    arrived: float
+
+
+class _Breaker:
+    """Per-query-class circuit breaker over a post-hedge failure window.
+
+    Closed: hedges run normally.  A full window at >= ``threshold`` failure
+    rate opens the breaker — sustained overflow means the 4x retry is just
+    burning capacity, so waves return truncated-with-flag instead.  While
+    open, one probe hedge is admitted every ``cooldown`` skipped waves
+    (half-open); any wave that ends unfailed closes it again."""
+
+    def __init__(self, window: int = 8, threshold: float = 0.5,
+                 cooldown: int = 4):
+        self.window, self.threshold, self.cooldown = window, threshold, \
+            cooldown
+        self.events = collections.deque(maxlen=window)
+        self.open = False
+        self._skips = 0
+        self.opens = 0
+
+    def allow(self) -> bool:
+        if not self.open:
+            return True
+        if self._skips >= self.cooldown:
+            self._skips = 0                       # half-open: probe hedge
+            return True
+        self._skips += 1
+        return False
+
+    def record(self, failed: bool) -> None:
+        self.events.append(bool(failed))
+        if self.open:
+            if not failed:
+                self.open = False
+                self.events.clear()
+                self._skips = 0
+        elif (len(self.events) >= self.window
+              and sum(self.events) / len(self.events) >= self.threshold):
+            self.open = True
+            self.opens += 1
+            self._skips = 0
+
+
 class A1Server:
     def __init__(self, db, *, caps: Optional[QueryCaps] = None,
                  page_size: int = 16, continuation_ttl: float = 60.0,
                  use_spmd: bool = False, mesh=None,
-                 budget: Optional[str] = None,
-                 write_batch: int = 16, write_deadline_ms: float = 5.0):
+                 budget: Optional[str] = "auto",
+                 write_batch: int = 16, write_deadline_ms: float = 5.0,
+                 read_batch: int = 16, read_deadline_ms: float = 5.0,
+                 shed_watermark: int = 64, tenant_inflight: int = 32,
+                 result_ttl: Optional[float] = None,
+                 shared_knee: int = 64,
+                 breaker_window: int = 8, breaker_threshold: float = 0.5,
+                 breaker_cooldown: int = 4):
         self.db = db
         self.caps = caps or QueryCaps()
         self.page = page_size
@@ -71,27 +145,60 @@ class A1Server:
         # attach the queue so write waves can threshold-trigger background
         # compaction (§2.2) instead of compacting on the commit path
         db.task_queue = self.tasks
+        # deadline work must progress with an *empty* query stream too: the
+        # low-priority pump doubles as the wave-deadline clock (§3.3)
+        self.tasks.on_pump = self._maybe_close_write_wave
         self._continuations: dict[str, Continuation] = {}
         self._pending: list[str] = []       # tokens awaiting a refill fetch
         self.use_spmd = use_spmd
         self.mesh = mesh
-        # fused frontier discipline: None/"per-query" or "shared" (the
-        # serving-cap memory shape; overflow is owner-attributed fast-fail
-        # and the hedged retry re-runs flagged queries as usual)
+        # fused frontier discipline: "auto" picks "shared" (the serving-cap
+        # memory shape, owner-attributed fast-fail) for waves of >=
+        # ``shared_knee`` queries — the measured amortization knee — and
+        # per-query budgets below it; None/"per-query"/"shared" pin a mode.
+        # Safe because shared-pool overflow re-dispatches per-query (see
+        # ``_dispatch``), never re-entering the saturated pool.
         self.budget = budget
+        self.shared_knee = shared_knee
         # write admission: staged txns accumulate here and close into one
         # fused mutation wave at max-batch-or-deadline
         self.write_batch = write_batch
         self.write_deadline_ms = write_deadline_ms
         self._write_q: list[tuple] = []     # (wid, txn, staged gids)
         self._write_results: dict[str, dict] = {}
+        self._write_exp: dict[str, float] = {}
         self._wave_opened = 0.0
+        # read admission: the same max-batch-or-deadline wave, plus
+        # backpressure — queue watermark shedding and per-tenant caps
+        self.read_batch = read_batch
+        self.read_deadline_ms = read_deadline_ms
+        self.shed_watermark = shed_watermark
+        self.tenant_cap = tenant_inflight
+        self.result_ttl = continuation_ttl if result_ttl is None \
+            else result_ttl
+        self._read_q: list[_ReadReq] = []
+        self._read_opened = 0.0
+        self._read_results: dict[str, dict] = {}
+        self._read_exp: dict[str, float] = {}
+        self._tenant_inflight: collections.Counter = collections.Counter()
+        self._closing = False               # read-wave reentrancy guard
+        self._wave_ms = read_deadline_ms    # EWMA of recent wave wall time
+        self.breakers: dict[str, _Breaker] = {}
+        self._breaker_cfg = (breaker_window, breaker_threshold,
+                             breaker_cooldown)
         self.latencies: dict[str, list[float]] = {}
         self.stats = {"queries": 0, "fastfails": 0, "hedged": 0,
                       "continuations": 0, "continuation_joins": 0,
                       "continuation_flushes": 0, "cursor_refills": 0,
                       "write_waves": 0, "write_txns": 0,
                       "write_aborts": 0, "write_rejects": 0,
+                      "admitted": 0, "served": 0, "sheds": 0,
+                      "tenant_sheds": 0, "read_rejects": 0,
+                      "read_waves": 0, "wave_faults": 0,
+                      "aborted_faults": 0,
+                      "breaker_skips": 0, "breaker_opens": 0,
+                      "dropped_write_results": 0, "dropped_read_results": 0,
+                      "shared_ovf_queries": 0,
                       "planner_cache_hit_rate": 0.0,
                       "peak_frontier_bytes_per_query": 0,
                       "peak_frontier_bytes_shared": 0}
@@ -113,13 +220,13 @@ class A1Server:
         ts0 = self.db.snapshot_ts() if read_ts is None else int(read_ts)
         self.db.active_query_ts.append(ts0)      # pin across run + hedge
         try:
-            self._sweep_continuations()
+            self._sweep()
             pend = self._drain_pending()
             n = len(queries)
             batch = queries + [q for _, q, _ in pend]
             ts_vec = [ts0] * n + [t for _, _, t in pend]
             self.stats["continuation_joins"] += len(pend)
-            res = self._dispatch(batch, ts_vec)
+            res = self._dispatch(batch, ts_vec, qclass=qclass)
             for j, (token, _, _) in enumerate(pend):
                 self._refill(token, res, n + j)
             if pend:
@@ -146,13 +253,27 @@ class A1Server:
             planner.FRONTIER_STATS["per_query_peak_bytes"])
         self.stats["peak_frontier_bytes_shared"] = (
             planner.FRONTIER_STATS["shared_peak_bytes"])
+        self.stats["shared_ovf_queries"] = (
+            planner.OVERFLOW_STATS["shared_ovf_queries"])
 
-    def _run(self, queries, caps, read_ts, fused: Optional[bool] = None):
+    def _budget_for(self, n: int) -> Optional[str]:
+        """Resolve the per-dispatch frontier discipline: ``"auto"`` takes
+        shared budgets at/above the amortization knee, else per-query."""
+        if self.budget == "auto":
+            return "shared" if n >= self.shared_knee else "per-query"
+        return self.budget
+
+    def _run(self, queries, caps, read_ts, fused: Optional[bool] = None,
+             budget: str = "auto"):
         """The unified entry point; ``fused=True`` forces per-query
-        ``failed_q`` flags (what hedged retries want)."""
+        ``failed_q`` flags (what hedged retries want).  ``budget="auto"``
+        resolves the server policy; hedged retries pass ``"per-query"``
+        explicitly so they never re-enter a saturated shared pool."""
+        if budget == "auto":
+            budget = self._budget_for(len(queries))
         mesh = self.mesh if self.use_spmd else None
         return self.db.query(queries, caps=caps, read_ts=read_ts, mesh=mesh,
-                             fused=fused, budget=self.budget)
+                             fused=fused, budget=budget)
 
     def _doc_hints(self, q: dict) -> dict:
         """Effective cap hints of a document, exactly as the parser merges
@@ -171,31 +292,61 @@ class A1Server:
                   for k, v in h.items()}
         return {**q, "hints": scaled} if scaled else q
 
-    def _dispatch(self, batch, ts_vec,
-                  fused: Optional[bool] = None) -> QueryResult:
-        """Base run + hedged retry: one retry at 4x capacity (tail control,
+    def _breaker(self, qclass: str) -> _Breaker:
+        br = self.breakers.get(qclass)
+        if br is None:
+            br = self.breakers[qclass] = _Breaker(*self._breaker_cfg)
+        return br
+
+    def breaker_state(self) -> dict:
+        return {k: ("open" if b.open else "closed")
+                for k, b in self.breakers.items()}
+
+    def _dispatch(self, batch, ts_vec, fused: Optional[bool] = None,
+                  qclass: str = "q") -> QueryResult:
+        """Base run + circuit-breaker-hedged retry.
+
+        A fast-failed batch is retried once at 4x capacity (tail control,
         then give up — the paper discards queries that blow the time
-        budget).  With per-query flags (fused path) only the failed slice
-        retries.  Queries whose own cap hints pin frontier/expand get those
-        hints quadrupled too — otherwise the hint would override ``big``
-        and the retry would re-run at exactly the failed budget."""
+        budget), unless ``qclass``'s breaker is open: under sustained
+        overflow the hedge is pure waste, so the wave returns
+        truncated-with-flag immediately (a half-open probe hedge every few
+        waves closes the breaker once retries succeed again).  With
+        per-query flags (fused path) only the failed slice retries, and the
+        retry always runs **per-query budgets**: a shared-pool eviction
+        (``shared_ovf_q``) must not re-enter the pool that evicted it, and
+        per-query-mode flags are a subset of shared-mode flags, so anything
+        the pool would have answered the retry answers identically.
+        Queries whose own cap hints pin frontier/expand get those hints
+        quadrupled too — otherwise the hint would override ``big`` and the
+        retry would re-run at exactly the failed budget."""
+        faults_mod.check(self.db, "serve.wave.stall")
         res = self._run(batch, self.caps, ts_vec, fused=fused)
         if res.failed:
-            self.stats["hedged"] += 1
-            big = dataclasses.replace(
-                self.caps, frontier=self.caps.frontier * 4,
-                expand=self.caps.expand * 4)
-            if res.failed_q is not None and not all(res.failed_q):
-                idx = [i for i, f in enumerate(res.failed_q) if f]
-                retry = self._run([self._hedged_doc(batch[i]) for i in idx],
-                                  big,
-                                  [ts_vec[i] for i in idx], fused=True)
-                self._patch(res, retry, idx)
+            if self._breaker(qclass).allow():
+                self.stats["hedged"] += 1
+                big = dataclasses.replace(
+                    self.caps, frontier=self.caps.frontier * 4,
+                    expand=self.caps.expand * 4)
+                if res.failed_q is not None and not all(res.failed_q):
+                    idx = [i for i, f in enumerate(res.failed_q) if f]
+                    retry = self._run(
+                        [self._hedged_doc(batch[i]) for i in idx], big,
+                        [ts_vec[i] for i in idx], fused=True,
+                        budget="per-query")
+                    self._patch(res, retry, idx)
+                else:
+                    res = self._run([self._hedged_doc(q) for q in batch],
+                                    big, ts_vec, fused=fused,
+                                    budget="per-query")
+                if res.failed:
+                    self.stats["fastfails"] += 1
             else:
-                res = self._run([self._hedged_doc(q) for q in batch], big,
-                                ts_vec, fused=fused)
-            if res.failed:
+                self.stats["breaker_skips"] += 1
                 self.stats["fastfails"] += 1
+        self._breaker(qclass).record(bool(res.failed))
+        self.stats["breaker_opens"] = sum(b.opens
+                                          for b in self.breakers.values())
         return res
 
     @staticmethod
@@ -212,6 +363,11 @@ class A1Server:
                     if retry.rows and key in retry.rows:
                         res.rows[key][i, :k] = retry.rows[key][j, :k]
             res.failed_q[i] = retry.failed_q[j]
+            if res.shared_ovf_q is not None:
+                # the retry ran per-query: any surviving failure is now
+                # self-inflicted, not a shared-pool eviction
+                res.shared_ovf_q[i] = (False if retry.shared_ovf_q is None
+                                       else retry.shared_ovf_q[j])
         res.failed = bool(np.any(res.failed_q))
 
     @staticmethod
@@ -223,6 +379,7 @@ class A1Server:
             {k: v[:n] for k, v in res.rows.items()},
             truncated=sl(res.truncated),
             failed_q=sl(res.failed_q),
+            shared_ovf_q=sl(res.shared_ovf_q),
             failed=res.failed if res.failed_q is None
             else bool(np.any(res.failed_q[:n])))
 
@@ -378,7 +535,8 @@ class A1Server:
             return
         self.stats["continuation_flushes"] += 1
         res = self._dispatch([q for _, q, _ in pend],
-                             [t for _, _, t in pend], fused=True)
+                             [t for _, _, t in pend], fused=True,
+                             qclass="continuation")
         for j, (token, _, _) in enumerate(pend):
             self._refill(token, res, j)
 
@@ -387,11 +545,182 @@ class A1Server:
         if c is not None:
             self.db.active_query_ts.remove(c.read_ts)
 
-    def _sweep_continuations(self) -> None:
+    def _sweep(self) -> None:
+        """Expiry sweep: continuations, write results, read results.
+
+        Results for ids the client never polls would otherwise accumulate
+        forever (the PR-6 ``_write_results`` leak); they age out on the
+        same ``result_ttl`` clock and the drops are counted — a dropped
+        result is an *attributed* loss, visible in /stats, never a silent
+        one.  The ``serve.continuation.stale`` chaos site force-expires
+        every token here (stale-token storm): clients get the §3.4
+        "restart the query" contract, pins are released, nothing leaks."""
         now = time.monotonic()
+        if faults_mod.check(self.db, "serve.continuation.stale"):
+            for c in self._continuations.values():
+                c.expires = now - 1.0
         for token in [t for t, c in self._continuations.items()
                       if now > c.expires]:
             self._drop(token)
+        for results, exp, key in (
+                (self._write_results, self._write_exp,
+                 "dropped_write_results"),
+                (self._read_results, self._read_exp,
+                 "dropped_read_results")):
+            for k in [k for k, e in exp.items() if now > e]:
+                del exp[k]
+                results.pop(k, None)
+                self.stats[key] += 1
+
+    # ------------------------------------------------------------------
+    # read admission (the §3.4 serving queue: SLB -> frontend backpressure)
+    # ------------------------------------------------------------------
+    def submit_query(self, query: dict, *, tenant: str = "default",
+                     qclass: str = "q") -> str:
+        """Admit one client read; returns a query id to poll.
+
+        Admission control runs *before* the queue grows: past the
+        ``shed_watermark`` (or the tenant's in-flight cap) the request is
+        shed immediately — a ``SHED`` result with a ``retry_after_ms``
+        drain estimate, costing dict ops, not a wave slot.  Malformed
+        documents reject at admission (``REJECTED``) so a bad query can
+        never poison a wave.  Admitted requests close into a fused wave at
+        ``read_batch`` or ``read_deadline_ms`` (serviced by
+        :meth:`query_result` polls, :meth:`pump`, or :meth:`flush_queries`).
+        Every admitted id terminates in exactly one stored result."""
+        qid = uuid.uuid4().hex
+        now = time.monotonic()
+        if len(self._read_q) >= self.shed_watermark:
+            self.stats["sheds"] += 1
+            self._store_read_result(qid, {
+                "status": "SHED", "reason": "overload",
+                "retry_after_ms": self._retry_after_ms()})
+            return qid
+        if self._tenant_inflight[tenant] >= self.tenant_cap:
+            self.stats["sheds"] += 1
+            self.stats["tenant_sheds"] += 1
+            self._store_read_result(qid, {
+                "status": "SHED", "reason": f"tenant-cap:{tenant}",
+                "retry_after_ms": self._retry_after_ms()})
+            return qid
+        try:
+            from repro.core.query.a1ql import parse
+            parse(self.db, query)
+        except (ValueError, KeyError, TypeError) as e:
+            self.stats["read_rejects"] += 1
+            self._store_read_result(qid, {"status": "REJECTED",
+                                          "reason": str(e)})
+            return qid
+        self._read_q.append(_ReadReq(qid, query, tenant, qclass, now))
+        self._tenant_inflight[tenant] += 1
+        self.stats["admitted"] += 1
+        if len(self._read_q) == 1:
+            self._read_opened = now
+        if len(self._read_q) >= self.read_batch:
+            self._close_read_wave()
+        return qid
+
+    def query_result(self, qid: str) -> Optional[dict]:
+        """Poll a submitted read: the result dict, or ``None`` while its
+        wave is still open.  Polling drives the deadline clock."""
+        self._maybe_close_read_wave()
+        r = self._read_results.pop(qid, None)
+        if r is not None:
+            self._read_exp.pop(qid, None)
+        return r
+
+    def flush_queries(self) -> int:
+        """Close every pending read wave now (shutdown, test barriers)."""
+        n = 0
+        while self._read_q:
+            n += self._close_read_wave()
+        return n
+
+    def pump(self) -> int:
+        """One serving quantum with no client traffic: close due admission
+        waves (writes and reads), sweep expired state, and run one
+        maintenance task."""
+        n = self._maybe_close_write_wave()
+        n += self._maybe_close_read_wave()
+        self._sweep()
+        self.tasks.pump(1)
+        return n
+
+    def _retry_after_ms(self) -> float:
+        """Drain estimate for a shed client: backlog waves x recent wave
+        wall time (EWMA), floored at one wave deadline."""
+        waves = max(1, -(-len(self._read_q) // self.read_batch))
+        return round(waves * max(self._wave_ms, self.read_deadline_ms), 3)
+
+    def _store_read_result(self, qid: str, row: dict) -> None:
+        self._read_results[qid] = row
+        self._read_exp[qid] = time.monotonic() + self.result_ttl
+
+    def _maybe_close_read_wave(self) -> int:
+        if self._closing or not self._read_q:
+            return 0
+        due = (time.monotonic() - self._read_opened) * 1e3 \
+            >= self.read_deadline_ms
+        if due or len(self._read_q) >= self.read_batch:
+            return self._close_read_wave()
+        return 0
+
+    def _close_read_wave(self) -> int:
+        """Execute one admitted wave and store every member's result.
+
+        An injected wave crash (``engine.wave``) gets one retry — the
+        crashed-worker re-dispatch — then the whole wave aborts *with
+        attribution* (``fault:<site>``): the invariant is that no admitted
+        request ever terminates silently, not that every wave succeeds."""
+        if self._closing or not self._read_q:
+            return 0
+        self._closing = True
+        try:
+            wave = self._read_q[:self.read_batch]
+            self._read_q = self._read_q[self.read_batch:]
+            if self._read_q:
+                self._read_opened = time.monotonic()
+            t0 = time.monotonic()
+            res, err = None, None
+            for _ in range(2):
+                try:
+                    res = self.execute([r.query for r in wave],
+                                       qclass="wave")
+                    break
+                except faults_mod.InjectedFault as e:
+                    err = e
+                    self.stats["wave_faults"] += 1
+            self._wave_ms = (0.7 * self._wave_ms
+                             + 0.3 * (time.monotonic() - t0) * 1e3)
+            done = time.monotonic()
+            for i, r in enumerate(wave):
+                self._tenant_inflight[r.tenant] -= 1
+                if res is None:
+                    self.stats["aborted_faults"] += 1
+                    self._store_read_result(r.qid, {
+                        "status": "ABORTED", "reason": f"fault:{err.site}"})
+                else:
+                    self._store_read_result(r.qid, self._result_row(res, i))
+                    self.stats["served"] += 1
+                self.latencies.setdefault(r.qclass, []).append(
+                    done - r.arrived)
+            self.stats["read_waves"] += 1
+            return len(wave)
+        finally:
+            self._closing = False
+
+    @staticmethod
+    def _result_row(res: QueryResult, i: int) -> dict:
+        row = {"status": "OK",
+               "failed": bool(res.failed_q[i]) if res.failed_q is not None
+               else bool(res.failed)}
+        if res.counts is not None and int(res.counts[i]) >= 0:
+            row["count"] = int(res.counts[i])
+        if res.rows_gid is not None:
+            r = res.rows_gid[i]
+            row["rows"] = r[r >= 0].tolist()
+            row["truncated"] = bool(res.truncated[i])
+        return row
 
     # ------------------------------------------------------------------
     # write admission (§3.4 grows its first write-side machinery)
@@ -416,6 +745,7 @@ class A1Server:
             self.stats["write_rejects"] += 1
             self._write_results[wid] = {"status": "ABORTED",
                                         "reason": str(e), "gids": [], "ts": -1}
+            self._write_exp[wid] = time.monotonic() + self.result_ttl
             return wid
         self._write_q.append((wid, t, staged.gids))
         if len(self._write_q) == 1:
@@ -427,7 +757,10 @@ class A1Server:
     def write_result(self, wid: str) -> Optional[dict]:
         """Outcome of a submitted write: ``{status, reason, gids, ts}``, or
         ``None`` while it is still queued for a wave."""
-        return self._write_results.pop(wid, None)
+        r = self._write_results.pop(wid, None)
+        if r is not None:
+            self._write_exp.pop(wid, None)
+        return r
 
     def flush_writes(self) -> int:
         """Close the open mutation wave now (deadline expiry, shutdown)."""
@@ -445,12 +778,14 @@ class A1Server:
     def _close_write_wave(self) -> int:
         wave, self._write_q = self._write_q, []
         res = self.db.write([t for _, t, _ in wave])
+        exp = time.monotonic() + self.result_ttl
         for i, (wid, _, gids) in enumerate(wave):
             ok = res.statuses[i] == "COMMITTED"
             self._write_results[wid] = {
                 "status": res.statuses[i], "reason": res.reasons[i],
                 "gids": gids if ok else [-1] * len(gids),
                 "ts": res.ts if ok else -1}
+            self._write_exp[wid] = exp
             if not ok:
                 self.stats["write_aborts"] += 1
         self.stats["write_waves"] += 1

@@ -1,0 +1,295 @@
+"""Read admission, shedding, breaker hedging, and result sweeping.
+
+The serving-resilience contract (core/README.md): every request that calls
+``submit_query`` terminates in exactly one stored result — ``OK``,
+``ABORTED`` (attributed), ``REJECTED`` (admission-time validation), or
+``SHED`` (backpressure with a retry-after hint) — and read waves close at
+max-batch-or-deadline exactly like PR 6's write waves.  These tests pin
+the edge cases the ISSUE names: deadline expiry with an empty query
+stream, shed-then-retry round trips, refills riding waves past tenant
+caps, the circuit breaker's open/probe/close cycle, auto-selected shared
+budgets at the amortization knee, and the never-polled-result sweep.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.query.executor import QueryCaps
+from repro.core.writes import CreateVertex, UpdateVertex
+from repro.launch.serve import A1Server
+
+from test_backend_parity import build_db, q_chain, q_star
+from test_serve import SEL, busy_db
+
+CAPS = QueryCaps(frontier=128, expand=512, results=8)
+
+
+def mk_server(db=None, **kw):
+    db = db or busy_db()
+    kw.setdefault("caps", CAPS)
+    return A1Server(db, **kw), db
+
+
+# ---------------------------------------------------------------------------
+# wave closing
+# ---------------------------------------------------------------------------
+
+def test_read_wave_closes_at_max_batch():
+    srv, db = mk_server(read_batch=3, read_deadline_ms=1e9)
+    qids = [srv.submit_query(q_chain(i % 3), qclass=f"c{i % 2}")
+            for i in range(3)]
+    # the third admit closed the wave: results are ready without any pump
+    rows = [srv.query_result(q) for q in qids]
+    assert all(r is not None and r["status"] == "OK" for r in rows)
+    for i, r in enumerate(rows):
+        solo = db.query([q_chain(i % 3)], caps=CAPS)
+        assert r["count"] == int(solo.counts[0])
+    assert srv.stats["admitted"] == srv.stats["served"] == 3
+    assert srv.stats["read_waves"] == 1
+    assert not db.active_query_ts                 # wave pin released
+
+
+def test_read_wave_closes_at_deadline_via_poll():
+    srv, db = mk_server(read_batch=64, read_deadline_ms=0.0)
+    qid = srv.submit_query(q_chain(0))
+    assert srv.query_result(qid)["status"] == "OK"   # poll drove the clock
+
+
+def test_write_deadline_flushes_via_task_pump_with_no_queries():
+    """The ISSUE edge case: deadline expiry with an *empty* query stream.
+    Nothing ever calls ``execute``; the low-priority task pump alone must
+    close the due write wave (``TaskQueue.on_pump``)."""
+    srv, db = mk_server(write_batch=100, write_deadline_ms=0.0)
+    f, _ = db.lookup_vertex("film", 100)
+    wid = srv.submit_write([UpdateVertex(f, "film", {"gross": 5.0})])
+    assert srv._write_q                          # wave open, no query traffic
+    srv.tasks.pump(1)                            # empty queue: hook still runs
+    assert srv.write_result(wid)["status"] == "COMMITTED"
+    assert db.get_vertex("film", 100)["gross"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# shedding + tenant caps
+# ---------------------------------------------------------------------------
+
+def test_shed_then_retry_round_trip():
+    srv, db = mk_server(read_batch=8, read_deadline_ms=1e9,
+                        shed_watermark=2)
+    keep = [srv.submit_query(q_chain(i % 3)) for i in range(2)]
+    shed = srv.submit_query(q_chain(2))
+    r = srv.query_result(shed)
+    assert r["status"] == "SHED" and r["reason"] == "overload"
+    assert r["retry_after_ms"] > 0
+    assert srv.stats["sheds"] == 1
+    srv.flush_queries()                          # backlog drains
+    retry = srv.submit_query(q_chain(2))         # the client's retry admits
+    srv.flush_queries()
+    r2 = srv.query_result(retry)
+    solo = db.query([q_chain(2)], caps=CAPS)
+    assert r2["status"] == "OK" and r2["count"] == int(solo.counts[0])
+    for q in keep:
+        assert srv.query_result(q)["status"] == "OK"
+
+
+def test_tenant_inflight_cap_sheds_only_that_tenant():
+    srv, db = mk_server(read_batch=64, read_deadline_ms=1e9,
+                        shed_watermark=64, tenant_inflight=2)
+    a1 = srv.submit_query(q_chain(0), tenant="a")
+    a2 = srv.submit_query(q_chain(1), tenant="a")
+    a3 = srv.submit_query(q_chain(2), tenant="a")     # over a's cap
+    b1 = srv.submit_query(q_chain(0), tenant="b")     # b unaffected
+    r3 = srv.query_result(a3)
+    assert r3["status"] == "SHED" and r3["reason"] == "tenant-cap:a"
+    assert srv.stats["tenant_sheds"] == 1
+    srv.flush_queries()
+    # the wave released a's slots: a can admit again
+    a4 = srv.submit_query(q_chain(2), tenant="a")
+    srv.flush_queries()
+    assert srv.query_result(a4)["status"] == "OK"
+    for q in (a1, a2, b1):
+        assert srv.query_result(q)["status"] == "OK"
+
+
+def test_rejected_doc_never_reaches_a_wave():
+    srv, db = mk_server(read_batch=2, read_deadline_ms=1e9)
+    bad = srv.submit_query({"type": "actor"})          # no id: parse error
+    r = srv.query_result(bad)
+    assert r["status"] == "REJECTED" and srv.stats["read_rejects"] == 1
+    # the bad doc consumed no wave slot and poisoned nothing
+    good = srv.submit_query(q_chain(0))
+    srv.flush_queries()
+    assert srv.query_result(good)["status"] == "OK"
+    assert srv.stats["read_waves"] == 1
+
+
+def test_every_admitted_id_terminates_in_exactly_one_result():
+    srv, db = mk_server(read_batch=4, read_deadline_ms=1e9,
+                        shed_watermark=6, tenant_inflight=3)
+    qids = [srv.submit_query(q_chain(i % 3), tenant=f"t{i % 2}")
+            for i in range(12)]
+    srv.flush_queries()
+    rows = {q: srv.query_result(q) for q in qids}
+    assert all(r is not None for r in rows.values())   # no silent drop
+    statuses = [r["status"] for r in rows.values()]
+    assert statuses.count("OK") == srv.stats["served"] == \
+        srv.stats["admitted"]
+    assert statuses.count("SHED") == srv.stats["sheds"]
+    assert len(statuses) == statuses.count("OK") + statuses.count("SHED")
+    # a second poll of a consumed id is None (results are one-shot)
+    assert all(srv.query_result(q) is None for q in qids)
+    assert not db.active_query_ts
+
+
+# ---------------------------------------------------------------------------
+# continuation refills vs tenant caps
+# ---------------------------------------------------------------------------
+
+def test_refill_joins_wave_after_tenant_hit_inflight_cap():
+    """Refills are wave citizens, not admissions: a tenant at its in-flight
+    cap still gets its continuation refilled by the next wave."""
+    srv, db = mk_server(caps=QueryCaps(frontier=128, expand=512, results=4),
+                        page_size=2, read_batch=2, read_deadline_ms=1e9,
+                        tenant_inflight=1)
+    from test_serve import full_rows
+    want = full_rows(db, SEL)
+    page, token = srv.select_paged(SEL)
+    got = list(page)
+    blocked = srv.submit_query(q_chain(0), tenant="a")    # a's one slot
+    assert srv.query_result(blocked) is None              # queued, wave open
+    shed = srv.submit_query(q_chain(1), tenant="a")       # over the cap
+    assert srv.query_result(shed)["status"] == "SHED"
+    for _ in range(50):
+        if token is None:
+            break
+        page, token = srv.next_page(token)
+        got.extend(page)
+        # admitted traffic closes waves that carry the pending refill
+        srv.submit_query(q_chain(2), tenant="b")
+        srv.flush_queries()
+    assert token is None
+    assert sorted(int(x) for x in got) == want
+    assert srv.stats["continuation_joins"] >= 1           # refills rode waves
+    assert srv.query_result(blocked)["status"] == "OK"
+    assert not db.active_query_ts
+
+
+# ---------------------------------------------------------------------------
+# circuit-breaker hedging
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_under_sustained_overflow_then_recovers():
+    db = busy_db()
+    # actor 323 sits in ~10 films: expand=1 fails even at the 4x hedge
+    srv = A1Server(db, caps=QueryCaps(frontier=64, expand=1, results=8),
+                   breaker_window=4, breaker_threshold=0.5,
+                   breaker_cooldown=2)
+    hot = q_chain(323, direction="in")
+    for _ in range(4):                        # window fills with failures
+        srv.execute([hot], qclass="hot")
+    assert srv.breaker_state()["hot"] == "open"
+    assert srv.stats["breaker_opens"] == 1
+    hedged_before = srv.stats["hedged"]
+    srv.execute([hot], qclass="hot")          # skip 1
+    srv.execute([hot], qclass="hot")          # skip 2
+    assert srv.stats["hedged"] == hedged_before          # no hedges burned
+    assert srv.stats["breaker_skips"] == 2
+    srv.execute([hot], qclass="hot")          # half-open probe: still fails
+    assert srv.stats["hedged"] == hedged_before + 1
+    assert srv.breaker_state()["hot"] == "open"
+    # load subsides: an unfailed wave closes the breaker
+    srv.execute([q_chain(999)], qclass="hot")            # count 0, no overflow
+    assert srv.breaker_state()["hot"] == "closed"
+    # other classes were never throttled
+    assert "cool" not in srv.breakers
+    srv.execute([q_chain(999)], qclass="cool")
+    assert srv.breaker_state()["cool"] == "closed"
+
+
+# ---------------------------------------------------------------------------
+# auto-shared budget + shared-overflow-aware fallback
+# ---------------------------------------------------------------------------
+
+def test_auto_budget_selects_shared_at_knee(monkeypatch):
+    from repro.core.query import planner_shared
+    db = busy_db()
+    calls = []
+    orig = planner_shared.compile_batch_shared
+
+    def spy(*a, **kw):
+        calls.append(len(a[1]))
+        return orig(*a, **kw)
+    monkeypatch.setattr(planner_shared, "compile_batch_shared", spy)
+    srv = A1Server(db, caps=CAPS, shared_knee=4)     # budget defaults "auto"
+    below = [q_chain(i % 3) for i in range(3)]
+    srv.execute(below, qclass="b")
+    assert calls == []                               # below knee: per-query
+    at = [q_chain(i % 3) for i in range(4)]
+    res = srv.execute(at, qclass="b")
+    assert calls and calls[0] == 4                   # knee crossed: shared
+    pq = db.query(at, caps=CAPS, fused=True)
+    np.testing.assert_array_equal(res.counts, pq.counts)
+
+
+def test_per_query_flags_subset_of_shared_flags_across_fallback():
+    """The satellite contract, end to end.  Engine level: per-query-mode
+    fast-fail flags are a subset of shared-mode flags, and ``shared_ovf_q``
+    attributes exactly the pool-caused ones.  Serve level: the hedge
+    re-dispatches shared-overflow queries per-query, so a server pinned to
+    ``budget="shared"`` with a starved pool still answers bit-identically
+    to a per-query server."""
+    db = busy_db()
+    # ample per-unit budgets, starved shared pool: R=8 units, FS=8 slots
+    caps = QueryCaps(frontier=64, expand=512, results=8, shared_frontier=8)
+    batch = [q_chain(i % 3) for i in range(8)]
+    pq = db.query(batch, caps=caps, fused=True)
+    sh = db.query(batch, caps=caps, fused=True, budget="shared")
+    assert not pq.failed                     # per-unit budgets are ample
+    assert sh.failed                         # the pool is starved
+    # flags-subset contract + shared attribution
+    assert np.all(~pq.failed_q | sh.failed_q)
+    assert np.all(~sh.shared_ovf_q | sh.failed_q)
+    np.testing.assert_array_equal(sh.shared_ovf_q, sh.failed_q)
+    # per-query mode carries no shared attribution
+    assert not pq.shared_ovf_q.any()
+    # serve: the breaker-hedge path heals the pool overflow per-query
+    srv_sh = A1Server(db, caps=caps, budget="shared")
+    srv_pq = A1Server(db, caps=caps, budget="per-query")
+    res_sh = srv_sh.execute(batch, qclass="q")
+    res_pq = srv_pq.execute(batch, qclass="q")
+    assert not res_sh.failed and not res_pq.failed
+    np.testing.assert_array_equal(res_sh.counts, res_pq.counts)
+    assert srv_sh.stats["hedged"] == 1
+    assert srv_sh.stats["shared_ovf_queries"] >= 8
+
+
+# ---------------------------------------------------------------------------
+# result sweeping (the PR-6 _write_results leak, fixed)
+# ---------------------------------------------------------------------------
+
+def test_never_polled_results_age_out_and_are_counted():
+    srv, db = mk_server(write_batch=1, read_batch=1)
+    srv.submit_write([CreateVertex("actor", 777)])       # closes immediately
+    srv.submit_query(q_chain(0))                         # wave of one
+    assert srv._write_results and srv._read_results
+    # force-expire instead of sleeping past a tiny ttl: deterministic on
+    # loaded CI machines
+    for exp in (srv._write_exp, srv._read_exp):
+        for k in exp:
+            exp[k] = 0.0
+    srv.pump()                                           # sweep runs
+    assert not srv._write_results and not srv._write_exp
+    assert not srv._read_results and not srv._read_exp
+    assert srv.stats["dropped_write_results"] == 1
+    assert srv.stats["dropped_read_results"] == 1
+
+
+def test_polled_results_do_not_leak_expiry_entries():
+    srv, db = mk_server(write_batch=1, read_batch=1)
+    wid = srv.submit_write([CreateVertex("actor", 778)])
+    qid = srv.submit_query(q_chain(0))
+    assert srv.write_result(wid)["status"] == "COMMITTED"
+    assert srv.query_result(qid)["status"] == "OK"
+    assert not srv._write_exp and not srv._read_exp
+    assert srv.stats["dropped_write_results"] == 0
+    assert srv.stats["dropped_read_results"] == 0
