@@ -1,0 +1,70 @@
+"""Hybrid vector+graph benchmark: the fused ``Nearest`` probe wave.
+
+The claim the Nearest operator makes is the same amortization claim as the
+rest of the serving tier: a *batch* of k-NN-seeded expansions shares one
+``knn_topk`` distance+top-k pass, one lookup wave, and one hop wave, so
+per-query cost at batch 16 lands well under batch 1.  Two rows pin it:
+
+* ``knn_expand_b1``  — one ``{"nearest": ...} -> 1-hop count`` query alone;
+* ``knn_expand_b16`` — 16 of them (distinct query vectors) as one fused
+  program group; the ``derived`` field records the measured per-query
+  speedup.  ``tests/test_vector.py::test_knn_amortization_gate`` enforces
+  the <= 0.5x gate on the ref backend; these rows keep the number
+  observable across commits (the BENCH_*.json trajectory + compare gate).
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+
+BATCH = 16
+
+
+def _db(n_docs=256, n_tags=16, d=8, seed=7):
+    cfg = StoreConfig(n_shards=4, cap_v=1024, cap_e=8192, cap_delta=512,
+                      cap_idx=1024, cap_idx_delta=512, cap_vec=512,
+                      d_f32=d, d_i32=2)
+    db = GraphDB(cfg)
+    fa = tuple(f"f{i}" for i in range(d))
+    db.vertex_type("doc", f_attrs=fa, i_attrs=("x", "y"))
+    db.vertex_type("tag", f_attrs=fa, i_attrs=("x", "y"))
+    db.edge_type("doc.tag")
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n_docs, d)).astype(np.float32)
+    docs = [db.create_vertex("doc", i,
+                             dict(zip(fa, map(float, emb[i])), x=i, y=0))
+            for i in range(n_docs)]
+    tags = [db.create_vertex("tag", 10_000 + i) for i in range(n_tags)]
+    t = db.create_transaction()
+    for i, g in enumerate(docs):
+        db.create_edge(g, tags[i % n_tags], "doc.tag", txn=t)
+        db.create_edge(g, tags[(i * 7 + 3) % n_tags], "doc.tag", txn=t)
+    db.write([t])
+    db.vector_index("doc")
+    return db, rng, d
+
+
+def _q(vec, k=8):
+    return {"nearest": {"type": "doc", "vector": [float(x) for x in vec],
+                        "k": k},
+            "_out_edge": {"type": "doc.tag",
+                          "_target": {"type": "tag", "select": "count"}}}
+
+
+def run(smoke: bool = False) -> None:
+    db, rng, d = _db(n_docs=128 if smoke else 256)
+    qs = [_q(rng.normal(size=d)) for _ in range(BATCH)]
+
+    def b1():
+        db.query([qs[0]])
+
+    def b16():
+        db.query(qs)
+
+    t1, _, _ = timeit(b1, warmup=2, iters=5 if smoke else 10)
+    tB, _, _ = timeit(b16, warmup=2, iters=5 if smoke else 10)
+    perq = tB / BATCH
+    emit("knn_expand_b1", t1 * 1e6, "B=1;nearest_k8_1hop")
+    emit("knn_expand_b16", perq * 1e6,
+         f"B={BATCH};perq_speedup={t1 / perq:.1f}x")

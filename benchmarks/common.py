@@ -31,6 +31,17 @@ CONTEXT: dict = {}
 
 def set_context(**kv) -> None:
     CONTEXT.update({k: v for k, v in kv.items() if v is not None})
+    reset_counters()
+
+
+def reset_counters() -> None:
+    """Zero the process-global planner/write observability counters so a
+    run's rows (hit rates, frontier peaks, overflow tallies) never carry
+    another run's traffic."""
+    from repro.core import writes
+    from repro.core.query import planner
+    planner.reset_stats()
+    writes.reset_stats()
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

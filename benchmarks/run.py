@@ -36,7 +36,8 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke and only is None:
-        only = {"queries", "reads", "multiquery", "writes", "serve"}
+        only = {"queries", "reads", "multiquery", "writes", "serve",
+                "vector"}
     if args.backend:
         # before any repro import: every suite resolves the env default
         os.environ["REPRO_BACKEND"] = args.backend
@@ -45,7 +46,7 @@ def main() -> None:
 
     from benchmarks import (bench_multiquery, bench_queries, bench_reads,
                             bench_scaling, bench_serve, bench_throughput,
-                            bench_writes)
+                            bench_vector, bench_writes)
     from benchmarks import common
     from repro.core import backend as backend_mod
     from repro.data.kg import build_film_kg
@@ -77,6 +78,8 @@ def main() -> None:
         bench_writes.run(smoke=args.smoke)
     if only is None or "serve" in only:
         bench_serve.run(smoke=args.smoke)
+    if only is None or "vector" in only:
+        bench_vector.run(smoke=args.smoke)
     if only is None or "scaling" in only:
         bench_scaling.run()
     wall = time.time() - t0

@@ -73,6 +73,7 @@ class StoreConfig:
     cap_delta: int = 1024        # edge delta-log entries per shard
     cap_idx: int = 2048          # primary-index entries per shard
     cap_idx_delta: int = 512     # primary-index delta entries per shard
+    cap_vec: int = 0             # vector-index entries per shard (0 = off)
     d_f32: int = 4               # float32 attribute columns per vertex
     d_i32: int = 4               # int32 attribute columns per vertex
     d_ef32: int = 0              # float32 attribute columns per edge

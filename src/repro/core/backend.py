@@ -173,3 +173,19 @@ def sort_pairs(k1, k2, *, backend: Backend):
         return _k(k1, k2, interpret=backend.interpret)
     from repro.kernels.dedup_compact.ref import sort_pairs as _r
     return _r(k1, k2)
+
+
+def knn_topk(vecs, emb, gid, vtype, create, delete, q_vt, q_ts, k: int, *,
+             backend: Backend):
+    """Batched squared-L2 distance + per-query top-k over the vector index
+    (the `Nearest` probe wave).  Entries are filtered by type and MVCC
+    visibility per query; ties break by ascending gid, invalid slots come
+    back as (+inf, I32MAX).  Both paths are bit-identical — the pallas
+    kernel streams VMEM-resident embedding tiles through a running two-key
+    bitonic top-k merge."""
+    if backend.is_pallas:
+        from repro.kernels.knn_topk.kernel import knn_topk as _k
+        return _k(vecs, emb, gid, vtype, create, delete, q_vt, q_ts, k,
+                  interpret=backend.interpret)
+    from repro.kernels.knn_topk.ref import knn_topk as _r
+    return _r(vecs, emb, gid, vtype, create, delete, q_vt, q_ts, k)

@@ -63,10 +63,13 @@ class GraphDB:
         self.dl_count = np.zeros(S, np.int64)        # delta-log fill mirrors
         self.il_count = np.zeros(S, np.int64)
         self.xd_count = np.zeros(S, np.int64)
+        self.vx_count = np.zeros(S, np.int64)        # vector-index fill mirror
+        self._vindexed: set[int] = set()             # vector-indexed type_ids
+        self._vx_pos: dict[int, tuple[int, int]] = {}  # gid -> (pos, type_id)
         self.replication_log = replication_log       # recovery hook (§4)
         self.stats = {"commits": 0, "aborts": 0, "compactions": 0,
                       "write_waves": 0, "bg_compactions": 0,
-                      "compaction_rebuilds": 0}
+                      "compaction_rebuilds": 0, "vindex_compactions": 0}
         self.active_query_ts: list[int] = []         # pins for GC (§2.2)
         # -- background compaction (§2.2 concurrent GC; §3.3 tasks) -----------
         # Structural epochs: a shadow compaction built at epoch E can only be
@@ -93,6 +96,14 @@ class GraphDB:
 
     def vt(self, name: str) -> VertexType:
         return self.catalog.proxy(self.tenant, self.graph, "v", name)
+
+    def vector_index(self, name: str) -> VertexType:
+        """Register a vertex type for `Nearest` queries (core/vindex.py).
+
+        The type's f32 payload row becomes its embedding; vertices alive now
+        are backfilled, future mutation waves maintain the index inline."""
+        from repro.core import vindex as vindex_mod
+        return vindex_mod.register(self, name)
 
     def et(self, name: str) -> EdgeType:
         return self.catalog.proxy(self.tenant, self.graph, "e", name)
@@ -313,6 +324,11 @@ class GraphDB:
         self.xd_count[:] = 0
         self.epochs["compact_index"] += 1
 
+    def run_vindex_compaction(self) -> None:
+        """Fold the vector index: age out entries dead before gc_ts."""
+        from repro.core import vindex as vindex_mod
+        vindex_mod.run_compaction(self)
+
     # -- background compaction: build a shadow, hand it off (§2.2) ----------
     def _kinds_needed(self) -> list:
         """Compaction kinds whose delta fill crossed the watermark."""
@@ -323,6 +339,9 @@ class GraphDB:
             kinds.append("edges")
         if self.xd_count.max(initial=0) >= wm * self.cfg.cap_idx_delta:
             kinds.append("index")
+        if (self._vindexed
+                and self.vx_count.max(initial=0) >= wm * self.cfg.cap_vec):
+            kinds.append("vindex")
         return kinds
 
     def _maybe_schedule_compaction(self) -> None:
@@ -356,6 +375,9 @@ class GraphDB:
             handle["shadow"]["index"] = index_mod.compact_index(
                 self.store, self.cfg, jnp.int32(handle["gc_ts"]))
             handle["marks"]["xd"] = self.xd_count.copy()
+        # "vindex" builds no shadow: the fold is a cheap host-side prefix
+        # compaction whose positions are referenced only by host metadata,
+        # so it runs synchronously at handoff and cannot go stale
         return handle
 
     def try_handoff(self, handle: dict) -> dict:
@@ -393,6 +415,9 @@ class GraphDB:
                 if ok:
                     self._handoff_index(handle)
                 out[kind] = ok
+            elif kind == "vindex":
+                self.run_vindex_compaction()
+                out[kind] = True
         return out
 
     def _handoff_edges(self, handle: dict) -> None:

@@ -18,6 +18,10 @@ Supported constructs:
   * ``select``                  — "count" | "*" | [attr, ...]  (terminal)
   * ``{"intersect": [q1, q2, ...], "select": ...}`` — star pattern (Q3):
     vertices reached by *every* branch.  Stars do not nest.
+  * ``{"nearest": {"type": t, "vector": [...], "k": n}, ...}`` — k-NN probe
+    root over ``t``'s vector index, replacing ``type``/``id``; the chain
+    (if any) continues from the k seed vertices.  Not allowed inside
+    intersect branches.
   * ``hints``                   — {"frontier"|"expand"|"results"|"bucket":
                                   n, ...}: per-plan §3.4 capacity overrides
                                   (the paper's optional query hints map 1:1
@@ -103,6 +107,9 @@ def parse(db, q: dict):
         for b in q["intersect"]:
             if "intersect" in b:
                 raise ParseError("nested intersect is not supported")
+            if "nearest" in b:
+                raise ParseError(
+                    "nearest is not supported in intersect branches")
             body, leaf = _parse_chain(db, b)
             if "hints" in b or "hints" in leaf[0]:
                 raise ParseError("hints belong on the star root, "
@@ -122,12 +129,17 @@ def parse(db, q: dict):
 def _parse_chain(db, q: dict):
     """Parse a chain document body.  Returns (body node, (leaf dict, leaf
     vertex-type name)) — the leaf carries the terminal/final filter."""
-    if "type" not in q or "id" not in q:
-        raise ParseError("query must start with {'type', 'id'}")
-    vt = db.vt(q["type"])
     node = q
-    vtype_name = q["type"]
-    body = ir.Scan(vtype=vt.type_id, key=int(q["id"]))
+    if "nearest" in q:
+        # k-NN probe root replacing {'type', 'id'}: the chain continues from
+        # the k seed vertices exactly as it would from a scanned one
+        body, vtype_name = _parse_nearest(db, q)
+    else:
+        if "type" not in q or "id" not in q:
+            raise ParseError("query must start with {'type', 'id'}")
+        vt = db.vt(q["type"])
+        vtype_name = q["type"]
+        body = ir.Scan(vtype=vt.type_id, key=int(q["id"]))
     while True:
         edge_key = ("_out_edge" if "_out_edge" in node
                     else "_in_edge" if "_in_edge" in node else None)
@@ -152,6 +164,34 @@ def _parse_chain(db, q: dict):
                              pred=_parse_pred(db, t_name, tgt["filter"]))
         node = tgt
         vtype_name = t_name
+
+
+def _parse_nearest(db, q: dict):
+    """Validate a ``"nearest"`` root document -> (ir.Nearest, vtype name)."""
+    spec = q["nearest"]
+    if "type" in q or "id" in q:
+        raise ParseError("'nearest' replaces the {'type', 'id'} root")
+    if not isinstance(spec, dict) or "type" not in spec or "vector" not in spec:
+        raise ParseError("nearest needs {'type', 'vector'[, 'k']}")
+    vt = db.vt(spec["type"])
+    if vt.type_id not in db._vindexed:
+        raise ParseError(
+            f"vertex type {spec['type']!r} has no vector index; "
+            "call GraphDB.vector_index() first")
+    k = spec.get("k", 1)
+    if isinstance(k, bool) or not isinstance(k, int) or k < 1:
+        raise ParseError(f"nearest k must be a positive int, got {k!r}")
+    vec = spec["vector"]
+    if (not isinstance(vec, (list, tuple))
+            or len(vec) != db.cfg.d_f32
+            or not all(isinstance(x, (int, float)) and not isinstance(x, bool)
+                       for x in vec)):
+        raise ParseError(
+            f"nearest vector must be {db.cfg.d_f32} numbers "
+            f"(the type's f32 payload width)")
+    body = ir.Nearest(vtype=vt.type_id, k=int(k),
+                      vector=tuple(float(x) for x in vec))
+    return body, spec["type"]
 
 
 def _terminal(db, node, body, vtype_name: Optional[str], root=None):

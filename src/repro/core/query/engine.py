@@ -126,13 +126,20 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
                          "(SPMD rows are shard-major; use the growing-"
                          "window continuation instead)")
 
+    # Nearest-rooted plans only exist as fused probe-wave rows (the
+    # per-plan-shape executors have no knn wave); a "per-query" oracle for
+    # them is a fused batch of one
+    any_nearest = any(p.nearest_k > 0 for lo in lowered
+                      for p in lo.plan.chain_units())
     uniform = (all(lo.plan == lowered[0].plan for lo in lowered[1:])
                and all(c == eff_caps[0] for c in eff_caps[1:])
                and len(set(ts_list)) == 1
-               and not any_cursor)
+               and not any_cursor
+               and not any_nearest)
     if fused is False and not uniform:
         raise ValueError("fused=False requires a uniform batch "
-                         "(one plan shape, caps, snapshot, no cursors)")
+                         "(one plan shape, caps, snapshot, no cursors, "
+                         "no nearest)")
     if fused is False and budget == "shared":
         raise ValueError("budget='shared' requires the fused planner")
     run_fused = bool(fused) or not uniform or budget == "shared"

@@ -73,6 +73,8 @@ class Plan:
     select_cols: tuple = ()              # column ids (parallel to kinds)
     branches: tuple["Plan", ...] = ()    # intersect-of-branches when set
     final_pred: Optional[Pred] = None
+    nearest_k: int = 0                   # >0: k-NN probe root (no start key);
+                                         # the query vector stays runtime data
 
     @property
     def is_intersect(self) -> bool:
@@ -90,7 +92,8 @@ class Plan:
             return ("intersect", tuple(b.signature() for b in self.branches),
                     self.terminal, self.select_kind, self.select_cols,
                     _psig(self.final_pred))
-        return ("chain", tuple((h.direction, _psig(h.pred)) for h in self.hops),
+        return ("chain", self.nearest_k,
+                tuple((h.direction, _psig(h.pred)) for h in self.hops),
                 self.terminal, self.select_kind, self.select_cols,
                 _psig(self.final_pred))
 
@@ -147,6 +150,20 @@ class Scan:
 
     def signature(self):
         return ("scan",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Nearest:
+    """k-NN probe root: seed the chain with the ``k`` nearest vector-indexed
+    vertices of ``vtype`` (squared-L2 over the f32 payload, ties broken by
+    ascending gid).  Like start keys, ``vector`` is runtime data — only
+    ``k`` enters the physical plan."""
+    vtype: int
+    k: int
+    vector: tuple                # tuple[float, ...] query embedding
+
+    def signature(self):
+        return ("nearest", self.k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,7 +228,7 @@ class Select:
         return ("select", self.kinds, self.cols, self.child.signature())
 
 
-Body = Union[Scan, Expand, Filter, Intersect]
+Body = Union[Scan, Nearest, Expand, Filter, Intersect]
 Node = Union[Body, Count, Select]
 TERMINALS = (Count, Select)
 
@@ -239,14 +256,18 @@ class Lowered:
     keys: tuple[int, ...]
     hints: CapHints = NO_HINTS
     cursor: int = -1
+    vecs: tuple = ()             # per chain unit: None | tuple[float, ...]
+                                 # (query embeddings for Nearest-rooted units;
+                                 # () from legacy adapters means all-None)
 
     @property
     def is_intersect(self) -> bool:
         return self.plan.is_intersect
 
 
-def _lower_chain(body) -> tuple[int, tuple[Hop, ...], int]:
-    """Walk a chain body (Scan at the leaf) -> (start_vtype, hops, key)."""
+def _lower_chain(body):
+    """Walk a chain body (Scan or Nearest at the leaf) ->
+    ``(start_vtype, hops, key, nearest_k, vec)``."""
     rev_hops: list[Hop] = []
     node = body
     pending_pred: Optional[Pred] = None
@@ -265,7 +286,12 @@ def _lower_chain(body) -> tuple[int, tuple[Hop, ...], int]:
         elif isinstance(node, Scan):
             if pending_pred is not None:
                 raise LoweringError("filter on the scan step")
-            return node.vtype, tuple(reversed(rev_hops)), node.key
+            return node.vtype, tuple(reversed(rev_hops)), node.key, 0, None
+        elif isinstance(node, Nearest):
+            if pending_pred is not None:
+                raise LoweringError("filter on the nearest step")
+            return (node.vtype, tuple(reversed(rev_hops)), -1,
+                    int(node.k), tuple(float(x) for x in node.vector))
         elif isinstance(node, Intersect):
             raise LoweringError("nested intersect is not supported")
         else:
@@ -291,7 +317,10 @@ def lower(root) -> Lowered:
             raise LoweringError("intersect needs at least two branches")
         chains, keys = [], []
         for br in body.branches:
-            vt, hops, key = _lower_chain(br)
+            vt, hops, key, nk, _vec = _lower_chain(br)
+            if nk:
+                raise LoweringError(
+                    "nearest is not supported in intersect branches")
             if not hops:
                 raise LoweringError("intersect branch needs a traversal step")
             chains.append(Plan(start_vtype=vt, hops=hops, terminal=terminal,
@@ -301,14 +330,17 @@ def lower(root) -> Lowered:
                     select_kind=kinds, select_cols=cols,
                     branches=tuple(chains), final_pred=final_pred)
         return Lowered(plan=plan, keys=tuple(keys), hints=root.hints,
-                       cursor=root.gid_cursor)
-    vt, hops, key = _lower_chain(body)
-    if not hops:
+                       cursor=root.gid_cursor,
+                       vecs=(None,) * len(chains))
+    vt, hops, key, nk, vec = _lower_chain(body)
+    if not hops and not nk:
+        # a Nearest root is itself the probe step; a bare Scan is not
         raise LoweringError("query needs at least one traversal step")
     plan = Plan(start_vtype=vt, hops=hops, terminal=terminal,
-                select_kind=kinds, select_cols=cols, final_pred=final_pred)
+                select_kind=kinds, select_cols=cols, final_pred=final_pred,
+                nearest_k=nk)
     return Lowered(plan=plan, keys=(key,), hints=root.hints,
-                   cursor=root.gid_cursor)
+                   cursor=root.gid_cursor, vecs=(vec,))
 
 
 def from_legacy(plan: Plan, key_or_keys) -> Lowered:

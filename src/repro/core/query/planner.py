@@ -375,6 +375,18 @@ FRONTIER_STATS = {"per_query_peak_bytes": 0, "shared_peak_bytes": 0}
 OVERFLOW_STATS = {"failed_queries": 0, "shared_ovf_queries": 0}
 
 
+def reset_stats() -> None:
+    """Zero the observability counters (NOT the program cache).
+
+    The counters are process-global while compiled programs are shared, so
+    a fresh ``GraphDB``/``A1Server`` (and each benchmark run) must reset
+    them or its hit-rate / overflow assertions read the previous
+    instance's traffic."""
+    for d in (CACHE_STATS, FRONTIER_STATS, OVERFLOW_STATS):
+        for k in d:
+            d[k] = 0
+
+
 def _ceil_sqrt(n: int) -> int:
     import math
     return math.isqrt(max(0, int(n) - 1)) + 1
@@ -393,7 +405,12 @@ def shared_budget(n_units: int, per_cap: int, explicit: int = 0) -> int:
     r = max(1, int(n_units))
     if explicit:
         return min(int(explicit), r * per_cap)
-    auto = max(_pow2ceil(per_cap * _ceil_sqrt(r)), _pow2ceil(r))
+    # round the sqrt term only: per_cap is already pow2, so pow2-rounding
+    # the *product* doubled the pool for every non-pow2 ceil(sqrt(R))
+    # (R=9, per_cap=64 -> 256 instead of the intended 192).  The floor is
+    # plain R — one slot per unit — not pow2ceil(R), which overshot the
+    # policy curve the same way whenever R > per_cap**2
+    auto = max(per_cap * _ceil_sqrt(r), r)
     return min(r * per_cap, auto)
 
 
@@ -422,9 +439,22 @@ def index_window(db) -> int:
 _delta_windowed = window_shard_major
 
 
+def _nearest_tables(chains, F: int):
+    """Static k-NN probe tables: per-unit k (0 = scan-rooted), the batch
+    KMAX, and the static ``k <= frontier`` check."""
+    kvec = np.array([c.nearest_k for c in chains], np.int32)
+    has_nearest = bool((kvec > 0).any())
+    kmax = int(kvec.max()) if has_nearest else 0
+    if kmax > F:
+        raise ValueError(f"nearest k={kmax} exceeds the frontier cap {F}; "
+                         "raise caps.frontier (or the 'frontier' hint)")
+    return kvec, has_nearest, kmax
+
+
 def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                   backend: backend_mod.Backend = backend_mod.REF,
-                  dwin: Optional[int] = None, xwin: Optional[int] = None):
+                  dwin: Optional[int] = None, xwin: Optional[int] = None,
+                  vwin: Optional[int] = None):
     """Build the jitted fused-wave program for one batch shape.
 
     ``plans`` is a tuple of logical plans (chains and/or stars) sharing a
@@ -432,9 +462,15 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     query) and per-query snapshot timestamps stay runtime data, so any
     same-shape batch reuses the compiled program.  ``dwin``/``xwin`` are the
     static edge / primary-index delta windows (see :func:`delta_window`,
-    :func:`index_window`)."""
+    :func:`index_window`); ``vwin`` is the vector-index window
+    (``vindex.vindex_window``), only used — and only part of the cache key —
+    when the batch holds ``Nearest``-rooted units, whose programs take an
+    extra ``vecs`` operand: ``run(store, keys, vecs, valid_in, ts_q,
+    cur_q)``."""
+    from repro.core import vindex as vindex_mod
+
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
-    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, "local")
+    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, vwin, "local")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -450,17 +486,43 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     start_vt = jnp.asarray([c.start_vtype for c in chains], jnp.int32)
     terminal = plans[0].terminal
     select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
+    kvec_np, has_nearest, KMAX = _nearest_tables(chains, F)
+    vw = (min(cfg.cap_vec if vwin is None else vwin, cfg.cap_vec)
+          if has_nearest else 0)
 
-    @jax.jit
-    def run(store, keys, valid_in, ts_q, cur_q):
+    def _body(store, keys, vecs, valid_in, ts_q, cur_q):
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
         failed_r = jnp.zeros((R,), bool)
         # ---- lookup wave: one probe for every chain unit ------------------
-        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
+        # Nearest-rooted units skip the primary index; their seeds come from
+        # the k-NN probe below
+        nmask = jnp.asarray(kvec_np > 0)
+        look_ok = valid_in & ~nmask if has_nearest else valid_in
+        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, look_ok,
                                         ts_r, backend=backend, xd_win=xwin)
-        g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(
-            jnp.where(found & valid_in, gids0, PAD))
-        valid = g != PAD
+        scan_col = jnp.where(found & look_ok, gids0, PAD)
+        if has_nearest:
+            # ---- k-NN probe wave: one batched distance+top-k kernel pass
+            # over the windowed embedding pool; per-unit k masks columns of
+            # the shared top-KMAX result.  Seeds land sorted-unique
+            # ascending via _dedup_rows — the frontier region invariant —
+            # and ties are already gid-deterministic from the kernel.
+            vx_g, vx_vt, vx_cr, vx_dl, vx_emb = vindex_mod.window_arrays(
+                store, cfg, vw)
+            _, knn_g = backend_mod.knn_topk(
+                vecs, vx_emb, vx_g, vx_vt, vx_cr, vx_dl, start_vt, ts_r,
+                KMAX, backend=backend)
+            colk = jnp.arange(KMAX, dtype=jnp.int32)[None, :]
+            kvec = jnp.asarray(kvec_np)
+            seeds_ok = (nmask[:, None] & (colk < kvec[:, None])
+                        & (knn_g != I32MAX) & valid_in[:, None])
+            cand = jnp.concatenate(
+                [scan_col[:, None], jnp.where(seeds_ok, knn_g, PAD)], axis=1)
+            g, valid, ovf = _dedup_rows(cand, cand != PAD, F, backend)
+            failed_r = failed_r | ovf
+        else:
+            g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(scan_col)
+            valid = g != PAD
 
         for wave in waves:
             act = jnp.asarray(wave.act)
@@ -526,6 +588,14 @@ def compile_batch(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                 store, cfg.row_of_gid, g, valid, ts_q, select, K)
             out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
         return out
+
+    if has_nearest:
+        run = jax.jit(_body)
+    else:
+        # nearest-free batches keep the historical 5-operand signature
+        @jax.jit
+        def run(store, keys, valid_in, ts_q, cur_q):
+            return _body(store, keys, None, valid_in, ts_q, cur_q)
 
     _cache_put(key, run)
     return run
@@ -626,6 +696,14 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
     dwin = delta_window(db)
     xwin = index_window(db)
     cursors = [-1] * Q if cursors is None else list(cursors)
+    # the vindex window is computed once per call and only when some plan is
+    # Nearest-rooted — nearest-free batches keep their existing cache keys
+    any_nearest = any(c.nearest_k > 0 for lo in lowered
+                      for c in lo.plan.chain_units())
+    vwin = None
+    if any_nearest:
+        from repro.core import vindex as vindex_mod
+        vwin = vindex_mod.vindex_window(db)
     for caps_g, idxs in _fusion_groups(lowered, eff_caps):
         plans_g = tuple(lowered[i].plan for i in idxs)
         keys = jnp.asarray([k for i in idxs for k in lowered[i].keys],
@@ -633,6 +711,19 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
         ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)
         cur = jnp.asarray([cursors[i] for i in idxs], jnp.int32)
         R = int(keys.shape[0])
+        grp_nearest = any(c.nearest_k > 0 for p in plans_g
+                          for c in p.chain_units())
+        vw_g = vwin if grp_nearest else None
+        if grp_nearest:
+            # (R, d_f32) query vectors, unit-major parallel to ``keys``
+            # (zeros for scan-rooted units — their knn columns are masked)
+            d = db.cfg.d_f32
+            vrows = []
+            for i in idxs:
+                units = lowered[i].plan.chain_units()
+                lv = lowered[i].vecs or (None,) * len(units)
+                vrows += [v if v is not None else (0.0,) * d for v in lv]
+            vecs = jnp.asarray(np.asarray(vrows, np.float32))
         if budget == "shared":
             FS = shared_budget(R, caps_g.frontier, caps_g.shared_frontier)
             FRONTIER_STATS["shared_peak_bytes"] = max(
@@ -640,20 +731,23 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
             if mesh is not None:
                 fn = planner_shared.compile_batch_shared_spmd(
                     db.cfg, plans_g, caps_g, mesh, storage_axes, be,
-                    dwin, xwin)
+                    dwin, xwin, vw_g)
             else:
                 fn = planner_shared.compile_batch_shared(
-                    db.cfg, plans_g, caps_g, be, dwin, xwin)
+                    db.cfg, plans_g, caps_g, be, dwin, xwin, vw_g)
         else:
             FRONTIER_STATS["per_query_peak_bytes"] = max(
                 FRONTIER_STATS["per_query_peak_bytes"],
                 4 * R * caps_g.frontier)
             if mesh is not None:
                 fn = compile_batch_spmd(db.cfg, plans_g, caps_g, mesh,
-                                        storage_axes, be, dwin, xwin)
+                                        storage_axes, be, dwin, xwin, vw_g)
             else:
-                fn = compile_batch(db.cfg, plans_g, caps_g, be, dwin, xwin)
-        out.put(idxs, fn(db.store, keys, jnp.ones((R,), bool), ts, cur))
+                fn = compile_batch(db.cfg, plans_g, caps_g, be, dwin, xwin,
+                                   vw_g)
+        args = ((db.store, keys, vecs) if grp_nearest
+                else (db.store, keys))
+        out.put(idxs, fn(*args, jnp.ones((R,), bool), ts, cur))
     return out.result()
 
 
@@ -725,7 +819,8 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                        mesh, storage_axes=("data", "model"),
                        backend: backend_mod.Backend = backend_mod.REF,
                        dwin: Optional[int] = None,
-                       xwin: Optional[int] = None):
+                       xwin: Optional[int] = None,
+                       vwin: Optional[int] = None):
     """Fused-wave program on a mesh: the §3.4 coordinator/worker protocol
     for a whole heterogeneous batch — stars included — in one SPMD
     program."""
@@ -735,7 +830,7 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
 
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
     key = (cfg, plans, caps, len(plans), id(mesh), storage_axes, backend,
-           dwin, xwin, "spmd")
+           dwin, xwin, vwin, "spmd")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -752,6 +847,9 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     start_vt_np = np.array([c.start_vtype for c in chains], np.int32)
     terminal = plans[0].terminal
     select = tuple(zip(plans[0].select_kind, plans[0].select_cols))
+    kvec_np, has_nearest, KMAX = _nearest_tables(chains, F)
+    vw = (min(cfg.cap_vec if vwin is None else vwin, cfg.cap_vec)
+          if has_nearest else 0)
     # pending owner-side checks: wave w validates what wave w-1 emitted
     # (w=0 validates the index scan's start vertices); units parked at
     # wave w keep -1/no-pred entries.  The *last* hop's check runs in the
@@ -768,23 +866,55 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             pend_preds.append(_pred_groups(
                 [(ri, c.hops[w - 1].pred, R) for ri, c in enumerate(chains)
                  if len(c.hops) > w and c.hops[w - 1].pred]))
-    fin_tvt = np.array([c.hops[-1].target_vtype for c in chains], np.int32)
+    # zero-hop units (Nearest-rooted with no chain) owe only the start-type
+    # check, which their seeds satisfy by construction — an idempotent no-op
+    fin_tvt = np.array([c.hops[-1].target_vtype if c.hops else c.start_vtype
+                        for c in chains], np.int32)
     fin_preds = _pred_groups([(ri, c.hops[-1].pred, R)
                               for ri, c in enumerate(chains)
-                              if c.hops[-1].pred])
+                              if c.hops and c.hops[-1].pred])
 
     def _local_rows(st, g, valid):
         return jnp.where(valid, g // S, 0)
 
-    def body(st, keys, valid_in, ts_q, cur_q):
+    def body(st, keys, vecs, valid_in, ts_q, cur_q):
         me = jax.lax.axis_index(axes).astype(jnp.int32)
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))         # (R,) per unit
         failed_r = jnp.zeros((R,), bool)
+        nmask = jnp.asarray(kvec_np > 0)
+        look_ok = valid_in & ~nmask if has_nearest else valid_in
         g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
-                           valid_in, ts_r, backend, xd_win=xwin)
-        g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(
-            jnp.where(g0 >= 0, g0, PAD))
-        valid = g != PAD
+                           look_ok, ts_r, backend, xd_win=xwin)
+        scan_col = jnp.where(g0 >= 0, g0, PAD)
+        if has_nearest:
+            # distributed k-NN probe: each shard scores its local embedding
+            # block, the per-shard top-KMAX lists all_gather + merge into
+            # one global selection (identical on every shard — each shard's
+            # contribution to the global top-k is within its local top-k),
+            # then a shard keeps only the seeds it owns — matching the
+            # owner-resident pair invariant _lookup_local establishes.
+            dd, gg = backend_mod.knn_topk(
+                vecs, st.vx_emb[:vw], st.vx_gid[:vw], st.vx_vtype[:vw],
+                st.vx_create[:vw], st.vx_delete[:vw],
+                jnp.asarray(start_vt_np), ts_r, KMAX, backend=backend)
+            ad = jax.lax.all_gather(dd, axes)             # (S, R, KMAX)
+            ag0 = jax.lax.all_gather(gg, axes)
+            ad = ad.transpose(1, 0, 2).reshape(R, -1)
+            ag0 = ag0.transpose(1, 0, 2).reshape(R, -1)
+            _, gs = jax.lax.sort((ad, ag0), dimension=1, num_keys=2)
+            gsel = gs[:, :KMAX]
+            colk = jnp.arange(KMAX, dtype=jnp.int32)[None, :]
+            kvec = jnp.asarray(kvec_np)
+            seeds_ok = (nmask[:, None] & (colk < kvec[:, None])
+                        & (gsel != I32MAX) & valid_in[:, None]
+                        & ((gsel % S) == me))
+            cand = jnp.concatenate(
+                [scan_col[:, None], jnp.where(seeds_ok, gsel, PAD)], axis=1)
+            g, valid, ovf = _dedup_rows(cand, cand != PAD, F, backend)
+            failed_r = failed_r | ovf
+        else:
+            g = jnp.full((R, F), PAD, jnp.int32).at[:, 0].set(scan_col)
+            valid = g != PAD
 
         for w, wave in enumerate(waves):
             act = jnp.asarray(wave.act)
@@ -920,8 +1050,16 @@ def compile_batch_spmd(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     else:
         out_specs.update(rows_gid=P(), truncated=P(),
                          attrs={k: P() for k in select})
-    fn = jax.jit(compat.shard_map(
-        body, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
-        out_specs=out_specs, check_vma=False))
+    if has_nearest:
+        fn = jax.jit(compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(store_specs, P(), P(), P(), P(), P()),
+            out_specs=out_specs, check_vma=False))
+    else:
+        def body5(st, keys, valid_in, ts_q, cur_q):
+            return body(st, keys, None, valid_in, ts_q, cur_q)
+        fn = jax.jit(compat.shard_map(
+            body5, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
+            out_specs=out_specs, check_vma=False))
     _cache_put(key, fn)
     return fn

@@ -51,9 +51,9 @@ from repro.core.edges import TILE
 from repro.core.query.executor import (I32MAX, QueryCaps, build_select,
                                        eval_pred, sort_pairs)
 from repro.core.query.planner import (PAD, _cache_get, _cache_put,
-                                      _final_pred_groups, _pred_groups,
-                                      _unit_tables, _wave_tables,
-                                      shared_budget)
+                                      _final_pred_groups, _nearest_tables,
+                                      _pred_groups, _unit_tables,
+                                      _wave_tables, shared_budget)
 from repro.core.store import GraphStore, visible, window_shard_major
 
 
@@ -247,13 +247,18 @@ def _ext(a, fill):
 def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
                          backend: backend_mod.Backend = backend_mod.REF,
                          dwin: Optional[int] = None,
-                         xwin: Optional[int] = None):
+                         xwin: Optional[int] = None,
+                         vwin: Optional[int] = None):
     """Build the jitted shared-frontier program for one batch shape.
 
-    Same grouping/caching contract as ``planner.compile_batch``; the
+    Same grouping/caching contract as ``planner.compile_batch`` (including
+    the ``vwin``/``vecs`` extension for ``Nearest``-rooted units); the
     frontier is the flat shared pool described in the module docstring."""
+    from repro.core import vindex as vindex_mod
+
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
-    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, "shared-local")
+    key = (cfg, plans, caps, len(plans), backend, dwin, xwin, vwin,
+           "shared-local")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -273,20 +278,43 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
     start_vt = jnp.asarray([c.start_vtype for c in chains], jnp.int32)
     row2q_x = jnp.asarray(np.concatenate([row2q, [Q]]), jnp.int32)
     terminal = plans[0].terminal
+    kvec_np, has_nearest, KMAX = _nearest_tables(chains, F)
+    vw = (min(cfg.cap_vec if vwin is None else vwin, cfg.cap_vec)
+          if has_nearest else 0)
     _delta_windowed = window_shard_major
 
-    @jax.jit
-    def run(store, keys, valid_in, ts_q, cur_q):
+    def _body(store, keys, vecs, valid_in, ts_q, cur_q):
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))          # (R,) per unit
         ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
         failed_r = jnp.zeros((R,), bool)
         shared_r = jnp.zeros((R,), bool)     # subset caused by shared pools
         # ---- lookup wave --------------------------------------------------
-        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, valid_in,
+        nmask = jnp.asarray(kvec_np > 0)
+        look_ok = valid_in & ~nmask if has_nearest else valid_in
+        gids0, found = index_mod.lookup(store, cfg, start_vt, keys, look_ok,
                                         ts_r, backend=backend, xd_win=xwin)
-        seg0 = jnp.where(found & valid_in, jnp.arange(R, dtype=jnp.int32), R)
-        gid0 = jnp.where(found & valid_in, gids0, PAD)
-        seg, gid, fu, fs = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS,
+        seg0 = jnp.where(found & look_ok, jnp.arange(R, dtype=jnp.int32), R)
+        gid0 = jnp.where(found & look_ok, gids0, PAD)
+        if has_nearest:
+            # k-NN seeds enter the flat (seg, gid) pool alongside the scan
+            # probes; _dedup_pairs restores the sorted-run invariant
+            vx_g, vx_vt, vx_cr, vx_dl, vx_emb = vindex_mod.window_arrays(
+                store, cfg, vw)
+            _, knn_g = backend_mod.knn_topk(
+                vecs, vx_emb, vx_g, vx_vt, vx_cr, vx_dl, start_vt, ts_r,
+                KMAX, backend=backend)
+            colk = jnp.arange(KMAX, dtype=jnp.int32)[None, :]
+            kvec = jnp.asarray(kvec_np)
+            seeds_ok = (nmask[:, None] & (colk < kvec[:, None])
+                        & (knn_g != I32MAX) & valid_in[:, None])
+            seg_n = jnp.where(seeds_ok,
+                              jnp.arange(R, dtype=jnp.int32)[:, None], R)
+            cand_s = jnp.concatenate([seg0, seg_n.reshape(-1)])
+            cand_g = jnp.concatenate(
+                [gid0, jnp.where(seeds_ok, knn_g, PAD).reshape(-1)])
+        else:
+            cand_s, cand_g = seg0, gid0
+        seg, gid, fu, fs = _dedup_pairs(cand_s, cand_g, cand_s < R, R, F, FS,
                                         backend)
         failed_r = failed_r | fu | fs
         shared_r = shared_r | fs
@@ -389,6 +417,14 @@ def compile_batch_shared(cfg: StoreConfig, plans: tuple, caps: QueryCaps,
             out.update(rows_gid=rows_gid, attrs=attrs, truncated=trunc)
         return out
 
+    if has_nearest:
+        run = jax.jit(_body)
+    else:
+        # nearest-free batches keep the historical 5-operand signature
+        @jax.jit
+        def run(store, keys, valid_in, ts_q, cur_q):
+            return _body(store, keys, None, valid_in, ts_q, cur_q)
+
     _cache_put(key, run)
     return run
 
@@ -431,7 +467,8 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
                               storage_axes=("data", "model"),
                               backend: backend_mod.Backend = backend_mod.REF,
                               dwin: Optional[int] = None,
-                              xwin: Optional[int] = None):
+                              xwin: Optional[int] = None,
+                              vwin: Optional[int] = None):
     """Shared-frontier waves on a mesh: the §3.4 coordinator/worker
     protocol with one shared (seg, gid) pool per shard."""
     from jax.sharding import PartitionSpec as P
@@ -440,7 +477,7 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
 
     dwin = cfg.cap_delta if dwin is None else min(dwin, cfg.cap_delta)
     key = (cfg, plans, caps, len(plans), id(mesh), storage_axes, backend,
-           dwin, xwin, "shared-spmd")
+           dwin, xwin, vwin, "shared-spmd")
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -476,21 +513,53 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
             pend_preds.append(_pred_groups(
                 [(ri, c.hops[w - 1].pred, R) for ri, c in enumerate(chains)
                  if len(c.hops) > w and c.hops[w - 1].pred]))
-    fin_tvt = np.array([c.hops[-1].target_vtype for c in chains], np.int32)
+    # zero-hop units (Nearest-rooted with no chain) owe only the start-type
+    # check, which their seeds satisfy by construction — an idempotent no-op
+    fin_tvt = np.array([c.hops[-1].target_vtype if c.hops else c.start_vtype
+                        for c in chains], np.int32)
     fin_preds = _pred_groups([(ri, c.hops[-1].pred, R)
                               for ri, c in enumerate(chains)
-                              if c.hops[-1].pred])
+                              if c.hops and c.hops[-1].pred])
+    kvec_np, has_nearest, KMAX = _nearest_tables(chains, F)
+    vw = (min(cfg.cap_vec if vwin is None else vwin, cfg.cap_vec)
+          if has_nearest else 0)
 
-    def body(st, keys, valid_in, ts_q, cur_q):
+    def body(st, keys, vecs, valid_in, ts_q, cur_q):
         me = jax.lax.axis_index(axes).astype(jnp.int32)
         ts_r = jnp.take(ts_q, jnp.asarray(row2q))
         ts_x = jnp.concatenate([ts_r, jnp.zeros((1,), ts_r.dtype)])
         failed_r = jnp.zeros((R,), bool)
         shared_r = jnp.zeros((R,), bool)     # subset caused by shared pools
+        nmask = jnp.asarray(kvec_np > 0)
+        look_ok = valid_in & ~nmask if has_nearest else valid_in
         g0 = _lookup_local(st, cfg, me, jnp.asarray(start_vt_np), keys,
-                           valid_in, ts_r, backend, xd_win=xwin)
+                           look_ok, ts_r, backend, xd_win=xwin)
         seg0 = jnp.where(g0 >= 0, jnp.arange(R, dtype=jnp.int32), R)
         gid0 = jnp.where(g0 >= 0, g0, PAD)
+        if has_nearest:
+            # distributed k-NN probe (same merge as planner.compile_batch_
+            # spmd): local scores -> all_gather -> global top-KMAX, each
+            # shard keeps the seeds it owns, seeds join the flat pool
+            dd, gg = backend_mod.knn_topk(
+                vecs, st.vx_emb[:vw], st.vx_gid[:vw], st.vx_vtype[:vw],
+                st.vx_create[:vw], st.vx_delete[:vw],
+                jnp.asarray(start_vt_np), ts_r, KMAX, backend=backend)
+            ad = jax.lax.all_gather(dd, axes)             # (S, R, KMAX)
+            ag0 = jax.lax.all_gather(gg, axes)
+            ad = ad.transpose(1, 0, 2).reshape(R, -1)
+            ag0 = ag0.transpose(1, 0, 2).reshape(R, -1)
+            _, gs = jax.lax.sort((ad, ag0), dimension=1, num_keys=2)
+            gsel = gs[:, :KMAX]
+            colk = jnp.arange(KMAX, dtype=jnp.int32)[None, :]
+            kvec = jnp.asarray(kvec_np)
+            seeds_ok = (nmask[:, None] & (colk < kvec[:, None])
+                        & (gsel != I32MAX) & valid_in[:, None]
+                        & ((gsel % S) == me))
+            seg_n = jnp.where(seeds_ok,
+                              jnp.arange(R, dtype=jnp.int32)[:, None], R)
+            seg0 = jnp.concatenate([seg0, seg_n.reshape(-1)])
+            gid0 = jnp.concatenate(
+                [gid0, jnp.where(seeds_ok, gsel, PAD).reshape(-1)])
         seg, gid, fu, fs = _dedup_pairs(seg0, gid0, seg0 < R, R, F, FS,
                                         backend)
         failed_r = failed_r | fu | fs
@@ -679,8 +748,16 @@ def compile_batch_shared_spmd(cfg: StoreConfig, plans: tuple,
     else:
         out_specs.update(rows_gid=P(), truncated=P(),
                          attrs={k: P() for k in select})
-    fn = jax.jit(compat.shard_map(
-        body, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
-        out_specs=out_specs, check_vma=False))
+    if has_nearest:
+        fn = jax.jit(compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(store_specs, P(), P(), P(), P(), P()),
+            out_specs=out_specs, check_vma=False))
+    else:
+        def body5(st, keys, valid_in, ts_q, cur_q):
+            return body(st, keys, None, valid_in, ts_q, cur_q)
+        fn = jax.jit(compat.shard_map(
+            body5, mesh=mesh, in_specs=(store_specs, P(), P(), P(), P()),
+            out_specs=out_specs, check_vma=False))
     _cache_put(key, fn)
     return fn

@@ -158,6 +158,9 @@ class FastRestartCache:
             dl_count=db.dl_count.copy(),
             il_count=db.il_count.copy(),
             xd_count=db.xd_count.copy(),
+            vx_count=db.vx_count.copy(),
+            vindexed=set(db._vindexed),
+            vx_pos=dict(db._vx_pos),
             catalog=db.catalog,
             cfg=db.cfg,
         )
@@ -181,10 +184,15 @@ class FastRestartCache:
         db.dl_count = s["dl_count"].copy()
         db.il_count = s["il_count"].copy()
         db.xd_count = s["xd_count"].copy()
+        # the vector-index slots live inside the held store tree; only the
+        # host-side mirrors need re-attaching (pre-vindex holds lack them)
+        db.vx_count = s.get("vx_count", np.zeros(db.cfg.n_shards, np.int64)).copy()
+        db._vindexed = set(s.get("vindexed", ()))
+        db._vx_pos = dict(s.get("vx_pos", {}))
         db.replication_log = None
         db.stats = {"commits": 0, "aborts": 0, "compactions": 0,
                     "write_waves": 0, "bg_compactions": 0,
-                    "compaction_rebuilds": 0}
+                    "compaction_rebuilds": 0, "vindex_compactions": 0}
         db.active_query_ts = []
         db.epochs = {"delete_e": 0, "delete_v": 0,
                      "compact_edges": 0, "compact_index": 0}

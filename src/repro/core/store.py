@@ -96,6 +96,13 @@ class GraphStore:
     xd_create: jax.Array  # (S*cap_idx_delta,) i32
     xd_delete: jax.Array  # (S*cap_idx_delta,) i32
     xd_count: jax.Array   # (S,) i32
+    # -- vector index: flat per-type embedding entries (core/vindex.py) ------
+    vx_gid: jax.Array     # (S*cap_vec,) i32 entry's vertex gid (NULL = empty)
+    vx_vtype: jax.Array   # (S*cap_vec,) i32 entry's vertex type
+    vx_create: jax.Array  # (S*cap_vec,) i32 MVCC create ts
+    vx_delete: jax.Array  # (S*cap_vec,) i32 MVCC delete ts (TS_INF = live)
+    vx_emb: jax.Array     # (S*cap_vec, d_f32) f32 embedding payload
+    vx_count: jax.Array   # (S,) i32 entries used per shard (prefix fill)
 
     def nbytes(self) -> int:
         return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(self))
@@ -110,6 +117,7 @@ def make_store(cfg: StoreConfig) -> GraphStore:
     S = cfg.n_shards
     V, E, D, X, XD = (S * cfg.cap_v, S * cfg.cap_e, S * cfg.cap_delta,
                       S * cfg.cap_idx, S * cfg.cap_idx_delta)
+    VX = S * cfg.cap_vec
     P = S * (cfg.cap_v + 1)
     return GraphStore(
         vtype=_full(V, NULL), vkey=_full(V, 0),
@@ -134,6 +142,9 @@ def make_store(cfg: StoreConfig) -> GraphStore:
         ix_create=_full(X, TS_INF), ix_delete=_full(X, TS_INF), ix_count=_full(S, 0),
         xd_vtype=_full(XD, TS_INF), xd_key=_full(XD, TS_INF), xd_gid=_full(XD, NULL),
         xd_create=_full(XD, TS_INF), xd_delete=_full(XD, TS_INF), xd_count=_full(S, 0),
+        vx_gid=_full(VX, NULL), vx_vtype=_full(VX, NULL),
+        vx_create=_full(VX, TS_INF), vx_delete=_full(VX, TS_INF),
+        vx_emb=jnp.zeros((VX, cfg.d_f32), jnp.float32), vx_count=_full(S, 0),
     )
 
 
@@ -142,6 +153,7 @@ def make_store_shapes(cfg: StoreConfig) -> GraphStore:
     S = cfg.n_shards
     V, E, D, X, XD = (S * cfg.cap_v, S * cfg.cap_e, S * cfg.cap_delta,
                       S * cfg.cap_idx, S * cfg.cap_idx_delta)
+    VX = S * cfg.cap_vec
     P = S * (cfg.cap_v + 1)
     sds = jax.ShapeDtypeStruct
     i32, f32 = jnp.int32, jnp.float32
@@ -166,6 +178,9 @@ def make_store_shapes(cfg: StoreConfig) -> GraphStore:
         ix_create=sds((X,), i32), ix_delete=sds((X,), i32), ix_count=sds((S,), i32),
         xd_vtype=sds((XD,), i32), xd_key=sds((XD,), i32), xd_gid=sds((XD,), i32),
         xd_create=sds((XD,), i32), xd_delete=sds((XD,), i32), xd_count=sds((S,), i32),
+        vx_gid=sds((VX,), i32), vx_vtype=sds((VX,), i32),
+        vx_create=sds((VX,), i32), vx_delete=sds((VX,), i32),
+        vx_emb=sds((VX, cfg.d_f32), f32), vx_count=sds((S,), i32),
     )
 
 

@@ -196,6 +196,16 @@ _CACHE: collections.OrderedDict = collections.OrderedDict()
 CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
+def reset_stats() -> None:
+    """Zero the module-global counters (the traced programs stay cached).
+
+    Stats are process-global while programs are shared across ``GraphDB``
+    instances, so a fresh server/bench run must reset explicitly or its
+    hit-rate telemetry inherits every prior instance's traffic."""
+    for k in CACHE_STATS:
+        CACHE_STATS[k] = 0
+
+
 def _cache_get(key):
     fn = _CACHE.get(key)
     if fn is not None:
@@ -340,6 +350,13 @@ def commit_wave(db, txns: Sequence, caps=None):
         db.run_compaction()
     if db.xd_count.max(initial=0) + n_cv + n_dv > cfg.cap_idx_delta:
         db.run_index_compaction()
+    if db._vindexed:
+        from repro.core import vindex as vindex_mod
+        need = vindex_mod.wave_demand(db, winners)
+        if np.any(db.vx_count + need > cfg.cap_vec):
+            db.run_vindex_compaction()
+            if np.any(db.vx_count + need > cfg.cap_vec):
+                raise CapacityError("vector index full; raise cap_vec")
 
     # 4) apply winners, chunked under the static batch caps; winners are
     #    mutually conflict-free, so chunked application at increasing
@@ -350,6 +367,9 @@ def commit_wave(db, txns: Sequence, caps=None):
         fn = _apply_program(cfg, shapes)
         db.store = fn(db.store, jnp.int32(ts), *args)
         db.clock = ts
+        if db._vindexed:
+            from repro.core import vindex as vindex_mod
+            vindex_mod.apply_wave(db, chunk, ts)
         if any(t.delete_e for t in chunk):
             db.epochs["delete_e"] += 1
         if any(t.delete_v for t in chunk):

@@ -1,0 +1,59 @@
+"""Reference batched k-NN: squared-L2 distance + per-query top-k.
+
+The oracle for the ``knn_topk`` pallas kernel.  Given a batch of query
+vectors and the flat vector-index arrays (``core/vindex.py``), returns for
+each query the ``k`` nearest *visible* entries of the requested vertex type.
+
+Distance is the gid-monotone surrogate ``||e||^2 - 2 <v, e>`` (the query's
+own ``||v||^2`` term is constant per row and dropped), so values can be
+negative.  Ties are broken by ascending gid via a two-key sort, which makes
+the selection deterministic and backend-independent.  Invalid slots come
+back as ``(+inf, I32MAX)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# plain int, NOT jnp.int32(...): this module is imported lazily from inside
+# jitted programs, and a module-level device constant created mid-trace
+# leaks a tracer
+I32MAX = 2**31 - 1
+
+
+def knn_topk(vecs, emb, gid, vtype, create, delete, q_vt, q_ts, k: int):
+    """Top-k nearest visible entries per query row.
+
+    vecs:   (R, D) f32 query vectors
+    emb:    (N, D) f32 index embeddings
+    gid:    (N,)   i32 entry vertex gid (NULL = empty slot)
+    vtype:  (N,)   i32 entry vertex type
+    create: (N,)   i32 MVCC create ts
+    delete: (N,)   i32 MVCC delete ts (TS_INF = live)
+    q_vt:   (R,)   i32 per-query type filter
+    q_ts:   (R,)   i32 per-query snapshot ts
+    k:      static int
+
+    Returns ``(dist (R, k) f32, gids (R, k) i32)`` sorted ascending by
+    ``(dist, gid)``; slots past the number of matches are ``(+inf, I32MAX)``.
+    """
+    R = vecs.shape[0]
+    vecs = vecs.astype(jnp.float32)
+    emb = emb.astype(jnp.float32)
+    ee = jnp.sum(emb * emb, axis=1)  # (N,)
+    ip = jnp.dot(vecs, emb.T, preferred_element_type=jnp.float32)  # (R, N)
+    ok = (
+        (gid >= 0)[None, :]
+        & (vtype[None, :] == q_vt[:, None])
+        & (create[None, :] <= q_ts[:, None])
+        & (q_ts[:, None] < delete[None, :])
+    )
+    # `+ 0.0` canonicalizes -0.0 so both backends sort identical bit patterns.
+    d = jnp.where(ok, (ee[None, :] - 2.0 * ip) + 0.0, jnp.inf)
+    g = jnp.where(ok, jnp.broadcast_to(gid[None, :], ok.shape), I32MAX)
+    ds, gs = jax.lax.sort((d, g), dimension=1, num_keys=2)
+    N = emb.shape[0]
+    if N < k:  # fewer index slots than requested neighbours: pad out
+        ds = jnp.pad(ds, ((0, 0), (0, k - N)), constant_values=jnp.inf)
+        gs = jnp.pad(gs, ((0, 0), (0, k - N)), constant_values=2**31 - 1)
+    return ds[:, :k], gs[:, :k]

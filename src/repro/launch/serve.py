@@ -183,6 +183,7 @@ class A1Server:
         self._tenant_inflight: collections.Counter = collections.Counter()
         self._closing = False               # read-wave reentrancy guard
         self._wave_ms = read_deadline_ms    # EWMA of recent wave wall time
+        self._wave_seeded = False           # EWMA holds a measured wall yet?
         self.breakers: dict[str, _Breaker] = {}
         self._breaker_cfg = (breaker_window, breaker_threshold,
                              breaker_cooldown)
@@ -202,6 +203,13 @@ class A1Server:
                       "planner_cache_hit_rate": 0.0,
                       "peak_frontier_bytes_per_query": 0,
                       "peak_frontier_bytes_shared": 0}
+        # the planner/write counters are process-global (programs are
+        # shared); a fresh server must not report the previous instance's
+        # hit rates, peaks, or overflow tallies
+        from repro.core import writes as writes_mod
+        from repro.core.query import planner as planner_mod
+        planner_mod.reset_stats()
+        writes_mod.reset_stats()
 
     # ------------------------------------------------------------------
     def execute(self, queries: list[dict], *, qclass: str = "q",
@@ -641,7 +649,13 @@ class A1Server:
         waves (writes and reads), sweep expired state, and run one
         maintenance task."""
         n = self._maybe_close_write_wave()
-        n += self._maybe_close_read_wave()
+        nr = self._maybe_close_read_wave()
+        if nr == 0:
+            # idle tick: decay the EWMA toward the deadline floor so a burst
+            # of slow waves long past doesn't inflate shed retry-after hints
+            # forever (_retry_after_ms trusts _wave_ms; stale is a lie)
+            self._wave_ms += 0.2 * (self.read_deadline_ms - self._wave_ms)
+        n += nr
         self._sweep()
         self.tasks.pump(1)
         return n
@@ -690,8 +704,14 @@ class A1Server:
                 except faults_mod.InjectedFault as e:
                     err = e
                     self.stats["wave_faults"] += 1
-            self._wave_ms = (0.7 * self._wave_ms
-                             + 0.3 * (time.monotonic() - t0) * 1e3)
+            wall = (time.monotonic() - t0) * 1e3
+            if self._wave_seeded:
+                self._wave_ms = 0.7 * self._wave_ms + 0.3 * wall
+            else:
+                # first completed wave: seed with the measurement instead of
+                # blending into the deadline-derived initial guess
+                self._wave_ms = wall
+                self._wave_seeded = True
             done = time.monotonic()
             for i, r in enumerate(wave):
                 self._tenant_inflight[r.tenant] -= 1

@@ -204,6 +204,84 @@ def prog_multiquery_parity():
     print("MQ_OK")
 
 
+def prog_knn_parity():
+    """The Nearest probe wave under shard_map: each shard computes a local
+    top-k over its vector-index block, all-gathers the (dist, gid) pairs,
+    and re-sorts — the seed set must be bit-identical to the local path,
+    for mixed Nearest+Scan batches on ref and pallas, per-query and shared
+    budgets, and across MVCC snapshots."""
+    import numpy as np
+    from repro.core.addressing import StoreConfig
+    from repro.core.graphdb import GraphDB
+    from repro.core.query.executor import QueryCaps
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    D = 4
+    cfg = StoreConfig(n_shards=8, cap_v=128, cap_e=1024, cap_delta=128,
+                      cap_idx=256, cap_idx_delta=64, cap_vec=64,
+                      d_f32=D, d_i32=2)
+    db = GraphDB(cfg)
+    fa = tuple(f"f{i}" for i in range(D))
+    db.vertex_type("doc", f_attrs=fa, i_attrs=("x", "y"))
+    db.vertex_type("tag")
+    db.edge_type("doc.tag")
+    rng = np.random.default_rng(5)
+    emb = rng.normal(size=(40, D)).astype(np.float32)
+    docs = [db.create_vertex("doc", i,
+                             dict(zip(fa, map(float, emb[i])), x=i, y=0))
+            for i in range(40)]
+    tags = [db.create_vertex("tag", 500 + i) for i in range(6)]
+    t = db.create_transaction()
+    for i, g in enumerate(docs):
+        db.create_edge(g, tags[i % 6], "doc.tag", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    db.vector_index("doc")
+    t1 = db.snapshot_ts()
+    for i in range(0, 40, 7):          # post-snapshot churn: delete/update
+        g, found = db.lookup_vertex("doc", i)
+        if found and i % 14 == 0:
+            db.delete_vertex(g)
+        elif found:
+            db.update_vertex(g, "doc",
+                             dict(zip(fa, map(float,
+                                              rng.normal(size=D)))))
+    t2 = db.snapshot_ts()
+
+    caps = QueryCaps(frontier=128, expand=512, bucket=64, results=16)
+    qn = lambda v, k, hop: (
+        {"nearest": {"type": "doc", "vector": [float(x) for x in v],
+                     "k": k},
+         "_out_edge": {"type": "doc.tag",
+                       "_target": {"type": "tag", "select": "count"}}}
+        if hop else
+        {"nearest": {"type": "doc", "vector": [float(x) for x in v],
+                     "k": k}, "select": ["key"]})
+    qs_scan = lambda i: {"type": "doc", "id": i,
+                         "_out_edge": {"type": "doc.tag",
+                                       "_target": {"type": "tag",
+                                                   "select": "count"}}}
+    queries = [qn(rng.normal(size=D), 4, True), qs_scan(1),
+               qn(rng.normal(size=D), 7, False), qs_scan(8),
+               qn(rng.normal(size=D), 1, True)]
+    ts = [t2, t2, t1, t1, t2]
+    rl = db.query(queries, caps=caps, read_ts=ts, fused=True)
+    for budget in (None, "shared"):
+        for be in ("ref", "pallas"):
+            rs = db.query(queries, caps=caps, mesh=mesh, backend=be,
+                          read_ts=ts, fused=True, budget=budget)
+            assert np.array_equal(rl.counts, rs.counts), \
+                (budget, be, rl.counts, rs.counts)
+            assert np.array_equal(rl.failed_q, rs.failed_q), (budget, be)
+            # the k-NN seed rows of query 2: set-equal (shard-major order)
+            kl = sorted(int(x) for x, g in zip(rl.rows[("key", 0)][2],
+                                               rl.rows_gid[2]) if g >= 0)
+            ks = sorted(int(x) for x, g in zip(rs.rows[("key", 0)][2],
+                                               rs.rows_gid[2]) if g >= 0)
+            assert kl == ks and len(kl) == 7, (budget, be, kl, ks)
+    print("KNN_OK")
+
+
 def prog_dedup_compact():
     """kernels/dedup_compact under shard_map: every shard sorts/compacts its
     own candidate block, ref and pallas-interpret bit-identical (the same

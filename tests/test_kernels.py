@@ -281,6 +281,102 @@ def test_edge_expand_property(degs, seed):
 
 
 # ---------------------------------------------------------------------------
+# knn_topk
+# ---------------------------------------------------------------------------
+KNN_I32MAX = 2**31 - 1
+
+
+def _knn_inputs(R, N, D, seed, n_types=3, ts_hi=10):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(R, D)).astype(np.float32)
+    emb = rng.normal(size=(N, D)).astype(np.float32)
+    gid = rng.integers(0, 4 * N, N).astype(np.int32)
+    gid[rng.random(N) < 0.2] = -1                      # empty slots
+    vtype = rng.integers(0, n_types, N).astype(np.int32)
+    create = rng.integers(0, ts_hi, N).astype(np.int32)
+    delete = np.where(rng.random(N) < 0.3,
+                      create + rng.integers(1, ts_hi, N),
+                      KNN_I32MAX).astype(np.int32)
+    q_vt = rng.integers(0, n_types, R).astype(np.int32)
+    q_ts = rng.integers(0, ts_hi, R).astype(np.int32)
+    return tuple(map(jnp.asarray,
+                     (vecs, emb, gid, vtype, create, delete, q_vt, q_ts)))
+
+
+@pytest.mark.parametrize("R,N,D,k", [(1, 1, 1, 1), (4, 37, 5, 8),
+                                     (16, 128, 8, 4), (7, 300, 64, 16),
+                                     (3, 5, 4, 16)])  # N < k: pad path
+def test_knn_topk_sweep(R, N, D, k):
+    from repro.kernels.knn_topk import ref
+    from repro.kernels.knn_topk.kernel import knn_topk
+    args = _knn_inputs(R, N, D, seed=R * 100 + N)
+    dk, gk = knn_topk(*args, k, interpret=True)
+    dr, gr = ref.knn_topk(*args, k)
+    # bit-identical, including the (+inf, I32MAX) invalid-slot padding
+    assert np.array_equal(np.asarray(dk), np.asarray(dr))
+    assert np.array_equal(np.asarray(gk), np.asarray(gr))
+
+
+def test_knn_topk_ties_break_by_gid():
+    """Duplicate embeddings produce equal distances; selection must order
+    them by ascending gid on both paths (the determinism contract)."""
+    from repro.kernels.knn_topk import ref
+    from repro.kernels.knn_topk.kernel import knn_topk
+    N, D, k = 12, 4, 6
+    emb = jnp.broadcast_to(jnp.asarray([1.0, -2.0, 0.5, 3.0], jnp.float32),
+                           (N, D))
+    gid = jnp.asarray([9, 3, 7, 1, 8, 2, 6, 0, 5, 4, 11, 10], jnp.int32)
+    live = jnp.zeros((N,), jnp.int32)
+    inf = jnp.full((N,), KNN_I32MAX, jnp.int32)
+    vecs = jnp.ones((2, D), jnp.float32)
+    q_vt = jnp.zeros((2,), jnp.int32)
+    q_ts = jnp.ones((2,), jnp.int32)
+    dk, gk = knn_topk(vecs, emb, gid, live, live, inf, q_vt, q_ts, k,
+                      interpret=True)
+    dr, gr = ref.knn_topk(vecs, emb, gid, live, live, inf, q_vt, q_ts, k)
+    assert np.asarray(gr).tolist() == [[0, 1, 2, 3, 4, 5]] * 2
+    assert np.array_equal(np.asarray(dk), np.asarray(dr))
+    assert np.array_equal(np.asarray(gk), np.asarray(gr))
+
+
+def test_knn_topk_ref_oracle_bruteforce():
+    """The ref path itself against a per-row numpy argsort oracle."""
+    from repro.kernels.knn_topk import ref
+    args = _knn_inputs(6, 80, 8, seed=42)
+    vecs, emb, gid, vtype, create, delete, q_vt, q_ts = map(np.asarray, args)
+    k = 10
+    dr, gr = map(np.asarray, ref.knn_topk(*args, k))
+    ee = (emb.astype(np.float64) ** 2).sum(1)
+    for r in range(6):
+        ok = ((gid >= 0) & (vtype == q_vt[r]) & (create <= q_ts[r])
+              & (q_ts[r] < delete))
+        d = ee - 2.0 * (emb.astype(np.float64) @ vecs[r].astype(np.float64))
+        order = sorted((np.float32(d[i]), int(gid[i]))
+                       for i in range(len(gid)) if ok[i])[:k]
+        want_g = [g for _, g in order] + [KNN_I32MAX] * (k - len(order))
+        assert gr[r].tolist() == want_g
+        # the oracle accumulates in f64; the ref path is all-f32, so allow
+        # last-ulp drift on the distance values (selection stays exact)
+        assert_allclose(dr[r][:len(order)],
+                        np.asarray([dd for dd, _ in order], np.float32),
+                        rtol=1e-5, atol=1e-5)
+        assert np.isinf(dr[r][len(order):]).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 150), st.integers(1, 12),
+       st.integers(1, 16), st.integers(0, 5))
+def test_knn_topk_property(R, N, D, k, seed):
+    from repro.kernels.knn_topk import ref
+    from repro.kernels.knn_topk.kernel import knn_topk
+    args = _knn_inputs(R, N, D, seed=seed)
+    dk, gk = knn_topk(*args, k, interpret=True)
+    dr, gr = ref.knn_topk(*args, k)
+    assert np.array_equal(np.asarray(dk), np.asarray(dr))
+    assert np.array_equal(np.asarray(gk), np.asarray(gr))
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal,window", [

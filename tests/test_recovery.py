@@ -192,3 +192,33 @@ def test_fast_restart():
     assert db2.get_vertex("node", 3) is not None
     # regions lost -> None (caller falls back to disaster recovery)
     assert cache.restart("procX") is None
+
+
+def test_fast_restart_keeps_vector_index():
+    # the vindex slots ride the held store tree; the host-side mirrors
+    # (vx_count/_vindexed/_vx_pos) must re-attach or Nearest dies on restart
+    cfg = StoreConfig(n_shards=4, cap_v=64, cap_e=512, cap_delta=128,
+                      cap_idx=128, cap_idx_delta=64, cap_vec=64,
+                      d_f32=4, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("doc", f_attrs=("f0", "f1", "f2", "f3"))
+    for k in range(8):
+        db.create_vertex("doc", k, {f"f{i}": float(k + i) for i in range(4)})
+    db.vector_index("doc")
+    q = [{"nearest": {"type": "doc", "k": 3, "vector": [2.0, 3.0, 4.0, 5.0]},
+          "select": ("key",)}]
+    want = db.query(q)
+    assert not want.failed_q[0]
+    cache = FastRestartCache()
+    cache.hold("proc0", db)
+    del db
+    db2 = cache.restart("proc0")
+    got = db2.query(q)
+    assert got.rows[("key", 0)][0].tolist() == want.rows[("key", 0)][0].tolist()
+    # and the re-attached mirrors keep maintaining the index for new writes
+    db2.create_vertex("doc", 99, {f"f{i}": 50.0 + float(i) for i in range(4)})
+    got2 = db2.query([{"nearest": {"type": "doc", "k": 1,
+                                   "vector": [50.0, 51.0, 52.0, 53.0]},
+                       "select": ("key",)}])
+    keys = [int(x) for x in got2.rows[("key", 0)][0] if x >= 0]
+    assert keys == [99]

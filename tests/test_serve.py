@@ -218,6 +218,39 @@ def test_cursor_refill_falls_back_when_hints_pinned():
     assert not db.active_query_ts
 
 
+def test_nearest_select_paged_round_trip():
+    """Hybrid vector+graph pagination end to end: a nearest select pages
+    through its k seeds via gid-cursor refills, snapshot-stable under a
+    live embedding update, and releases its pin."""
+    from test_vector import CAPS as VCAPS, D, build_vdb, q_near
+    db, emb, rng = build_vdb(seed=55, mutate=False)
+    vec = rng.normal(size=D)
+    doc = q_near(vec, k=8)
+    full = db.query([doc], caps=VCAPS)
+    want = sorted(int(x) for x in full.rows_gid[0] if x >= 0)
+    assert len(want) == 8
+    srv = A1Server(db, caps=QueryCaps(frontier=128, expand=512, results=4),
+                   page_size=2)
+    page, token = srv.select_paged(doc)
+    got = list(page)
+    moved = False
+    for _ in range(50):
+        if token is None:
+            break
+        if not moved:
+            # live churn mid-pagination: the pinned snapshot must not see it
+            fa = tuple(f"f{i}" for i in range(D))
+            g, found = db.lookup_vertex("doc", 0)
+            assert found
+            db.update_vertex(g, "doc", dict(zip(fa, map(float, vec))))
+            moved = True
+        page, token = srv.next_page(token)
+        got.extend(page)
+    assert token is None
+    assert sorted(int(x) for x in got) == want
+    assert not db.active_query_ts
+
+
 def test_serve_stats_expose_planner_counters():
     """/stats carries the planner cache hit-rate and peak frontier bytes
     per budget mode (the shared-mode memory claim, observable)."""

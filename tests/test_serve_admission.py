@@ -175,6 +175,67 @@ def test_refill_joins_wave_after_tenant_hit_inflight_cap():
 
 
 # ---------------------------------------------------------------------------
+# wave-time EWMA hygiene (shed retry-after hints)
+# ---------------------------------------------------------------------------
+
+def test_wave_ewma_seeds_from_first_measurement():
+    """Regression: the EWMA used to start at the deadline-derived guess and
+    *blend* the first real wave into it, so an absurd configured deadline
+    polluted retry-after hints for dozens of waves.  The first completed
+    wave must replace the guess outright."""
+    srv, db = mk_server(read_batch=1, read_deadline_ms=1e9)
+    assert srv._wave_ms == 1e9 and not srv._wave_seeded
+    srv.submit_query(q_chain(0))                 # batch of 1: closes now
+    assert srv._wave_seeded
+    # seeded = the measured wall, not 0.7 * 1e9 + 0.3 * wall
+    assert srv._wave_ms < 1e6
+
+
+def test_wave_ewma_decays_on_idle_pump_ticks():
+    """A burst of slow waves long past must not inflate shed retry-after
+    hints forever: idle pump ticks decay the EWMA toward the deadline
+    floor, and _retry_after_ms tracks it down."""
+    srv, db = mk_server(read_batch=64, read_deadline_ms=5.0, shed_watermark=1)
+    srv._wave_ms, srv._wave_seeded = 5000.0, True     # stale slow-burst EWMA
+    seen = [srv._wave_ms]
+    for _ in range(40):
+        assert srv.pump() == 0                        # no traffic: idle tick
+        seen.append(srv._wave_ms)
+    assert all(b < a for a, b in zip(seen, seen[1:])) # monotone decay
+    assert seen[-1] < 15.0                            # near the 5ms floor
+    # a shed client now gets a sane hint instead of the stale seconds-long one
+    srv.submit_query(q_chain(0))                      # fills the watermark
+    shed = srv.submit_query(q_chain(1))
+    r = srv.query_result(shed)
+    assert r["status"] == "SHED" and r["retry_after_ms"] < 100.0
+
+
+# ---------------------------------------------------------------------------
+# nearest documents through admission
+# ---------------------------------------------------------------------------
+
+def test_nearest_doc_admitted_served_and_validated():
+    """A ``{"nearest": ...}`` root is a first-class serving citizen: valid
+    docs ride read waves and answer like a direct query; malformed vectors
+    are REJECTED at admission and consume no wave slot."""
+    from test_vector import CAPS as VCAPS, D, build_vdb, q_near
+    db, emb, rng = build_vdb(seed=60, mutate=False)
+    srv = A1Server(db, caps=VCAPS, read_batch=8, read_deadline_ms=1e9)
+    vec = rng.normal(size=D)
+    good = srv.submit_query(q_near(vec, k=4, hop=True))
+    bad = srv.submit_query({"nearest": {"type": "doc",
+                                        "vector": [0.0] * (D + 1), "k": 2},
+                            "select": "count"})
+    assert srv.query_result(bad)["status"] == "REJECTED"
+    srv.flush_queries()
+    r = srv.query_result(good)
+    solo = db.query([q_near(vec, k=4, hop=True)], caps=VCAPS)
+    assert r["status"] == "OK" and r["count"] == int(solo.counts[0])
+    assert srv.stats["read_waves"] == 1
+    assert not db.active_query_ts
+
+
+# ---------------------------------------------------------------------------
 # circuit-breaker hedging
 # ---------------------------------------------------------------------------
 

@@ -141,6 +141,24 @@ def test_shared_budget_policy_and_cache():
     assert planner.CACHE_STATS["misses"] >= m0 + 1
 
 
+def test_shared_budget_bounded_by_policy():
+    """Regression for the double-pow2 overshoot: rounding the *product*
+    ``per_cap * ceil(sqrt(R))`` to a power of two doubled the pool for
+    every non-pow2 sqrt term (R=9, per_cap=64 -> 256 instead of 192).
+    The auto budget must stay within 1.5x of the policy curve — and never
+    exceed the per-query footprint — across the whole serving range."""
+    import math
+    for per_cap in (16, 64, 128):
+        for r in range(1, 513):
+            b = planner.shared_budget(r, per_cap)
+            policy = per_cap * math.ceil(math.sqrt(r))
+            assert b <= 1.5 * policy, (r, per_cap, b, policy)
+            assert b <= r * per_cap, (r, per_cap, b)
+            # still a real pool: every unit can hold one frontier entry
+            assert b >= min(r, r * per_cap), (r, per_cap, b)
+    assert planner.shared_budget(9, 64) == 192       # the motivating case
+
+
 def test_shared_requires_fused():
     db = build_db(seed=47, mutate=False)
     with pytest.raises(ValueError):

@@ -32,6 +32,10 @@ def test_spmd_multiquery_parity():
     assert "MQ_OK" in run_prog("multiquery_parity")
 
 
+def test_spmd_knn_parity():
+    assert "KNN_OK" in run_prog("knn_parity")
+
+
 def test_spmd_dedup_compact():
     assert "DEDUP_OK" in run_prog("dedup_compact")
 

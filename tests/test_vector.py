@@ -1,0 +1,357 @@
+"""Hybrid vector+graph queries: the fused ``Nearest`` operator.
+
+Contract under test (src/repro/core/README.md): a ``{"nearest": {...}}``
+root seeds a chain with the k nearest *visible* vertices of its type —
+squared-L2 over the f32 payload row, ties by ascending gid — and from
+there behaves exactly like a scanned root: hops, filters, count/select
+terminals, cursors, budgets, backends.  The oracle ladder:
+
+  * brute-force numpy top-k  ==  a bare nearest select (ref backend);
+  * ref  ==  pallas-interpret, bit-for-bit;
+  * fused mixed Nearest+Scan batch  ==  each query alone (one program);
+  * shared budget: flags-subset semantics, unflagged rows identical;
+  * MVCC: the index answers *as of* the query snapshot;
+  * maintenance: mutation waves and compaction keep the index exact.
+
+Deterministic (seeded rng) except the one hypothesis sweep, which gates
+itself so the suite runs without hypothesis installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core.addressing import StoreConfig
+from repro.core.graphdb import GraphDB
+from repro.core.query import planner
+from repro.core.query.executor import QueryCaps
+
+CAPS = QueryCaps(frontier=128, expand=512, results=16)
+D = 4  # f32 payload width == embedding dim
+
+
+def build_vdb(seed=0, n_docs=24, n_tags=5, mutate=True):
+    """Docs with f32-payload embeddings + doc.tag edges, vector-indexed."""
+    cfg = StoreConfig(n_shards=4, cap_v=128, cap_e=1024, cap_delta=256,
+                      cap_idx=256, cap_idx_delta=128, cap_vec=64,
+                      d_f32=D, d_i32=2)
+    db = GraphDB(cfg)
+    fa = tuple(f"f{i}" for i in range(D))
+    db.vertex_type("doc", f_attrs=fa, i_attrs=("x", "y"))
+    db.vertex_type("tag")
+    db.edge_type("doc.tag")
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n_docs, D)).astype(np.float32)
+    docs = [db.create_vertex("doc", i,
+                             dict(zip(fa, map(float, emb[i])), x=i, y=0))
+            for i in range(n_docs)]
+    tags = [db.create_vertex("tag", 500 + i) for i in range(n_tags)]
+    t = db.create_transaction()
+    for i, g in enumerate(docs):
+        db.create_edge(g, tags[i % n_tags], "doc.tag", txn=t)
+        if i % 3 == 0:
+            db.create_edge(g, tags[(i + 1) % n_tags], "doc.tag", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    db.vector_index("doc")                 # backfills the live docs
+    if mutate:
+        # churn AFTER registration: maintenance waves must keep the
+        # index exact (deletes tombstone, updates re-point the entry)
+        for i in range(0, n_docs, 5):
+            g, found = db.lookup_vertex("doc", i)
+            assert found
+            if i % 10 == 0:
+                db.delete_vertex(g)
+            else:
+                emb[i] = rng.normal(size=D).astype(np.float32)
+                db.update_vertex(g, "doc",
+                                 dict(zip(fa, map(float, emb[i]))))
+        db.run_compaction()
+    return db, emb, rng
+
+
+def oracle_keys(db, emb, vec, k, read_ts=None):
+    """Brute-force: the top-k visible doc keys by (f32 dist, gid), returned
+    *sorted by key* — select rows ride the gid-sorted frontier regions, so
+    the k-NN result is a set, not a distance-ordered list."""
+    alive = []
+    for i in range(len(emb)):
+        g, found = db.lookup_vertex("doc", i, read_ts=read_ts)
+        if found:
+            e = emb[i].astype(np.float64)
+            d = np.float32(e @ e - 2.0 * e @ np.asarray(vec, np.float64))
+            alive.append((d, g, i))
+    return sorted(key for _, _, key in sorted(alive)[:k])
+
+
+def q_near(vec, k=4, select=("key",), hop=False):
+    q = {"nearest": {"type": "doc", "vector": [float(x) for x in vec],
+                     "k": k}}
+    if hop:
+        q["_out_edge"] = {"type": "doc.tag",
+                          "_target": {"type": "tag", "select": "count"}}
+    elif select == "count":
+        q["select"] = "count"
+    else:
+        q["select"] = list(select)
+    return q
+
+
+def q_scan(key, select="count"):
+    tgt = {"type": "tag",
+           "select": select if select == "count" else list(select)}
+    return {"type": "doc", "id": key,
+            "_out_edge": {"type": "doc.tag", "_target": tgt}}
+
+
+def sel_keys(res, i):
+    return [int(x) for x in res.rows[("key", 0)][i] if x >= 0]
+
+
+def failed(res, i=0):
+    fq = getattr(res, "failed_q", None)
+    return bool(fq[i]) if fq is not None else bool(res.failed)
+
+
+# ---------------------------------------------------------------------------
+# oracle + backend parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("mutate", [False, True])
+def test_nearest_matches_bruteforce_oracle(backend, mutate):
+    db, emb, rng = build_vdb(seed=3, mutate=mutate)
+    for _ in range(4):
+        vec = rng.normal(size=D)
+        for k in (1, 4, 9):
+            res = db.query([q_near(vec, k=k)], caps=CAPS, backend=backend)
+            assert not failed(res)
+            assert sorted(sel_keys(res, 0)) == oracle_keys(db, emb, vec, k)
+            # and the row order contract itself: ascending gid
+            gids = [int(g) for g in res.rows_gid[0] if g >= 0]
+            assert gids == sorted(gids)
+
+
+def test_ref_pallas_bit_identical():
+    db, emb, rng = build_vdb(seed=4)
+    queries = [q_near(rng.normal(size=D), k=3 + i, hop=(i % 2 == 0))
+               for i in range(4)] + [q_scan(1)]
+    a = db.query(queries, caps=CAPS, backend="ref", fused=True)
+    b = db.query(queries, caps=CAPS, backend="pallas", fused=True)
+    assert np.array_equal(a.failed_q, b.failed_q)
+    assert np.array_equal(a.counts, b.counts)
+    assert np.array_equal(a.rows_gid, b.rows_gid)
+    for key in a.rows:
+        assert np.array_equal(a.rows[key], b.rows[key]), key
+
+
+# ---------------------------------------------------------------------------
+# fusion: mixed batches, one program, per-query parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_mixed_batch_matches_per_query(backend):
+    """Nearest+Scan queries fused into one batch match their solo runs —
+    fused-vs-batch-of-1 is the per-query oracle (the engine always fuses
+    nearest batches)."""
+    db, emb, rng = build_vdb(seed=5)
+    queries = [q_near(rng.normal(size=D), k=4, hop=True),
+               q_scan(1),
+               q_near(rng.normal(size=D), k=2),
+               q_scan(6, select=["key"]),
+               q_near(rng.normal(size=D), k=6, select="count")]
+    res = db.query(queries, caps=CAPS, backend=backend, fused=True)
+    for i, q in enumerate(queries):
+        solo = db.query([q], caps=CAPS, backend=backend)
+        assert bool(res.failed_q[i]) == failed(solo), i
+        if solo.counts is not None and solo.counts[0] >= 0:
+            assert res.counts[i] == solo.counts[0], i
+        if solo.rows_gid is not None:
+            k = solo.rows_gid.shape[1]
+            assert np.array_equal(res.rows_gid[i, :k], solo.rows_gid[0]), i
+
+
+def test_mixed_batch_is_one_program_group():
+    """A mixed Nearest+Scan batch with one plan shape each compiles exactly
+    one new fused program (the acceptance criterion), and re-running it
+    hits the cache."""
+    db, emb, rng = build_vdb(seed=6, mutate=False)
+    queries = [q_near(rng.normal(size=D), k=4, hop=True), q_scan(2),
+               q_scan(3)]
+    db.query([q_scan(7)], caps=CAPS, fused=True)        # unrelated warmup
+    m0 = planner.CACHE_STATS["misses"]
+    db.query(queries, caps=CAPS, fused=True)
+    assert planner.CACHE_STATS["misses"] == m0 + 1
+    h0 = planner.CACHE_STATS["hits"]
+    db.query(queries, caps=CAPS, fused=True)
+    assert planner.CACHE_STATS["misses"] == m0 + 1
+    assert planner.CACHE_STATS["hits"] == h0 + 1
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_shared_budget_flags_subset(backend):
+    """budget='shared' with nearest queries in the batch: per-query flags
+    are a subset of shared flags; unflagged queries are bit-identical."""
+    db, emb, rng = build_vdb(seed=7)
+    queries = [q_near(rng.normal(size=D), k=4, hop=True), q_scan(1),
+               q_near(rng.normal(size=D), k=8, select="count"), q_scan(4)]
+    pq = db.query(queries, caps=CAPS, backend=backend, fused=True)
+    sh = db.query(queries, caps=CAPS, backend=backend, budget="shared")
+    for i in range(len(queries)):
+        assert bool(sh.failed_q[i]) >= bool(pq.failed_q[i]), i
+        if sh.failed_q[i]:
+            continue
+        assert sh.counts[i] == pq.counts[i], i
+        if pq.rows_gid is not None:
+            assert np.array_equal(sh.rows_gid[i], pq.rows_gid[i]), i
+
+
+# ---------------------------------------------------------------------------
+# MVCC
+# ---------------------------------------------------------------------------
+def test_mvcc_snapshot_isolation():
+    """A nearest query at an old read_ts sees the index as of that
+    snapshot: pre-update embeddings, pre-delete entries."""
+    db, emb, rng = build_vdb(seed=8, mutate=False)
+    vec = rng.normal(size=D)
+    ts0 = db.snapshot_ts()
+    want0 = oracle_keys(db, emb, vec, 4, read_ts=ts0)
+    # move doc 0 onto the query point and delete the old best
+    fa = tuple(f"f{i}" for i in range(D))
+    g0, _ = db.lookup_vertex("doc", 0)
+    db.update_vertex(g0, "doc", dict(zip(fa, map(float, vec))))
+    gb, _ = db.lookup_vertex("doc", want0[0])
+    if want0[0] != 0:
+        db.delete_vertex(gb)
+    emb2 = emb.copy()
+    emb2[0] = np.asarray(vec, np.float32)
+    old = db.query([q_near(vec, k=4)], caps=CAPS, read_ts=ts0)
+    new = db.query([q_near(vec, k=4)], caps=CAPS)
+    assert sorted(sel_keys(old, 0)) == want0
+    assert sorted(sel_keys(new, 0)) == oracle_keys(db, emb2, vec, 4)
+    assert 0 in sel_keys(new, 0)                       # the moved doc wins
+
+
+def test_maintenance_insert_after_registration():
+    """Vertices created after vector_index() flow in via the mutation
+    wave — no rebuild, and compaction folds keep them."""
+    db, emb, rng = build_vdb(seed=9, mutate=False)
+    fa = tuple(f"f{i}" for i in range(D))
+    vec = rng.normal(size=D)
+    db.create_vertex("doc", 99, dict(zip(fa, map(float, vec)), x=99, y=0))
+    res = db.query([q_near(vec, k=1)], caps=CAPS)
+    assert sel_keys(res, 0) == [99]                    # exact match wins
+    db.run_compaction()
+    res = db.query([q_near(vec, k=1)], caps=CAPS)
+    assert sel_keys(res, 0) == [99]
+
+
+# ---------------------------------------------------------------------------
+# pagination
+# ---------------------------------------------------------------------------
+def test_gid_cursor_pages_through_neighbours():
+    """Deep pagination: re-issuing with gid_cursor = last gid walks the
+    k-NN seed set in gid order without retracing pages."""
+    db, emb, rng = build_vdb(seed=10, mutate=False)
+    vec = rng.normal(size=D)
+    k = 8
+    full = db.query([q_near(vec, k=k)], caps=CAPS)
+    want = sorted(int(g) for g in full.rows_gid[0] if g >= 0)
+    small = QueryCaps(frontier=128, expand=512, results=2)
+    got, cur, pages = [], -1, 0
+    while pages < 10:
+        doc = dict(q_near(vec, k=k))
+        if cur >= 0:
+            doc["gid_cursor"] = cur
+        page = db.query([doc], caps=small)
+        gids = [int(g) for g in page.rows_gid[0] if g >= 0]
+        if not gids:
+            break
+        assert all(g > cur for g in gids)
+        got += gids
+        cur = max(gids)
+        pages += 1
+    assert got == want and len(want) == k
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_parse_errors():
+    db, emb, rng = build_vdb(seed=11, mutate=False)
+    from repro.core.query.a1ql import ParseError, parse
+    bad = [
+        {"nearest": {"type": "doc", "vector": [0.0] * (D + 1), "k": 2},
+         "select": "count"},                           # wrong width
+        {"nearest": {"type": "doc", "vector": [0.0] * D, "k": 0},
+         "select": "count"},                           # k < 1
+        {"nearest": {"type": "tag", "vector": [0.0] * D, "k": 2},
+         "select": "count"},                           # no index on tag
+        {"type": "doc", "id": 1,
+         "nearest": {"type": "doc", "vector": [0.0] * D, "k": 2},
+         "select": "count"},                           # nearest + scan root
+        {"intersect": [{"nearest": {"type": "doc", "vector": [0.0] * D,
+                                    "k": 2}}], "select": "count"},
+    ]
+    for q in bad:
+        with pytest.raises(ParseError):
+            parse(db, q)
+
+
+def test_nearest_k_over_frontier_cap_rejected():
+    """k beyond the frontier cap cannot seed a wave; the planner refuses
+    instead of silently truncating."""
+    db, emb, rng = build_vdb(seed=12, mutate=False)
+    tiny = QueryCaps(frontier=4, expand=16, results=4)
+    with pytest.raises(ValueError):
+        db.query([q_near(rng.normal(size=D), k=8)], caps=tiny)
+
+
+# ---------------------------------------------------------------------------
+# amortization (the ISSUE acceptance gate)
+# ---------------------------------------------------------------------------
+def test_knn_amortization_gate():
+    """On ref, batch-16 nearest+1-hop per-query latency <= 0.5x batch-1
+    (one knn_topk pass + one fused wave pipeline for the whole batch)."""
+    import time
+    db, emb, rng = build_vdb(seed=13, mutate=False)
+    batch = lambda b: [q_near(rng.normal(size=D), k=4, hop=True)
+                       for _ in range(b)]
+    b1, b16 = batch(1), batch(16)
+
+    def best(qs, n=5):
+        db.query(qs, caps=CAPS, backend="ref", fused=True)     # warm
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            db.query(qs, caps=CAPS, backend="ref", fused=True)
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t1, t16 = best(b1), best(b16)
+    assert t16 / 16 <= 0.5 * t1, \
+        f"knn amortization regressed: {t16/16*1e6:.0f}us/q at b=16 " \
+        f"vs {t1*1e6:.0f}us at b=1"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (gates itself; CI installs hypothesis)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # pragma: no cover - CI installs it
+    st = None
+
+if st is not None:
+    VDB, VEMB, _ = build_vdb(seed=20)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.floats(-3, 3, allow_nan=False, width=32),
+                    min_size=D, max_size=D),
+           st.integers(1, 10), st.integers(0, 3))
+    def test_nearest_property(vec, k, nscan):
+        """Random query points: oracle parity on ref, ref==pallas, and
+        solo==fused within a mixed batch — in one sweep."""
+        queries = [q_near(vec, k=k)] + [q_scan(i) for i in range(nscan)]
+        r = VDB.query(queries, caps=CAPS, backend="ref", fused=True)
+        p = VDB.query(queries, caps=CAPS, backend="pallas", fused=True)
+        assert sorted(sel_keys(r, 0)) == oracle_keys(VDB, VEMB, vec, k)
+        assert np.array_equal(r.rows_gid, p.rows_gid)
+        assert np.array_equal(r.counts, p.counts)
+        solo = VDB.query([queries[0]], caps=CAPS, backend="ref")
+        assert np.array_equal(r.rows_gid[0], solo.rows_gid[0])
