@@ -15,6 +15,15 @@ Two claims, each with rows and an asserted gate:
   sub-millisecond at the median, and **every** submitted request id
   terminates in a stored result;
 
+* **cluster scale-out** — process-worker fleets (1 and 4 coordinators
+  over one shared-memory store) replay open-loop arrivals at 1x and 2x
+  the single worker's sustainable rate.  Goodput counts only
+  *within-budget* answers, so the overloaded single worker degrades
+  (queued requests burn their SLO budgets in line) while the 4-worker
+  fleet absorbs the same rate at 0.5x per worker — the asserted gate is
+  >= 2.5x goodput at 2x overload (armed only with >= 4 cores), plus a
+  sub-millisecond median for frontend-local budget-exhausted answers;
+
 * **recovery** — §4 consistent recovery (replay the versioned tables
   through the transactional write path) vs §5.3 fast restart (re-attach
   process-external regions): the wall-time gap is the paper's
@@ -167,6 +176,152 @@ def _bench_overload(smoke):
 
 
 # ---------------------------------------------------------------------------
+# cluster front: process-worker scale-out under open-loop overload
+# ---------------------------------------------------------------------------
+
+CLUSTER_B = 4          # small wave cap: each spawned worker jit-traces
+                       # every closable wave size (1..B) during warmup
+
+
+def _cluster_poll(fe, pub, timeout_s=60.0):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        r = fe.query_result(pub)
+        if r is not None:
+            return r
+        time.sleep(0.001)
+    raise TimeoutError(f"no result for {pub}")
+
+
+def _cluster_warm(fe):
+    """Warm EVERY worker for every closable wave size: process workers
+    compile in their own process, and least-loaded routing would leave
+    cold shapes to blow SLO budgets mid-measurement."""
+    for cid in list(fe.workers):
+        for q in range(1, CLUSTER_B + 1):
+            qids = []
+            for i in range(q):
+                resp = fe._rpc(cid, {"op": "query", "doc": _doc(i),
+                                     "budget_ms": 1e9})
+                assert resp["status"] == "OK", resp
+                qids.append(resp["qid"])
+            fe._rpc(cid, {"op": "flush"})
+            for qid in qids:
+                r = fe._rpc(cid, {"op": "result", "qid": qid})
+                assert r["result"]["status"] == "OK", r
+
+
+def _cluster_calibrate(fe, waves=10):
+    """Closed loop of full waves through one worker -> sustainable QPS."""
+    t0 = time.perf_counter()
+    for w in range(waves):
+        pubs = [fe.submit_query(_doc(w * CLUSTER_B + i), budget_ms=1e9)
+                for i in range(CLUSTER_B)]
+        fe.flush()
+        for p in pubs:
+            _cluster_poll(fe, p)
+    return waves * CLUSTER_B / (time.perf_counter() - t0)
+
+
+def _cluster_open(fe, rate_qps, n_req, budget_ms):
+    """Open-loop arrivals through the SLB.
+
+    Each request carries the time it was *scheduled* to arrive: when the
+    pacing loop falls behind (a saturated worker blocks the submit RPC),
+    the lateness is docked from the request's SLO budget — exactly the
+    front-door queueing a real load balancer would charge.  Goodput
+    counts only within-budget answers: a ``budget_exhausted`` row is an
+    SLO miss, the overload collapse the fleet is supposed to prevent."""
+    pubs = []
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        sched = t0 + i / rate_qps
+        dt = sched - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        late_ms = max(0.0, (time.perf_counter() - sched) * 1e3)
+        pubs.append(fe.submit_query(
+            _doc(i), budget_ms=max(0.0, budget_ms - late_ms)))
+    fe.flush()
+    rows = [_cluster_poll(fe, p) for p in pubs]
+    wall = time.perf_counter() - t0
+    assert all(r is not None for r in rows)      # no silent terminations
+    ok = sum(r["status"] == "OK" and not r.get("budget_exhausted")
+             for r in rows)
+    exhausted = sum(bool(r.get("budget_exhausted")) for r in rows)
+    return {"goodput": max(ok, 1) / wall, "ok": ok,
+            "exhausted": exhausted, "n": n_req}
+
+
+def _bench_cluster(smoke):
+    """ISSUE 9 rows: ``cluster_open_{1x,2x}_w{1,4}`` + the front-door
+    budget-exhaustion latency.
+
+    Process-mode fleets (real worker processes over ONE shared-memory
+    segment) so the scale-out is physical.  ``queue_frac=0.5`` lets the
+    sparse per-worker streams of the 4-way fleet accumulate multi-member
+    waves on the workers' own pump clocks (concurrently across
+    processes) instead of dribbling size-1 waves.  The 4-worker goodput
+    gate needs >= 4 cores to mean anything — on smaller machines the
+    rows are still emitted but the ratio is reported, not asserted."""
+    import os
+
+    from repro.core import backend as backend_mod
+    from repro.launch.cluster import A1Frontend
+
+    if backend_mod.resolve(None).kind != "ref":
+        return                    # cluster rows are a ref-backend claim
+    db = _db()
+    kw = dict(caps=CAPS, read_batch=CLUSTER_B, queue_frac=0.5)
+    # long enough that the overloaded single worker's backlog (and with
+    # it the docked-budget misses) dominates the warm head of the stream
+    n = 320 if smoke else 800
+    res, qps = {}, None
+    for nw in (1, 4):
+        fe = A1Frontend(db, nw, mode="process", name=f"bench_w{nw}", **kw)
+        try:
+            _cluster_warm(fe)
+            if nw == 1:
+                qps = _cluster_calibrate(fe)
+                # generous enough that steady-state waves never exhaust,
+                # tight enough that a growing overload backlog does
+                budget = max(25.0, 3e3 * CLUSTER_B / qps)
+            for mult in (1, 2):
+                res[(nw, mult)] = _cluster_open(fe, mult * qps, n, budget)
+        finally:
+            fe.close()
+    ratio = res[(4, 2)]["goodput"] / res[(1, 2)]["goodput"]
+    for (nw, mult), r in sorted(res.items()):
+        extra = f";goodput_ratio_2x={ratio:.2f}" if (nw, mult) == (4, 2) \
+            else ""
+        emit(f"cluster_open_{mult}x_w{nw}", 1e6 / r["goodput"],
+             f"rate={mult * qps:.0f}qps;budget={budget:.0f}ms;"
+             f"ok={r['ok']}/{r['n']};exhausted={r['exhausted']}{extra}")
+    if (os.cpu_count() or 1) >= 4:
+        # the scale-out gate: 4 workers hold >= 2.5x the single worker's
+        # within-budget goodput at 2x overload (the single worker's own
+        # goodput degrades — late requests arrive with burnt budgets)
+        assert ratio >= 2.5, (res[(1, 2)], res[(4, 2)])
+
+    # the front door answers an exhausted budget without a worker frame:
+    # sub-millisecond at the median, any machine, any mode
+    fe = A1Frontend(db, 2, name="bench_exh", **kw)
+    try:
+        dts = []
+        for i in range(60):
+            t0 = time.perf_counter()
+            pub = fe.submit_query(_doc(i), budget_ms=0.0)
+            r = fe.query_result(pub)
+            dts.append(time.perf_counter() - t0)
+            assert r["budget_exhausted"]
+    finally:
+        fe.close()
+    p50_ms = float(np.median(dts)) * 1e3
+    emit("cluster_budget_exhausted", p50_ms * 1e3, f"p50_ms={p50_ms:.4f}")
+    assert p50_ms < 1.0, p50_ms
+
+
+# ---------------------------------------------------------------------------
 # §4 consistent recovery vs §5.3 fast restart
 # ---------------------------------------------------------------------------
 
@@ -204,6 +359,7 @@ def _bench_recovery(n=48):
 
 def run(smoke: bool = False):
     _bench_overload(smoke)
+    _bench_cluster(smoke)
     _bench_recovery()
 
 

@@ -25,6 +25,21 @@ must preserve):
                                   ``try_handoff`` — ``race`` simulates a
                                   concurrent structural mutation so the
                                   shadow must rebuild
+``cluster.worker.crash``          cluster frontend, before routing a
+                                  request to its coordinator — ``race``
+                                  kills the target worker first (the
+                                  mid-pagination crash the takeover
+                                  contract must survive)
+``cluster.route.stale``           cluster frontend, on continuation
+                                  routing — ``race`` routes the token to
+                                  a *wrong* coordinator (stale SLB view);
+                                  the receiver must bounce it back by
+                                  ownership stamp, never answer from the
+                                  wrong state
+``transport.drop``                transport channel, per frame — ``race``
+                                  drops (or duplicates, site-armed twice)
+                                  the frame; clients must retransmit and
+                                  result polling must stay idempotent
 ================================  =========================================
 
 Firing is **seeded and deterministic**: a site fires on an explicit

@@ -76,7 +76,8 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
             mesh=None, storage_axes=("data", "model"),
             parsed: Optional[list] = None,
             fused: Optional[bool] = None,
-            budget: Optional[str] = None) -> QueryResult:
+            budget: Optional[str] = None,
+            deadline: Optional[float] = None) -> QueryResult:
     """Execute a batch of A1QL queries at consistent snapshot timestamps.
 
     See the module docstring for routing; all queries in one call observe
@@ -99,6 +100,12 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
     shard-major, so a max-gid cursor could silently skip rows — a cursor
     under ``mesh=`` raises (serve's refills fall back to the pow2 growing
     window there).
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant — the hard
+    edge of the serving tier's SLO budget.  Fusion groups past the
+    deadline are skipped, their queries flagged ``deadline_q`` (truncated,
+    *not* failed).  A deadline forces the fused path: the uniform executor
+    is a single all-or-nothing program with no per-group skip point.
     """
     from repro.core import faults as faults_mod
     from repro.core.query import planner
@@ -142,7 +149,11 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
                          "no nearest)")
     if fused is False and budget == "shared":
         raise ValueError("budget='shared' requires the fused planner")
-    run_fused = bool(fused) or not uniform or budget == "shared"
+    if fused is False and deadline is not None:
+        raise ValueError("deadline= requires the fused planner (the "
+                         "uniform executor has no per-group skip point)")
+    run_fused = (bool(fused) or not uniform or budget == "shared"
+                 or deadline is not None)
 
     pins = sorted(set(ts_list))
     for t in pins:                            # pin versions (GC barrier)
@@ -152,7 +163,7 @@ def execute(db, queries: list[dict], *, caps: Optional[QueryCaps] = None,
             return planner.execute_fused(db, lowered, eff_caps, ts_list, be,
                                          mesh=mesh, storage_axes=storage_axes,
                                          budget=budget or "per-query",
-                                         cursors=cursors)
+                                         cursors=cursors, deadline=deadline)
         return _execute_uniform(db, lowered, eff_caps[0], ts_list[0], be,
                                 mesh, storage_axes)
     finally:

@@ -68,6 +68,14 @@ class QueryResult:
                                              # serving re-dispatches these
                                              # per-query instead of re-entering
                                              # the saturated pool
+    deadline_q: Optional[np.ndarray] = None  # (Q,) SLO-budget truncation: the
+                                             # query's wave group was skipped
+                                             # because the execution deadline
+                                             # passed (engine deadline=).  NOT
+                                             # a capacity failure: failed_q
+                                             # stays False and serving answers
+                                             # truncated-with-flag instead of
+                                             # hedging
 
 
 # ---------------------------------------------------------------------------

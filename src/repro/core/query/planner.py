@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional, Sequence, Union
 
 import jax
@@ -372,7 +373,8 @@ FRONTIER_STATS = {"per_query_peak_bytes": 0, "shared_peak_bytes": 0}
 # hedge/breaker policy reads these (serve /stats surfaces them): how many
 # query slots fast-failed at all, and how many of those were evicted by the
 # *shared* pool rather than their own per-unit budget
-OVERFLOW_STATS = {"failed_queries": 0, "shared_ovf_queries": 0}
+OVERFLOW_STATS = {"failed_queries": 0, "shared_ovf_queries": 0,
+                  "deadline_skipped_queries": 0}
 
 
 def reset_stats() -> None:
@@ -614,6 +616,9 @@ class _Assembly:
         # per-query "the shared pool did it" flags: zero for per-query-
         # budget groups (their failures are always self-inflicted)
         self.shared_ovf_q = np.zeros(Q, bool)
+        # per-query "the SLO budget ran out" flags: the group was skipped,
+        # not failed — serving answers truncated-with-flag, never hedges
+        self.deadline_q = np.zeros(Q, bool)
         self.counts = None
         self.rows_gid = None
         self.truncated = None
@@ -644,14 +649,26 @@ class _Assembly:
                     self.rows[k] = np.full((self.Q, self.K), fill, v0.dtype)
                 self.rows[k][idxs, :v0.shape[1]] = v0
 
+    def skip(self, idxs, select: bool) -> None:
+        """Mark a group as budget-truncated without executing its program.
+
+        The queries' slots keep their empty/NULL fill (no rows, no counts);
+        select terminals flag ``truncated`` so clients see a partial result,
+        and ``deadline_q`` attributes the truncation to the SLO budget."""
+        self.deadline_q[idxs] = True
+        if select:
+            self._ensure_select()
+            self.truncated[idxs] = True
+
     def result(self) -> QueryResult:
         OVERFLOW_STATS["failed_queries"] += int(self.failed_q.sum())
         OVERFLOW_STATS["shared_ovf_queries"] += int(self.shared_ovf_q.sum())
+        OVERFLOW_STATS["deadline_skipped_queries"] += int(self.deadline_q.sum())
         return QueryResult(
             counts=self.counts, rows_gid=self.rows_gid,
             rows=self.rows or None, truncated=self.truncated,
             failed=bool(self.failed_q.any()), failed_q=self.failed_q,
-            shared_ovf_q=self.shared_ovf_q)
+            shared_ovf_q=self.shared_ovf_q, deadline_q=self.deadline_q)
 
 
 def _fusion_groups(lowered, eff_caps):
@@ -674,7 +691,8 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
                   be: backend_mod.Backend, mesh=None,
                   storage_axes=("data", "model"),
                   budget: str = "per-query",
-                  cursors: Optional[Sequence[int]] = None) -> QueryResult:
+                  cursors: Optional[Sequence[int]] = None,
+                  deadline: Optional[float] = None) -> QueryResult:
     """Run pre-lowered plans as fused multi-query waves.
 
     The engine (``core.query.engine.execute``) owns parsing, snapshot
@@ -689,7 +707,15 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
     — results can differ from per-query mode only via fast-fail flags under
     shared overflow.  ``cursors`` is the per-query runtime gid-cursor
     vector (-1 = none), applied as a final ``gid > cursor`` predicate
-    without retracing (the cursor stays runtime data)."""
+    without retracing (the cursor stays runtime data).
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant (the SLO
+    budget's hard edge, threaded down from serving): each fusion group
+    checks the clock before dispatching — a group past the deadline is
+    *skipped* and its queries come back truncated-with-flag
+    (``deadline_q``), never partially executed.  Groups that already ran
+    keep their results, so a batch can be half answered, half
+    budget-truncated."""
     from repro.core.query import planner_shared
     Q = len(lowered)
     out = _Assembly(Q, max(c.results for c in eff_caps))
@@ -706,6 +732,9 @@ def execute_fused(db, lowered: list, eff_caps: list, ts_list: list[int],
         vwin = vindex_mod.vindex_window(db)
     for caps_g, idxs in _fusion_groups(lowered, eff_caps):
         plans_g = tuple(lowered[i].plan for i in idxs)
+        if deadline is not None and time.monotonic() >= deadline:
+            out.skip(idxs, select=plans_g[0].terminal == "select")
+            continue
         keys = jnp.asarray([k for i in idxs for k in lowered[i].keys],
                            jnp.int32)
         ts = jnp.asarray([ts_list[i] for i in idxs], jnp.int32)

@@ -136,6 +136,72 @@ def consistent_recover(store: ObjectStore, schema_db: GraphDB,
 # fast restart (§5.3)
 # ---------------------------------------------------------------------------
 
+def _wire_db(s: dict, store) -> GraphDB:
+    """Wire a fresh GraphDB around an already-materialized store tree plus
+    the held coordinator metadata (the common core of :meth:`restart` and
+    :func:`attach_shared`)."""
+    db = GraphDB.__new__(GraphDB)
+    db.cfg = s["cfg"]
+    db.caps = __import__("repro.core.txn", fromlist=["BatchCaps"]
+                         ).BatchCaps()
+    db.store = store
+    db.catalog = s["catalog"]
+    db.tenant, db.graph = "default", "g"
+    db.clock = s["clock"]
+    db.v_next = s["v_next"].copy()
+    db.v_free = [list(x) for x in s["v_free"]]
+    db._rr = 0
+    db.dl_count = s["dl_count"].copy()
+    db.il_count = s["il_count"].copy()
+    db.xd_count = s["xd_count"].copy()
+    # the vector-index slots live inside the held store tree; only the
+    # host-side mirrors need re-attaching (pre-vindex holds lack them)
+    db.vx_count = s.get("vx_count", np.zeros(db.cfg.n_shards, np.int64)).copy()
+    db._vindexed = set(s.get("vindexed", ()))
+    db._vx_pos = dict(s.get("vx_pos", {}))
+    db.replication_log = None
+    db.stats = {"commits": 0, "aborts": 0, "compactions": 0,
+                "write_waves": 0, "bg_compactions": 0,
+                "compaction_rebuilds": 0, "vindex_compactions": 0}
+    db.active_query_ts = []
+    db.epochs = {"delete_e": 0, "delete_v": 0,
+                 "compact_edges": 0, "compact_index": 0}
+    db.task_queue = None
+    db.compaction_watermark = 0.5
+    db._bg_compaction_pending = False
+    db.faults = None
+    db.backend = None
+    return db
+
+
+def attach_shared(manifest: dict) -> GraphDB:
+    """Re-attach a serving process to an :meth:`export_shared` segment.
+
+    The worker maps the exporter's shared-memory pages (zero host copies —
+    every coordinator reads the *same* CSR/index bytes) and materializes
+    device arrays from the views: one ``device_put`` per field, the §5.3
+    re-attach cost.  On the CPU backend the device arrays are themselves
+    copies, so mutation by one worker can never corrupt a sibling — the
+    shared segment is the one *host* copy of record, exactly the
+    process-external PyCo region of the paper.
+
+    The returned db's ``_shm_handle`` keeps the mapping alive for the
+    db's lifetime; the exporter owns unlinking (via ``drop``)."""
+    from multiprocessing import shared_memory
+    # attaching does not register with the resource tracker (only the
+    # creator does), so worker exit never unlinks the exporter's segment
+    shm = shared_memory.SharedMemory(name=manifest["segment"])
+    kw = {}
+    for fname, (off, shape, dtype) in manifest["fields"].items():
+        view = np.ndarray(shape, dtype=np.dtype(dtype),
+                          buffer=shm.buf, offset=off)
+        kw[fname] = jax.numpy.asarray(view)
+    from repro.core.store import GraphStore
+    db = _wire_db(manifest["meta"], GraphStore(**kw))
+    db._shm_handle = shm
+    return db
+
+
 class FastRestartCache:
     """Process-external region holder (the PyCo analogue).
 
@@ -147,6 +213,7 @@ class FastRestartCache:
 
     def __init__(self):
         self._slots: dict = {}
+        self._shm: dict = {}             # name -> exported SharedMemory
 
     def hold(self, name: str, db: GraphDB) -> None:
         store_np = jax.tree.map(np.asarray, db.store)
@@ -170,38 +237,43 @@ class FastRestartCache:
         s = self._slots.get(name)
         if s is None:
             return None                  # regions lost -> disaster recovery
-        db = GraphDB.__new__(GraphDB)
-        db.cfg = s["cfg"]
-        db.caps = __import__("repro.core.txn", fromlist=["BatchCaps"]
-                             ).BatchCaps()
-        db.store = jax.tree.map(jax.numpy.asarray, s["store"])
-        db.catalog = s["catalog"]
-        db.tenant, db.graph = "default", "g"
-        db.clock = s["clock"]
-        db.v_next = s["v_next"].copy()
-        db.v_free = [list(x) for x in s["v_free"]]
-        db._rr = 0
-        db.dl_count = s["dl_count"].copy()
-        db.il_count = s["il_count"].copy()
-        db.xd_count = s["xd_count"].copy()
-        # the vector-index slots live inside the held store tree; only the
-        # host-side mirrors need re-attaching (pre-vindex holds lack them)
-        db.vx_count = s.get("vx_count", np.zeros(db.cfg.n_shards, np.int64)).copy()
-        db._vindexed = set(s.get("vindexed", ()))
-        db._vx_pos = dict(s.get("vx_pos", {}))
-        db.replication_log = None
-        db.stats = {"commits": 0, "aborts": 0, "compactions": 0,
-                    "write_waves": 0, "bg_compactions": 0,
-                    "compaction_rebuilds": 0, "vindex_compactions": 0}
-        db.active_query_ts = []
-        db.epochs = {"delete_e": 0, "delete_v": 0,
-                     "compact_edges": 0, "compact_index": 0}
-        db.task_queue = None
-        db.compaction_watermark = 0.5
-        db._bg_compaction_pending = False
-        db.faults = None
-        db.backend = None
-        return db
+        return _wire_db(s, jax.tree.map(jax.numpy.asarray, s["store"]))
+
+    def export_shared(self, name: str) -> dict:
+        """Publish a held slot as ONE POSIX shared-memory segment.
+
+        This is the cluster front's store seam: the exporting frontend
+        keeps the single host copy of the CSR/index arrays; every
+        coordinator worker :func:`attach_shared`-maps the same pages and
+        pays only its own device transfer — N workers never hold N host
+        copies of the graph.  Returns a picklable manifest (segment name +
+        per-field offset/shape/dtype + the coordinator metadata) that
+        travels to spawned workers as a plain argument.  The segment lives
+        until :meth:`drop` (or exporter exit) unlinks it."""
+        from multiprocessing import shared_memory
+        s = self._slots[name]
+        if name in self._shm:
+            raise ValueError(f"slot {name!r} already exported")
+        store = s["store"]
+        arrs = {f.name: np.ascontiguousarray(getattr(store, f.name))
+                for f in dataclasses.fields(store)}
+        fields, off = {}, 0
+        for fname, a in arrs.items():
+            off = (off + 63) & ~63                   # 64B-align each field
+            fields[fname] = (off, a.shape, a.dtype.str)
+            off += a.nbytes
+        shm = shared_memory.SharedMemory(create=True, size=max(off, 1))
+        for fname, a in arrs.items():
+            o = fields[fname][0]
+            np.ndarray(a.shape, dtype=a.dtype, buffer=shm.buf,
+                       offset=o)[...] = a
+        self._shm[name] = shm
+        meta = {k: v for k, v in s.items() if k != "store"}
+        return {"segment": shm.name, "fields": fields, "meta": meta}
 
     def drop(self, name: str) -> None:
         self._slots.pop(name, None)
+        shm = self._shm.pop(name, None)
+        if shm is not None:
+            shm.close()
+            shm.unlink()

@@ -57,6 +57,11 @@ from repro.core.query.planner import _pow2ceil
 from repro.core.tasks import (TaskQueue, compaction_task,
                               index_compaction_task, vacuum_task)
 
+# per-stage budget-spend histogram edges (ms).  Each admitted request's SLO
+# budget is spent across queueing -> wave -> hedge; /stats buckets the spend
+# so operators can see *where* the 100 ms goes (the paper's budget accounting)
+BUDGET_BUCKETS_MS = (1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, float("inf"))
+
 
 @dataclasses.dataclass
 class Continuation:
@@ -82,6 +87,8 @@ class _ReadReq:
     tenant: str
     qclass: str
     arrived: float
+    budget_ms: Optional[float] = None   # SLO budget; None = no deadline
+    deadline: Optional[float] = None    # abs monotonic: arrived + budget
 
 
 class _Breaker:
@@ -130,8 +137,11 @@ class A1Server:
                  page_size: int = 16, continuation_ttl: float = 60.0,
                  use_spmd: bool = False, mesh=None,
                  budget: Optional[str] = "auto",
-                 write_batch: int = 16, write_deadline_ms: float = 5.0,
-                 read_batch: int = 16, read_deadline_ms: float = 5.0,
+                 budget_ms: float = 100.0, queue_frac: float = 0.1,
+                 write_batch: int = 16,
+                 write_deadline_ms: Optional[float] = None,
+                 read_batch: int = 16,
+                 read_deadline_ms: Optional[float] = None,
                  shed_watermark: int = 64, tenant_inflight: int = 32,
                  result_ttl: Optional[float] = None,
                  shared_knee: int = 64,
@@ -160,11 +170,32 @@ class A1Server:
         # ``_dispatch``), never re-entering the saturated pool.
         self.budget = budget
         self.shared_knee = shared_knee
+        # SLO-budget scheduling (the paper's ~100 ms end-to-end budget):
+        # every request carries a budget; admission decrements it through
+        # the queueing / wave / hedge stages.  ``read_deadline_ms`` /
+        # ``write_deadline_ms`` are now *optional* legacy overrides: when
+        # ``None`` (the default) wave-close deadlines derive from the
+        # queued requests' remaining budgets (a wave closes once its oldest
+        # member has spent ``queue_frac`` of its budget queueing), the wave
+        # execution deadline is the earliest member's budget edge (threaded
+        # to the engine, which skips not-yet-run fusion groups past it),
+        # and hedges are denied once the budget is gone.  An explicitly
+        # passed value pins the historical fixed-deadline behavior — and
+        # turns *off* per-request deadlines unless a request opts in with
+        # its own ``budget_ms``.
+        self.budget_ms = budget_ms
+        self.queue_frac = queue_frac
+        self._default_budget_ms = (None if read_deadline_ms is not None
+                                   else budget_ms)
+        self._read_floor_ms = (read_deadline_ms if read_deadline_ms
+                               is not None else queue_frac * budget_ms)
+        self._write_floor_ms = (write_deadline_ms if write_deadline_ms
+                                is not None else queue_frac * budget_ms)
         # write admission: staged txns accumulate here and close into one
         # fused mutation wave at max-batch-or-deadline
         self.write_batch = write_batch
         self.write_deadline_ms = write_deadline_ms
-        self._write_q: list[tuple] = []     # (wid, txn, staged gids)
+        self._write_q: list[tuple] = []     # (wid, txn, staged gids, arrived)
         self._write_results: dict[str, dict] = {}
         self._write_exp: dict[str, float] = {}
         self._wave_opened = 0.0
@@ -182,8 +213,10 @@ class A1Server:
         self._read_exp: dict[str, float] = {}
         self._tenant_inflight: collections.Counter = collections.Counter()
         self._closing = False               # read-wave reentrancy guard
-        self._wave_ms = read_deadline_ms    # EWMA of recent wave wall time
+        self._wave_ms = self._read_floor_ms  # EWMA of recent wave wall time
         self._wave_seeded = False           # EWMA holds a measured wall yet?
+        self._wwave_ms = self._write_floor_ms  # write-wave wall EWMA
+        self._wwave_seeded = False
         self.breakers: dict[str, _Breaker] = {}
         self._breaker_cfg = (breaker_window, breaker_threshold,
                              breaker_cooldown)
@@ -200,6 +233,11 @@ class A1Server:
                       "breaker_skips": 0, "breaker_opens": 0,
                       "dropped_write_results": 0, "dropped_read_results": 0,
                       "shared_ovf_queries": 0,
+                      "budget_exhausted": 0, "budget_denied_hedges": 0,
+                      "deadline_truncated_queries": 0,
+                      "budget_spend_ms": {
+                          s: [0] * len(BUDGET_BUCKETS_MS)
+                          for s in ("queue", "wave", "hedge")},
                       "planner_cache_hit_rate": 0.0,
                       "peak_frontier_bytes_per_query": 0,
                       "peak_frontier_bytes_shared": 0}
@@ -213,13 +251,17 @@ class A1Server:
 
     # ------------------------------------------------------------------
     def execute(self, queries: list[dict], *, qclass: str = "q",
-                read_ts: Optional[int] = None) -> QueryResult:
+                read_ts: Optional[int] = None,
+                deadline: Optional[float] = None) -> QueryResult:
         """One batched execution with hedged retry on fast-fail.
 
         The whole attempt — base run *and* hedged retry — reads one pinned
         snapshot, so a patched batch never mixes two timestamps.  Pending
         continuation refills join the batch (at their own pinned
-        snapshots, per-query ``read_ts`` vector) before it dispatches."""
+        snapshots, per-query ``read_ts`` vector) before it dispatches.
+        ``deadline`` is the wave's SLO-budget edge (absolute monotonic):
+        fusion groups past it come back ``deadline_q``-truncated and the
+        hedge is denied once it has passed."""
         t0 = time.perf_counter()
         # close a due mutation wave BEFORE pinning the read snapshot: readers
         # then see the freshest committed state, and the pinned snapshot is
@@ -234,7 +276,8 @@ class A1Server:
             batch = queries + [q for _, q, _ in pend]
             ts_vec = [ts0] * n + [t for _, _, t in pend]
             self.stats["continuation_joins"] += len(pend)
-            res = self._dispatch(batch, ts_vec, qclass=qclass)
+            res = self._dispatch(batch, ts_vec, qclass=qclass,
+                                 deadline=deadline)
             for j, (token, _, _) in enumerate(pend):
                 self._refill(token, res, n + j)
             if pend:
@@ -272,7 +315,7 @@ class A1Server:
         return self.budget
 
     def _run(self, queries, caps, read_ts, fused: Optional[bool] = None,
-             budget: str = "auto"):
+             budget: str = "auto", deadline: Optional[float] = None):
         """The unified entry point; ``fused=True`` forces per-query
         ``failed_q`` flags (what hedged retries want).  ``budget="auto"``
         resolves the server policy; hedged retries pass ``"per-query"``
@@ -281,7 +324,7 @@ class A1Server:
             budget = self._budget_for(len(queries))
         mesh = self.mesh if self.use_spmd else None
         return self.db.query(queries, caps=caps, read_ts=read_ts, mesh=mesh,
-                             fused=fused, budget=budget)
+                             fused=fused, budget=budget, deadline=deadline)
 
     def _doc_hints(self, q: dict) -> dict:
         """Effective cap hints of a document, exactly as the parser merges
@@ -311,7 +354,8 @@ class A1Server:
                 for k, b in self.breakers.items()}
 
     def _dispatch(self, batch, ts_vec, fused: Optional[bool] = None,
-                  qclass: str = "q") -> QueryResult:
+                  qclass: str = "q",
+                  deadline: Optional[float] = None) -> QueryResult:
         """Base run + circuit-breaker-hedged retry.
 
         A fast-failed batch is retried once at 4x capacity (tail control,
@@ -327,11 +371,23 @@ class A1Server:
         the pool would have answered the retry answers identically.
         Queries whose own cap hints pin frontier/expand get those hints
         quadrupled too — otherwise the hint would override ``big`` and the
-        retry would re-run at exactly the failed budget."""
+        retry would re-run at exactly the failed budget.
+
+        The hedge decision derives from the remaining SLO budget: a wave
+        whose ``deadline`` has already passed gets no hedge at all
+        (``budget_denied_hedges``) — re-running a failed query past the
+        budget edge is exactly the waste the paper's 100 ms discipline
+        forbids — and a hedge that does run inherits the deadline, so its
+        not-yet-run groups truncate instead of overshooting."""
         faults_mod.check(self.db, "serve.wave.stall")
-        res = self._run(batch, self.caps, ts_vec, fused=fused)
+        res = self._run(batch, self.caps, ts_vec, fused=fused,
+                        deadline=deadline)
         if res.failed:
-            if self._breaker(qclass).allow():
+            t_hedge = time.monotonic()
+            if deadline is not None and t_hedge >= deadline:
+                self.stats["budget_denied_hedges"] += 1
+                self.stats["fastfails"] += 1
+            elif self._breaker(qclass).allow():
                 self.stats["hedged"] += 1
                 big = dataclasses.replace(
                     self.caps, frontier=self.caps.frontier * 4,
@@ -341,12 +397,13 @@ class A1Server:
                     retry = self._run(
                         [self._hedged_doc(batch[i]) for i in idx], big,
                         [ts_vec[i] for i in idx], fused=True,
-                        budget="per-query")
+                        budget="per-query", deadline=deadline)
                     self._patch(res, retry, idx)
                 else:
                     res = self._run([self._hedged_doc(q) for q in batch],
                                     big, ts_vec, fused=fused,
-                                    budget="per-query")
+                                    budget="per-query", deadline=deadline)
+                self._spend("hedge", (time.monotonic() - t_hedge) * 1e3)
                 if res.failed:
                     self.stats["fastfails"] += 1
             else:
@@ -371,6 +428,10 @@ class A1Server:
                     if retry.rows and key in retry.rows:
                         res.rows[key][i, :k] = retry.rows[key][j, :k]
             res.failed_q[i] = retry.failed_q[j]
+            if retry.deadline_q is not None and res.deadline_q is not None:
+                # the hedge itself ran out of budget: the query is now
+                # budget-truncated, not failed
+                res.deadline_q[i] = retry.deadline_q[j]
             if res.shared_ovf_q is not None:
                 # the retry ran per-query: any surviving failure is now
                 # self-inflicted, not a shared-pool eviction
@@ -388,15 +449,31 @@ class A1Server:
             truncated=sl(res.truncated),
             failed_q=sl(res.failed_q),
             shared_ovf_q=sl(res.shared_ovf_q),
+            deadline_q=sl(res.deadline_q),
             failed=res.failed if res.failed_q is None
             else bool(np.any(res.failed_q[:n])))
+
+    def _spend(self, stage: str, ms: float) -> None:
+        """Bucket one stage's budget spend into the /stats histogram."""
+        h = self.stats["budget_spend_ms"][stage]
+        for i, edge in enumerate(BUDGET_BUCKETS_MS):
+            if ms <= edge:
+                h[i] += 1
+                return
 
     # ------------------------------------------------------------------
     # continuation tokens (§3.4)
     # ------------------------------------------------------------------
-    def select_paged(self, query: dict) -> tuple[np.ndarray, Optional[str]]:
-        """Run a select query; return (first page, continuation token)."""
-        ts0 = self.db.snapshot_ts()
+    def select_paged(self, query: dict, *, read_ts: Optional[int] = None
+                     ) -> tuple[np.ndarray, Optional[str]]:
+        """Run a select query; return (first page, continuation token).
+
+        ``read_ts`` pins the page walk at a caller-chosen snapshot — the
+        cluster takeover path replays a lost coordinator's token at the
+        *original* token's timestamp so the remaining pages come back
+        bit-identical (the caller owns that pin; this method adds its own
+        for the token's lifetime either way)."""
+        ts0 = self.db.snapshot_ts() if read_ts is None else int(read_ts)
         self.db.active_query_ts.append(ts0)      # the token's pin
         token = None
         try:
@@ -514,6 +591,10 @@ class A1Server:
             # the client retries via the still-truncated token (or it
             # expires)
             return
+        if res.deadline_q is not None and bool(res.deadline_q[idx]):
+            # the wave it joined ran out of SLO budget before the refill's
+            # group dispatched: same keep-the-window contract as a failure
+            return
         rows = res.rows_gid[idx]
         new_rows = rows[rows >= 0]
         if c.cursor_mode:
@@ -584,7 +665,8 @@ class A1Server:
     # read admission (the §3.4 serving queue: SLB -> frontend backpressure)
     # ------------------------------------------------------------------
     def submit_query(self, query: dict, *, tenant: str = "default",
-                     qclass: str = "q") -> str:
+                     qclass: str = "q",
+                     budget_ms: Optional[float] = None) -> str:
         """Admit one client read; returns a query id to poll.
 
         Admission control runs *before* the queue grows: past the
@@ -593,11 +675,29 @@ class A1Server:
         drain estimate, costing dict ops, not a wave slot.  Malformed
         documents reject at admission (``REJECTED``) so a bad query can
         never poison a wave.  Admitted requests close into a fused wave at
-        ``read_batch`` or ``read_deadline_ms`` (serviced by
-        :meth:`query_result` polls, :meth:`pump`, or :meth:`flush_queries`).
-        Every admitted id terminates in exactly one stored result."""
+        ``read_batch`` or the wave-close deadline — fixed
+        ``read_deadline_ms`` if pinned, else the oldest member's
+        ``queue_frac`` budget spend (serviced by :meth:`query_result`
+        polls, :meth:`pump`, or :meth:`flush_queries`).  Every admitted id
+        terminates in exactly one stored result.
+
+        ``budget_ms`` is this request's SLO budget (default: the server's
+        ``budget_ms`` when running budget-derived deadlines, none when a
+        fixed ``read_deadline_ms`` was pinned).  An already-exhausted
+        budget (``<= 0``) short-circuits at admission: the truncated
+        ``budget_exhausted`` row is stored immediately — never queued, no
+        wave slot, the sub-millisecond fast-reject the paper's budget
+        discipline implies."""
         qid = uuid.uuid4().hex
         now = time.monotonic()
+        if budget_ms is None:
+            budget_ms = self._default_budget_ms
+        if budget_ms is not None and budget_ms <= 0:
+            self.stats["budget_exhausted"] += 1
+            self._store_read_result(qid, {
+                "status": "OK", "failed": False, "rows": [],
+                "truncated": True, "budget_exhausted": True})
+            return qid
         if len(self._read_q) >= self.shed_watermark:
             self.stats["sheds"] += 1
             self._store_read_result(qid, {
@@ -619,7 +719,10 @@ class A1Server:
             self._store_read_result(qid, {"status": "REJECTED",
                                           "reason": str(e)})
             return qid
-        self._read_q.append(_ReadReq(qid, query, tenant, qclass, now))
+        self._read_q.append(_ReadReq(
+            qid, query, tenant, qclass, now, budget_ms=budget_ms,
+            deadline=None if budget_ms is None
+            else now + budget_ms * 1e-3))
         self._tenant_inflight[tenant] += 1
         self.stats["admitted"] += 1
         if len(self._read_q) == 1:
@@ -654,7 +757,7 @@ class A1Server:
             # idle tick: decay the EWMA toward the deadline floor so a burst
             # of slow waves long past doesn't inflate shed retry-after hints
             # forever (_retry_after_ms trusts _wave_ms; stale is a lie)
-            self._wave_ms += 0.2 * (self.read_deadline_ms - self._wave_ms)
+            self._wave_ms += 0.2 * (self._read_floor_ms - self._wave_ms)
         n += nr
         self._sweep()
         self.tasks.pump(1)
@@ -662,9 +765,18 @@ class A1Server:
 
     def _retry_after_ms(self) -> float:
         """Drain estimate for a shed client: backlog waves x recent wave
-        wall time (EWMA), floored at one wave deadline."""
+        wall time (EWMA), floored at one wave deadline — *both* sides of
+        the house.  Reads and writes drain through the same serving loop
+        (a read wave closes the due mutation wave first), so a queued
+        write backlog delays the shed client's retry exactly like queued
+        reads do; quoting from the read EWMA alone under-estimates under
+        mixed overload."""
         waves = max(1, -(-len(self._read_q) // self.read_batch))
-        return round(waves * max(self._wave_ms, self.read_deadline_ms), 3)
+        est = waves * max(self._wave_ms, self._read_floor_ms)
+        if self._write_q:
+            wwaves = -(-len(self._write_q) // self.write_batch)
+            est += wwaves * max(self._wwave_ms, self._write_floor_ms)
+        return round(est, 3)
 
     def _store_read_result(self, qid: str, row: dict) -> None:
         self._read_results[qid] = row
@@ -673,8 +785,19 @@ class A1Server:
     def _maybe_close_read_wave(self) -> int:
         if self._closing or not self._read_q:
             return 0
-        due = (time.monotonic() - self._read_opened) * 1e3 \
-            >= self.read_deadline_ms
+        now = time.monotonic()
+        if self.read_deadline_ms is not None:      # pinned legacy deadline
+            due = (now - self._read_opened) * 1e3 >= self.read_deadline_ms
+        else:
+            # SLO-budget scheduling: the wave is due once any queued
+            # request has spent its queueing allowance (queue_frac of its
+            # budget) — the deadline knob derives from the budgets, not a
+            # constant
+            due = any(
+                r.budget_ms is not None
+                and (now - r.arrived) * 1e3
+                >= self.queue_frac * r.budget_ms
+                for r in self._read_q)
         if due or len(self._read_q) >= self.read_batch:
             return self._close_read_wave()
         return 0
@@ -695,11 +818,38 @@ class A1Server:
             if self._read_q:
                 self._read_opened = time.monotonic()
             t0 = time.monotonic()
+            # requests whose whole budget went to queueing answer here:
+            # truncated-with-flag, never a wave slot (§3.4 discards queries
+            # past the budget; we answer them with the exhaustion marker)
+            live = []
+            for r in wave:
+                if r.deadline is not None and t0 >= r.deadline:
+                    self._tenant_inflight[r.tenant] -= 1
+                    self.stats["budget_exhausted"] += 1
+                    self._spend("queue", (t0 - r.arrived) * 1e3)
+                    self._store_read_result(r.qid, {
+                        "status": "OK", "failed": False, "rows": [],
+                        "truncated": True, "budget_exhausted": True})
+                    self.latencies.setdefault(r.qclass, []).append(
+                        t0 - r.arrived)
+                else:
+                    live.append(r)
+            if not live:
+                self.stats["read_waves"] += 1
+                return len(wave)
+            # the wave's execution deadline: the earliest member's budget
+            # edge — one fused dispatch serves the whole wave, so the
+            # tightest budget bounds it (groups past the edge come back
+            # ``deadline_q`` for *every* member; the paper's budget is a
+            # shared discipline, not per-query slack)
+            edges = [r.deadline for r in live if r.deadline is not None]
+            wave_deadline = min(edges) if edges else None
             res, err = None, None
             for _ in range(2):
                 try:
-                    res = self.execute([r.query for r in wave],
-                                       qclass="wave")
+                    res = self.execute([r.query for r in live],
+                                       qclass="wave",
+                                       deadline=wave_deadline)
                     break
                 except faults_mod.InjectedFault as e:
                     err = e
@@ -713,8 +863,10 @@ class A1Server:
                 self._wave_ms = wall
                 self._wave_seeded = True
             done = time.monotonic()
-            for i, r in enumerate(wave):
+            for i, r in enumerate(live):
                 self._tenant_inflight[r.tenant] -= 1
+                self._spend("queue", (t0 - r.arrived) * 1e3)
+                self._spend("wave", wall)
                 if res is None:
                     self.stats["aborted_faults"] += 1
                     self._store_read_result(r.qid, {
@@ -724,6 +876,9 @@ class A1Server:
                     self.stats["served"] += 1
                 self.latencies.setdefault(r.qclass, []).append(
                     done - r.arrived)
+            if res is not None and res.deadline_q is not None:
+                self.stats["deadline_truncated_queries"] += int(
+                    np.asarray(res.deadline_q)[:len(live)].sum())
             self.stats["read_waves"] += 1
             return len(wave)
         finally:
@@ -740,24 +895,37 @@ class A1Server:
             r = res.rows_gid[i]
             row["rows"] = r[r >= 0].tolist()
             row["truncated"] = bool(res.truncated[i])
+        if res.deadline_q is not None and bool(res.deadline_q[i]):
+            # SLO-budget truncation: the group never dispatched.  Not a
+            # failure (failed stays False) — the client sees a partial
+            # result with the exhaustion marker and decides to retry
+            row["budget_exhausted"] = True
+            row["truncated"] = True
         return row
 
     # ------------------------------------------------------------------
     # write admission (§3.4 grows its first write-side machinery)
     # ------------------------------------------------------------------
-    def submit_write(self, ops) -> str:
+    def submit_write(self, ops, *, budget_ms: Optional[float] = None) -> str:
         """Admit one client write: a list of mutation-op records.
 
         The ops stage into their own transaction at the admission snapshot
         and queue for the next mutation wave, which closes at
-        ``write_batch`` transactions or ``write_deadline_ms`` — whichever
-        comes first (the deadline is serviced by query traffic via
-        :meth:`execute`, or by :meth:`flush_writes`).  Returns a write id;
-        poll :meth:`write_result` for the outcome.  Staging contract
-        violations (duplicate key, missing endpoint, ...) reject
-        immediately — the wave never sees them.
+        ``write_batch`` transactions or the wave-close deadline — fixed
+        ``write_deadline_ms`` when pinned, else once the oldest staged
+        write has spent ``queue_frac`` of its SLO budget queueing (the
+        deadline is serviced by query traffic via :meth:`execute`, or by
+        :meth:`flush_writes`).  Returns a write id; poll
+        :meth:`write_result` for the outcome.  Staging contract violations
+        (duplicate key, missing endpoint, ...) reject immediately — the
+        wave never sees them.  Write budgets drive *scheduling* only: an
+        admitted write always commits or aborts through its wave —
+        truncating a half-applied transaction is not a thing.
         """
         wid = uuid.uuid4().hex
+        if budget_ms is None:
+            budget_ms = (None if self.write_deadline_ms is not None
+                         else self.budget_ms)
         t = self.db.create_transaction()
         try:
             staged = self.db.write(list(ops), txn=t)
@@ -767,7 +935,8 @@ class A1Server:
                                         "reason": str(e), "gids": [], "ts": -1}
             self._write_exp[wid] = time.monotonic() + self.result_ttl
             return wid
-        self._write_q.append((wid, t, staged.gids))
+        self._write_q.append((wid, t, staged.gids,
+                              time.monotonic(), budget_ms))
         if len(self._write_q) == 1:
             self._wave_opened = time.monotonic()
         if len(self._write_q) >= self.write_batch:
@@ -789,17 +958,30 @@ class A1Server:
     def _maybe_close_write_wave(self, force: bool = False) -> int:
         if not self._write_q:
             return 0
-        due = (time.monotonic() - self._wave_opened) * 1e3 \
-            >= self.write_deadline_ms
+        now = time.monotonic()
+        if self.write_deadline_ms is not None:     # pinned legacy deadline
+            due = (now - self._wave_opened) * 1e3 >= self.write_deadline_ms
+        else:
+            due = any(
+                b is not None
+                and (now - arr) * 1e3 >= self.queue_frac * b
+                for _, _, _, arr, b in self._write_q)
         if force or due or len(self._write_q) >= self.write_batch:
             return self._close_write_wave()
         return 0
 
     def _close_write_wave(self) -> int:
         wave, self._write_q = self._write_q, []
-        res = self.db.write([t for _, t, _ in wave])
+        t0 = time.monotonic()
+        res = self.db.write([t for _, t, *_ in wave])
+        wall = (time.monotonic() - t0) * 1e3
+        if self._wwave_seeded:
+            self._wwave_ms = 0.7 * self._wwave_ms + 0.3 * wall
+        else:
+            self._wwave_ms = wall
+            self._wwave_seeded = True
         exp = time.monotonic() + self.result_ttl
-        for i, (wid, _, gids) in enumerate(wave):
+        for i, (wid, _, gids, *_) in enumerate(wave):
             ok = res.statuses[i] == "COMMITTED"
             self._write_results[wid] = {
                 "status": res.statuses[i], "reason": res.reasons[i],

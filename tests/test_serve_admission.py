@@ -354,3 +354,142 @@ def test_polled_results_do_not_leak_expiry_entries():
     assert not srv._write_exp and not srv._read_exp
     assert srv.stats["dropped_write_results"] == 0
     assert srv.stats["dropped_read_results"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO-budget scheduling (ISSUE 9: budgets replace fixed deadline constants)
+# ---------------------------------------------------------------------------
+
+def test_zero_budget_short_circuits_at_admission():
+    """An already-exhausted budget never queues and never takes a wave
+    slot: the truncated-with-flag row is stored at admission time."""
+    srv, db = mk_server()
+    qid = srv.submit_query(q_chain(0), budget_ms=0.0)
+    row = srv.query_result(qid)
+    assert row == {"status": "OK", "failed": False, "rows": [],
+                   "truncated": True, "budget_exhausted": True}
+    assert srv.stats["budget_exhausted"] == 1
+    assert srv.stats["admitted"] == 0 and srv.stats["read_waves"] == 0
+
+
+def test_queue_exhausted_budget_truncates_at_wave_close():
+    """A request whose whole budget went to queueing answers at wave close
+    with the exhaustion marker — no wave slot — while live members of the
+    same wave execute normally."""
+    srv, db = mk_server(read_batch=2)
+    q_small = srv.submit_query(q_chain(0), budget_ms=1.0)
+    time.sleep(0.005)                      # burn the 1 ms budget in queue
+    q_big = srv.submit_query(q_chain(1), budget_ms=1e9)  # closes the wave
+    small = srv.query_result(q_small)
+    big = srv.query_result(q_big)
+    assert small["budget_exhausted"] and small["truncated"]
+    assert not small["failed"] and small["rows"] == []
+    solo = db.query([q_chain(1)], caps=CAPS)
+    assert big["status"] == "OK" and big["count"] == int(solo.counts[0])
+    assert srv.stats["budget_exhausted"] == 1
+    assert srv.stats["served"] == 1 and srv.stats["read_waves"] == 1
+
+
+def test_wave_close_derives_from_budget_not_constant():
+    """With no pinned ``read_deadline_ms`` the wave-close deadline derives
+    from queued requests' budgets: due once any member spent
+    ``queue_frac`` x budget queueing."""
+    srv, db = mk_server(budget_ms=50.0, read_batch=64)
+    assert srv.read_deadline_ms is None and srv._default_budget_ms == 50.0
+    qid = srv.submit_query(q_chain(0))
+    time.sleep(0.010)                      # > queue_frac * 50 ms = 5 ms
+    row = srv.query_result(qid)            # poll drives the clock
+    assert row is not None and row["status"] == "OK"
+    assert "budget_exhausted" not in row   # exhausted the allowance, not
+    assert srv.stats["read_waves"] == 1    # the budget: wave ran normally
+
+
+def test_fixed_deadline_servers_keep_legacy_behavior():
+    """Pinning ``read_deadline_ms`` restores the fixed-constant wave clock
+    AND disables per-request budgets (back-compat contract)."""
+    srv, db = mk_server(read_batch=1, read_deadline_ms=1e9)
+    assert srv._default_budget_ms is None
+    qid = srv.submit_query(q_chain(0))
+    row = srv.query_result(qid)
+    assert row["status"] == "OK" and "budget_exhausted" not in row
+    assert srv.stats["budget_exhausted"] == 0
+
+
+def test_engine_deadline_truncates_without_failure():
+    """Fusion groups past the wave deadline are skipped whole: the slots
+    come back ``deadline_q``-truncated, never ``failed`` (§3.4 discard,
+    not an error)."""
+    db = busy_db()
+    res = db.query([q_chain(0), q_chain(0, select=["key"])], caps=CAPS,
+                   deadline=time.monotonic() - 1.0)
+    assert res.deadline_q is not None and res.deadline_q.all()
+    assert not res.failed and not res.failed_q.any()
+    assert res.truncated[1]                # select slot flags partiality
+
+
+def test_engine_deadline_requires_fused_path():
+    db = busy_db()
+    with pytest.raises(ValueError, match="fused"):
+        db.query([q_chain(0)], caps=CAPS, fused=False,
+                 deadline=time.monotonic() + 1.0)
+
+
+def test_hedge_denied_once_budget_exhausted(monkeypatch):
+    """A failed wave whose deadline has passed gets no hedged retry — the
+    budget discipline forbids re-running past the edge."""
+    db = busy_db()
+    tiny = QueryCaps(frontier=16, expand=2, results=4)
+    srv = A1Server(db, caps=tiny)
+    batch = [q_chain(0), q_chain(999), q_star(0, 301)]
+    srv.execute(batch)                     # warm compile; hedges once
+    hedged0 = srv.stats["hedged"]
+    real_run = srv._run
+
+    def straggler(queries, caps, read_ts, **kw):
+        res = real_run(queries, caps, read_ts, **kw)
+        time.sleep(0.05)                   # wave straggles past the edge
+        return res
+
+    monkeypatch.setattr(srv, "_run", straggler)
+    res = srv.execute(batch, deadline=time.monotonic() + 0.02)
+    assert res.failed                      # still fast-failed ...
+    assert srv.stats["budget_denied_hedges"] == 1
+    assert srv.stats["hedged"] == hedged0  # ... but no hedge ran
+    assert srv.stats["fastfails"] >= 1
+
+
+def test_budget_spend_histograms_populate():
+    """Every wave member's queue + wave spend lands in the /stats
+    per-stage histograms."""
+    srv, db = mk_server(read_batch=2)
+    for i in range(2):
+        srv.submit_query(q_chain(i))
+    hist = srv.stats["budget_spend_ms"]
+    assert sum(hist["queue"]) == 2 and sum(hist["wave"]) == 2
+    assert sum(hist["hedge"]) == 0
+
+
+def test_retry_after_folds_queued_write_backlog():
+    """Satellite 1: the shed retry-after estimate must include queued
+    write waves — both sides drain through the same serving loop."""
+    srv, db = mk_server(read_deadline_ms=1e9, write_deadline_ms=7.5,
+                        write_batch=1000)
+    base = srv._retry_after_ms()
+    for i in range(40):
+        srv.submit_write([CreateVertex("actor", 9000 + i)])
+    quoted = srv._retry_after_ms()
+    # 40 staged txns / batch 1000 = one write wave at the 7.5 ms floor
+    assert quoted == pytest.approx(base + 7.5, abs=1e-3)
+
+
+def test_shed_quote_reflects_write_backlog_end_to_end():
+    srv, db = mk_server(read_deadline_ms=1e9, write_deadline_ms=7.5,
+                        write_batch=1000, shed_watermark=1, read_batch=64)
+    srv.submit_query(q_chain(0))                     # fills the queue
+    shed_dry = srv.query_result(srv.submit_query(q_chain(1)))
+    for i in range(10):
+        srv.submit_write([CreateVertex("actor", 9100 + i)])
+    shed_wet = srv.query_result(srv.submit_query(q_chain(2)))
+    assert shed_dry["status"] == shed_wet["status"] == "SHED"
+    assert shed_wet["retry_after_ms"] == pytest.approx(
+        shed_dry["retry_after_ms"] + 7.5, abs=1e-3)
