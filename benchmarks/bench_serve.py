@@ -357,10 +357,82 @@ def _bench_recovery(n=48):
          f"n={n};region_reattach;speedup={t_cons / t_fast:.0f}x")
 
 
+# ---------------------------------------------------------------------------
+# failover recovery: primary kill -> first served write (membership + §4)
+# ---------------------------------------------------------------------------
+
+def _failover_db(n, cap_v, cap_e):
+    cfg = StoreConfig(n_shards=4, cap_v=cap_v, cap_e=cap_e, cap_delta=256,
+                      cap_idx=2 * cap_v, cap_idx_delta=cap_v,
+                      d_f32=2, d_i32=2)
+    db = GraphDB(cfg)
+    db.vertex_type("node", f_attrs=("w",))
+    db.edge_type("link")
+    vs = [db.create_vertex("node", i, {"w": float(i)}) for i in range(n)]
+    t = db.create_transaction()
+    for i in range(1, n):
+        db.create_edge(vs[0] if i % 3 else vs[i - 1], vs[i], "link", txn=t)
+    assert db.commit(t) == "COMMITTED"
+    db.run_compaction()
+    return db
+
+
+def _fleet_write(fe, key):
+    from repro.core.writes import CreateVertex
+    pub = fe.submit_write([CreateVertex("node", key, {"w": 0.0})])
+    for _ in range(200):
+        r = fe.write_result(pub)
+        if r is not None:
+            assert r["status"] == "COMMITTED", r
+            return
+        fe.flush()
+    raise AssertionError("write never terminated")
+
+
+def _bench_failover(smoke):
+    """Time from primary kill to the first write served by the promoted
+    replica, vs graph size — the membership/failover analogue of the §4
+    recovery rows.  The gate: losing the primary costs less than 10
+    steady-state write waves (evict + elect + promote is bookkeeping, not
+    a restart)."""
+    from repro.launch.cluster import A1Frontend
+    sizes = [(48, 512, 4096), (192, 1024, 8192)]
+    if not smoke:
+        sizes.append((768, 4096, 32768))
+    key = 10_000
+    for n, cap_v, cap_e in sizes:
+        db = _failover_db(n, cap_v, cap_e)
+        with A1Frontend(db, 3, caps=CAPS, write_batch=1,
+                        name=f"bench_fo{n}") as fe:
+            _fleet_write(fe, key)              # warm the write path (jit)
+            key += 1
+            steady = []
+            for _ in range(5):                 # steady single-txn waves
+                t0 = time.perf_counter()
+                _fleet_write(fe, key)
+                key += 1
+                steady.append(time.perf_counter() - t0)
+            steady_s = sorted(steady)[len(steady) // 2]
+            t0 = time.perf_counter()
+            fe.kill_worker(fe.membership.primary)
+            _fleet_write(fe, key)              # first post-failover write
+            key += 1
+            rec_s = time.perf_counter() - t0
+            assert fe.stats["failovers"] == 1
+            ratio = rec_s / steady_s
+            assert ratio < 10.0, (
+                f"failover recovery {rec_s * 1e3:.2f}ms is {ratio:.1f}x "
+                f"the steady write wave {steady_s * 1e3:.2f}ms (n={n})")
+            emit(f"recovery_failover_n{n}", rec_s * 1e6,
+                 f"steady_wave_us={steady_s * 1e6:.1f};"
+                 f"ratio={ratio:.1f}x;epoch={fe.membership.epoch}")
+
+
 def run(smoke: bool = False):
     _bench_overload(smoke)
     _bench_cluster(smoke)
     _bench_recovery()
+    _bench_failover(smoke)
 
 
 if __name__ == "__main__":

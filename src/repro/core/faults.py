@@ -40,6 +40,22 @@ must preserve):
                                   drops (or duplicates, site-armed twice)
                                   the frame; clients must retransmit and
                                   result polling must stay idempotent
+``membership.heartbeat.drop``     membership renewal — ``race`` loses that
+                                  heartbeat (the frame never arrived); the
+                                  lease keeps aging toward suspect/evict
+``membership.lease.expire``       membership ``tick`` — ``race``
+                                  force-expires the current primary's
+                                  lease (straight to evict) so failover
+                                  runs without waiting out real time
+``replication.ship.drop``         replication sweep / the frontend's wave
+                                  fan-out — ``race`` drops the whole ship
+                                  round; lag grows, watermarks must NOT
+                                  advance, and acked commits stay acked
+``primary.crash.midwave``         serve ``_close_write_wave``, after the
+                                  commit but before results are stored —
+                                  ``raise`` kills the primary at the
+                                  worst moment; failover must answer the
+                                  committed-but-unacked txns exactly once
 ================================  =========================================
 
 Firing is **seeded and deterministic**: a site fires on an explicit

@@ -13,6 +13,7 @@ created for that operation").
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Optional, Sequence
@@ -82,6 +83,13 @@ class GraphDB:
         self.compaction_watermark = 0.5     # delta fill fraction that triggers
         self._bg_compaction_pending = False
         self.faults = None                  # FaultInjector (chaos tests only)
+        # -- fleet replication (§4: primary-backup over committed waves) ------
+        self.config_epoch = 0               # membership epoch last adopted
+        self.wave_seq = 0                   # last wave applied here (frontier)
+        self.wave_log: collections.deque = collections.deque(maxlen=512)
+        self.wave_inbox: collections.deque = collections.deque()
+        self.applied_rids: collections.OrderedDict = collections.OrderedDict()
+        self.fleet_pins: list[int] = []     # frontend-of-record snapshot pins
 
     # ------------------------------------------------------------------
     # schema (control plane; each call = its own implicit txn, §3)
@@ -305,8 +313,13 @@ class GraphDB:
         """Records with delete_ts <= gc_ts are invisible to every running or
 
         future query (visibility is ``rts < delete_ts``), so they may be
-        reclaimed — the paper GC's versions once no query pins them (§2.2)."""
-        pins = self.active_query_ts
+        reclaimed — the paper GC's versions once no query pins them (§2.2).
+
+        Fleet pins count too: in a cluster the frontend is pin-of-record
+        for routed continuations, and it ships that list to every worker
+        (heartbeat/replicate frames) so no replica GCs a snapshot some
+        *other* coordinator's client is still paging."""
+        pins = list(self.active_query_ts) + list(self.fleet_pins)
         return min(pins) if pins else self.clock
 
     def run_compaction(self) -> None:

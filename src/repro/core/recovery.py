@@ -171,6 +171,15 @@ def _wire_db(s: dict, store) -> GraphDB:
     db._bg_compaction_pending = False
     db.faults = None
     db.backend = None
+    # fleet replication state (`.get`: pre-membership holds lack these)
+    import collections
+    db.config_epoch = 0
+    db.wave_seq = int(s.get("wave_seq", 0))
+    db.wave_log = collections.deque(maxlen=512)
+    db.wave_inbox = collections.deque()
+    db.applied_rids = collections.OrderedDict(
+        (k, dict(v)) for k, v in dict(s.get("applied_rids", {})).items())
+    db.fleet_pins = []
     return db
 
 
@@ -230,6 +239,9 @@ class FastRestartCache:
             vx_pos=dict(db._vx_pos),
             catalog=db.catalog,
             cfg=db.cfg,
+            wave_seq=int(getattr(db, "wave_seq", 0)),
+            applied_rids={k: dict(v) for k, v in
+                          dict(getattr(db, "applied_rids", {})).items()},
         )
 
     def restart(self, name: str) -> Optional[GraphDB]:

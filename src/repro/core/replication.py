@@ -29,7 +29,17 @@ from typing import Any, Optional
 import msgpack
 import numpy as np
 
+from repro.core import faults as faults_mod
+
 TOMBSTONE = "__tombstone__"
+
+
+class Fenced(IOError):
+    """A deposed primary's log tried to advance durable state: the
+    ObjectStore's configuration-epoch meta is newer than the log's.  The
+    §4 epoch fence — nothing ships, the sweep raises, and the (already
+    locally committed but never acknowledged) writes die with the old
+    primary instead of split-braining the durable copy."""
 
 
 class ObjectStore:
@@ -124,60 +134,80 @@ class ObjectStore:
 @dataclasses.dataclass
 class LogEntry:
     ts: int
-    kind: str          # 'v_upsert' | 'v_delete' | 'e_insert' | 'e_delete'
-    key: tuple         # logical identity
+    kind: str     # 'v_upsert' | 'v_delete' | 'e_insert' | 'e_delete' | 'wave'
+    key: tuple    # logical identity ('wave': the (seq,) singleton)
     value: Any = None
 
 
 class ReplicationLog:
-    """The FaRM-resident replication log + sweeper (§4)."""
+    """The FaRM-resident replication log + sweeper (§4).
 
-    def __init__(self, objectstore: ObjectStore, *, graph: str = "g"):
+    ``ship_waves=True`` (the cluster frontend's durable log) additionally
+    ships every committed *wave record* into a ``{graph}.waves`` table
+    with a ``{graph}.wave_frontier`` meta — the WAL tail a failover reads
+    back to bring a promoted replica to the commit frontier.  ``epoch``
+    arms the durable fence: a sweep whose epoch is older than the
+    ObjectStore's ``{graph}.epoch`` meta raises :class:`Fenced`."""
+
+    def __init__(self, objectstore: ObjectStore, *, graph: str = "g",
+                 ship_waves: bool = False):
         self.os = objectstore
         self.graph = graph
         self.entries: list[LogEntry] = []    # FIFO, unshipped
         self.db = None                       # backref set by GraphDB owner
-        self.shipped_ts = 0                  # t_R candidate
+        self.shipped_ts = 0                  # durable t_R (never ahead)
+        self.ship_waves = bool(ship_waves)
+        self.epoch: Optional[int] = None     # config epoch (None = unfenced)
+        self.faults = None                   # injector for db-less logs
+        self._max_ts = 0                     # highest ts ever appended
+        self._max_seq = 0                    # highest wave seq ever appended
 
     # -- called transactionally with each commit wave (writes.commit_wave) ---
-    def append(self, ts: int, winners) -> None:
-        assert self.db is not None, "attach with log.db = db"
-        db = self.db
-        for t in winners:
-            for gid, vtype, key, f, i in t.create_v:
-                self.entries.append(LogEntry(
-                    ts, "v_upsert", (int(vtype), int(key)),
-                    [np.asarray(f).tolist(), np.asarray(i).tolist()]))
-            for gid, f, i in t.update_v:
-                vt, key, _ = db._read_header_host(gid, ts)
+    def append_wave(self, rec: dict) -> None:
+        """Enqueue one committed wave record's logical entries (+ the wave
+        record itself when this log ships waves), then attempt the §4
+        synchronous ship; failures leave entries for the sweeper.
+
+        The record already carries the logical identities (resolved at
+        commit time by ``writes.wave_record``), so this path needs no
+        ``db`` backref — the cluster frontend runs one of these logs with
+        nothing but an ObjectStore behind it."""
+        ts = int(rec["ts"])
+        for tr in rec["txns"]:
+            for _g, vt, key, f, i in tr["create_v"]:
                 self.entries.append(LogEntry(
                     ts, "v_upsert", (int(vt), int(key)),
-                    [np.asarray(f).tolist(), np.asarray(i).tolist()]))
-            for gid, vtype, key in t.delete_v:
+                    [list(f), list(i)]))
+            for _g, vt, key, f, i in tr["update_v"]:
                 self.entries.append(LogEntry(
-                    ts, "v_delete", (int(vtype), int(key))))
-            for src, dst, et in t.create_e:
-                sk = self._ident(src, ts)
-                dk = self._ident(dst, ts)
+                    ts, "v_upsert", (int(vt), int(key)),
+                    [list(f), list(i)]))
+            for _g, vt, key in tr["delete_v"]:
                 self.entries.append(LogEntry(
-                    ts, "e_insert", (*sk, int(et), *dk)))
-            for src, dst, et in t.delete_e:
-                sk = self._ident(src, ts)
-                dk = self._ident(dst, ts)
+                    ts, "v_delete", (int(vt), int(key))))
+            for _s, _d, et, svt, sk, dvt, dk in tr["create_e"]:
                 self.entries.append(LogEntry(
-                    ts, "e_delete", (*sk, int(et), *dk)))
-        # synchronous ship attempt (§4: "synchronously with the customer
-        # request"); failures leave entries for the sweeper
+                    ts, "e_insert",
+                    (int(svt), int(sk), int(et), int(dvt), int(dk))))
+            for _s, _d, et, svt, sk, dvt, dk in tr["delete_e"]:
+                self.entries.append(LogEntry(
+                    ts, "e_delete",
+                    (int(svt), int(sk), int(et), int(dvt), int(dk))))
+        if self.ship_waves:
+            self.entries.append(LogEntry(ts, "wave", (int(rec["seq"]),),
+                                         rec))
+            self._max_seq = max(self._max_seq, int(rec["seq"]))
+        self._max_ts = max(self._max_ts, ts)
         try:
             self.sweep()
         except IOError:
             pass
 
-    def _ident(self, gid: int, ts: int) -> tuple:
-        vt, key, alive = self.db._read_header_host(gid, ts)
-        if not alive:     # deleted in the same batch: read pre-delete state
-            vt, key, _ = self.db._read_header_host(gid, ts - 1)
-        return (int(vt), int(key))
+    def append(self, ts: int, winners) -> None:
+        """Back-compat txn-list entry point (pre-wave-record callers)."""
+        assert self.db is not None, "attach with log.db = db"
+        from repro.core import writes as writes_mod
+        self.append_wave(writes_mod.wave_record(self.db, winners, ts, 0))
 
     # -- shipping --------------------------------------------------------------
     def _ship_one(self, e: LogEntry) -> None:
@@ -197,24 +227,56 @@ class ReplicationLog:
             self.os.upsert(f"{g}.edges", e.key, TOMBSTONE, e.ts)
             self.os.upsert(f"{g}.edges.versions", (*e.key, e.ts), TOMBSTONE,
                            e.ts)
+        elif e.kind == "wave":
+            self.os.upsert(f"{g}.waves", e.key, e.value, e.ts)
 
     def sweep(self, budget: Optional[int] = None) -> int:
         """Flush unshipped entries FIFO (the async sweeper).  Returns the
+        number shipped.
 
-        number shipped.  Updates the durable t_R watermark."""
+        Watermark discipline (the crash-between contract): ``shipped_ts``
+        and the durable ``t_R`` / ``wave_frontier`` metas advance only to
+        the frontier that is *actually durable* — computed from what
+        remains unshipped after this batch, inside a ``finally`` so a
+        mid-batch failure (``ObjectStore.fail_next``, an injected
+        ``replication.ship.drop``) can never leave a watermark ahead of
+        the rows the store holds.  Advancement is monotonic: a fresh log
+        over a store with history (the failover case) never regresses the
+        durable watermark either."""
+        if self.epoch is not None:
+            cur = self.os.get_meta(f"{self.graph}.epoch")
+            if cur is not None and int(cur) > int(self.epoch):
+                raise Fenced(
+                    f"epoch {self.epoch} fenced by durable epoch {cur}")
+        owner = self.db if self.db is not None else self
         shipped = 0
-        while self.entries and (budget is None or shipped < budget):
-            e = self.entries[0]
-            self._ship_one(e)          # raises on (injected) failure
-            self.entries.pop(0)
-            shipped += 1
-            self.shipped_ts = max(self.shipped_ts, e.ts)
-        # t_R: all writes <= t_R are durable iff the log has no older entry
-        oldest_unshipped = self.entries[0].ts if self.entries else None
-        t_r = (oldest_unshipped - 1 if oldest_unshipped is not None
-               else self.shipped_ts)
-        self.os.put_meta(f"{self.graph}.t_R", int(t_r))
+        try:
+            if faults_mod.check(owner, "replication.ship.drop"):
+                raise IOError("replication ship dropped (injected)")
+            while self.entries and (budget is None or shipped < budget):
+                e = self.entries[0]
+                self._ship_one(e)      # raises on (injected) failure
+                self.entries.pop(0)
+                shipped += 1
+        finally:
+            self._advance_watermarks()
         return shipped
+
+    def _advance_watermarks(self) -> None:
+        # t_R: all writes <= t_R are durable.  Any unshipped entry at ts
+        # caps it at ts-1 (FIFO: everything older already shipped whole).
+        oldest = self.entries[0].ts if self.entries else None
+        t_r = (oldest - 1) if oldest is not None else self._max_ts
+        t_r = max(t_r, self.shipped_ts,
+                  int(self.os.get_meta(f"{self.graph}.t_R", 0)))
+        self.shipped_ts = t_r
+        self.os.put_meta(f"{self.graph}.t_R", int(t_r))
+        if self.ship_waves:
+            pend = [e.key[0] for e in self.entries if e.kind == "wave"]
+            frontier = (min(pend) - 1) if pend else self._max_seq
+            frontier = max(frontier, int(self.os.get_meta(
+                f"{self.graph}.wave_frontier", 0)))
+            self.os.put_meta(f"{self.graph}.wave_frontier", int(frontier))
 
     def lag(self) -> int:
         return len(self.entries)

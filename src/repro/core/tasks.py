@@ -110,6 +110,26 @@ def vacuum_task() -> Task:
     return Task("vacuum", run)
 
 
+def wave_replay_task(*, per_quantum: int = 8) -> Task:
+    """Replica tail-replay (§4): drain ``db.wave_inbox`` — committed wave
+    records the frontend fanned out — through ``writes.replay_wave``,
+    ``per_quantum`` records per quantum, rescheduling while the inbox is
+    nonempty.  High priority (replication lag is user-visible staleness;
+    compaction can wait) but still cooperative: a quantum killed by
+    ``tasks.quantum`` chaos re-enqueues and the frontier is exactly where
+    the last applied record left it (replay is idempotent by seq)."""
+    from repro.core import writes as writes_mod
+
+    def run(db, task):
+        n = 0
+        while db.wave_inbox and n < per_quantum:
+            writes_mod.replay_wave(db, db.wave_inbox.popleft())
+            n += 1
+        return [task] if db.wave_inbox else []
+
+    return Task("wave-replay", run, priority=5)
+
+
 def background_compaction_task(*, kinds=None, max_rebuilds: int = 4) -> Task:
     """Two-phase threshold-triggered compaction (§2.2 concurrent GC, §3.3).
 

@@ -59,7 +59,7 @@ class Transaction:
     """
 
     __slots__ = ("read_ts", "reads", "create_v", "update_v", "delete_v",
-                 "create_e", "delete_e", "status")
+                 "create_e", "delete_e", "status", "rid")
 
     def __init__(self, read_ts: int):
         self.read_ts = int(read_ts)
@@ -70,6 +70,9 @@ class Transaction:
         self.create_e: list[tuple] = []             # (src, dst, etype)
         self.delete_e: list[tuple] = []             # (src, dst, etype)
         self.status = "OPEN"
+        self.rid: Optional[str] = None              # client request id
+        # (stamped by serving admission; committed waves record it so
+        # failover replay is exactly-once per client request, §4)
 
     def record_read(self, gid: int) -> None:
         if gid is not None and gid >= 0:

@@ -341,6 +341,35 @@ def commit_wave(db, txns: Sequence, caps=None):
         return status, reason
 
     # 3) capacity backstop: inline-compact only if the logs would overflow --
+    _ensure_capacity(db, winners)
+
+    # 4) apply winners, chunked under the static batch caps; winners are
+    #    mutually conflict-free, so chunked application at increasing
+    #    timestamps preserves the batch's serializable order.  Each chunk
+    #    becomes one *wave record* — physical gids plus the logical
+    #    identities resolved at commit time — the unit of fleet
+    #    replication (§4): ``replay_wave`` re-applies it on a replica,
+    #    ``ReplicationLog.append_wave`` ships it durably.
+    for chunk in _chunks(winners, caps):
+        ts = db.clock + 1
+        _apply_chunk(db, chunk, ts)
+        seq = db.wave_seq + 1
+        rec = wave_record(db, chunk, ts, seq)
+        db.wave_seq = seq
+        db.wave_log.append(rec)
+        _remember_rids(db, chunk, ts)
+        if db.replication_log is not None:
+            db.replication_log.append_wave(rec)
+    db.stats["commits"] += len(winners)
+    db.stats["aborts"] += len(txns) - len(winners)
+    db.stats["write_waves"] += 1
+    db._maybe_schedule_compaction()
+    return status, reason
+
+
+def _ensure_capacity(db, winners) -> None:
+    """Step 3 of the wave: inline-compact only as the overflow backstop."""
+    cfg = db.cfg
     n_ce = sum(len(t.create_e) for t in winners)
     n_de = sum(len(t.delete_e) for t in winners)
     n_cv = sum(len(t.create_v) for t in winners)
@@ -358,29 +387,140 @@ def commit_wave(db, txns: Sequence, caps=None):
             if np.any(db.vx_count + need > cfg.cap_vec):
                 raise CapacityError("vector index full; raise cap_vec")
 
-    # 4) apply winners, chunked under the static batch caps; winners are
-    #    mutually conflict-free, so chunked application at increasing
-    #    timestamps preserves the batch's serializable order.
-    for chunk in _chunks(winners, caps):
-        ts = db.clock + 1
-        shapes, args = _build_wave(db, chunk)
-        fn = _apply_program(cfg, shapes)
-        db.store = fn(db.store, jnp.int32(ts), *args)
-        db.clock = ts
-        if db._vindexed:
-            from repro.core import vindex as vindex_mod
-            vindex_mod.apply_wave(db, chunk, ts)
-        if any(t.delete_e for t in chunk):
-            db.epochs["delete_e"] += 1
-        if any(t.delete_v for t in chunk):
-            db.epochs["delete_v"] += 1
-        if db.replication_log is not None:
-            db.replication_log.append(ts, chunk)
-    db.stats["commits"] += len(winners)
-    db.stats["aborts"] += len(txns) - len(winners)
-    db.stats["write_waves"] += 1
+
+def _apply_chunk(db, chunk, ts: int) -> None:
+    """Apply one winner chunk at commit timestamp ``ts`` (the fused
+    program dispatch + host bookkeeping shared by commit and replay)."""
+    shapes, args = _build_wave(db, chunk)
+    fn = _apply_program(db.cfg, shapes)
+    db.store = fn(db.store, jnp.int32(ts), *args)
+    db.clock = max(db.clock, ts)
+    if db._vindexed:
+        from repro.core import vindex as vindex_mod
+        vindex_mod.apply_wave(db, chunk, ts)
+    if any(t.delete_e for t in chunk):
+        db.epochs["delete_e"] += 1
+    if any(t.delete_v for t in chunk):
+        db.epochs["delete_v"] += 1
+
+
+def _remember_rids(db, chunk, ts: int) -> None:
+    """Record each committed txn's client rid -> outcome.  A promoted
+    replica answers ``write_by_rid`` lookups from this map, and a
+    re-admitted request whose rid is already here returns the ORIGINAL
+    result instead of committing twice (exactly-once across failover)."""
+    for t in chunk:
+        rid = getattr(t, "rid", None)
+        if rid is None:
+            continue
+        db.applied_rids[rid] = {
+            "ts": int(ts), "gids": [int(g) for g, *_ in t.create_v]}
+    while len(db.applied_rids) > 4096:
+        db.applied_rids.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
+# Wave records: the unit of fleet replication (§4)
+# ---------------------------------------------------------------------------
+
+def _edge_ident(db, gid: int, ts: int) -> tuple:
+    vt, key, alive = db._read_header_host(gid, ts)
+    if not alive:                   # deleted in the same batch: pre-state
+        vt, key, _ = db._read_header_host(gid, ts - 1)
+    return int(vt), int(key)
+
+
+def wave_record(db, chunk, ts: int, seq: int) -> dict:
+    """One committed chunk as a JSON-safe record.
+
+    Carries the physical op arrays (gids are primary-assigned and ship
+    verbatim — replicas replay them so physical ids agree fleet-wide)
+    *plus* the logical identities resolved at commit time (update targets,
+    edge endpoints), so a db-less consumer (the frontend's durable
+    :class:`~repro.core.replication.ReplicationLog`) can derive the
+    logical log entries without a store to read headers from."""
+    txns = []
+    for t in chunk:
+        uv = []
+        for gid, f, i in t.update_v:
+            vt, key, _ = db._read_header_host(gid, ts)
+            uv.append([int(gid), int(vt), int(key),
+                       np.asarray(f).tolist(), np.asarray(i).tolist()])
+        txns.append({
+            "rid": getattr(t, "rid", None),
+            "create_v": [[int(g), int(vt), int(k),
+                          np.asarray(f).tolist(), np.asarray(i).tolist()]
+                         for g, vt, k, f, i in t.create_v],
+            "update_v": uv,
+            "delete_v": [[int(g), int(vt), int(k)]
+                         for g, vt, k in t.delete_v],
+            "create_e": [[int(s), int(d), int(et),
+                          *_edge_ident(db, s, ts), *_edge_ident(db, d, ts)]
+                         for s, d, et in t.create_e],
+            "delete_e": [[int(s), int(d), int(et),
+                          *_edge_ident(db, s, ts), *_edge_ident(db, d, ts)]
+                         for s, d, et in t.delete_e],
+        })
+    return {"seq": int(seq), "ts": int(ts),
+            "epoch": int(getattr(db, "config_epoch", 0)), "txns": txns}
+
+
+def replay_wave(db, rec: dict) -> int:
+    """Apply one shipped wave record on a replica (the tail-replay step).
+
+    Idempotent: a record at or below the local wave frontier is skipped
+    (the rid-cache / retransmit path can deliver duplicates).  A gap means
+    the replica fell off the bounded wave log and needs a full resync —
+    that is an error, not a silent hole.  Replay runs at the record's
+    ORIGINAL commit timestamp, so MVCC snapshots are fleet-identical:
+    a read at ``read_ts`` answers the same rows on every coordinator.
+    Returns 1 when applied, 0 when skipped."""
+    seq = int(rec["seq"])
+    if seq <= db.wave_seq:
+        return 0
+    if seq != db.wave_seq + 1:
+        raise ValueError(
+            f"replication gap: local frontier {db.wave_seq}, got {seq}; "
+            "full resync required")
+    ts = int(rec["ts"])
+    chunk = []
+    for tr in rec["txns"]:
+        t = txn_mod.Transaction(read_ts=0)
+        t.rid = tr.get("rid")
+        t.status = "COMMITTED"
+        for g, vt, k, f, i in tr["create_v"]:
+            t.create_v.append((int(g), int(vt), int(k),
+                               np.asarray(f, np.float32),
+                               np.asarray(i, np.int32)))
+        for g, vt, k, f, i in tr["update_v"]:
+            t.update_v.append((int(g), np.asarray(f, np.float32),
+                               np.asarray(i, np.int32)))
+        t.delete_v = [(int(g), int(vt), int(k))
+                      for g, vt, k in tr["delete_v"]]
+        t.create_e = [(int(s), int(d), int(et))
+                      for s, d, et, *_ in tr["create_e"]]
+        t.delete_e = [(int(s), int(d), int(et))
+                      for s, d, et, *_ in tr["delete_e"]]
+        chunk.append(t)
+    _ensure_capacity(db, chunk)
+    # reserve primary-assigned gids: if this replica is later promoted it
+    # must never re-allocate a slot the old primary already handed out
+    S = db.cfg.n_shards
+    for t in chunk:
+        for g, *_ in t.create_v:
+            sh, slot = int(g) % S, int(g) // S
+            if db.v_next[sh] <= slot:
+                db.v_next[sh] = slot + 1
+            elif slot in db.v_free[sh]:
+                db.v_free[sh].remove(slot)
+    _apply_chunk(db, chunk, ts)
+    db.wave_seq = seq
+    db.wave_log.append(rec)
+    db.config_epoch = max(db.config_epoch, int(rec.get("epoch", 0)))
+    _remember_rids(db, chunk, ts)
+    db.stats["replayed_waves"] = db.stats.get("replayed_waves", 0) + 1
     db._maybe_schedule_compaction()
-    return status, reason
+    return 1
 
 
 def _chunks(winners, caps):

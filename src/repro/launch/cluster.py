@@ -18,9 +18,27 @@ arrays — the contract ``core/README.md`` documents):
     slot as one POSIX shared-memory segment and spawns real worker
     processes that ``attach_shared``-map the same pages (one host copy of
     the graph; each worker pays only its own §5.3 device re-attach) and
-    serve JSON frames over TCP.  Process mode is the *read-path* scale-out
-    — writes would mutate one worker's private device arrays, so
-    ``submit_write`` raises there; route writes through an inproc fleet.
+    serve JSON frames over TCP.  Writes are **fleet-visible** here too:
+    the elected primary commits mutation waves against its own device
+    arrays and the frontend ships the committed wave records (§4) to
+    every replica, which tail-replays them at the ORIGINAL commit
+    timestamps — MVCC snapshots and physical gids agree fleet-wide, and a
+    read routed to any alive coordinator sees an acked write within the
+    advertised replication lag (``/stats``).
+
+**Membership, epochs, failover** (:mod:`repro.core.membership`).  The
+frontend is the configuration manager: every worker holds a heartbeat
+lease; a worker that misses renewals goes suspect, then evicted, and
+every configuration change bumps a monotonic **epoch**.  All frames are
+stamped with the sender's epoch — a coordinator that sees a stale epoch
+bounces the frame (``STALE_EPOCH``, the fencing token), and a deposed
+primary's wave close is refused by its ``write_fence`` before the store
+is touched.  When the primary's lease expires (or its crash is detected)
+the most caught-up replica is elected, promoted with the WAL tail it has
+not yet applied, and write waves resume; an acked commit is never lost,
+and an unacked in-flight write either resolves to its ORIGINAL result
+via rid-idempotent replay (exactly once) or answers
+``ABORTED_FAILOVER`` with a retry hint — never a silent drop.
 
 **SLB routing.**  Fresh queries go to the least-loaded coordinator — the
 load signal is each worker's wave-wall EWMA (``_wave_ms``) times its
@@ -56,7 +74,11 @@ from typing import Optional
 import numpy as np
 
 from repro.core import faults as faults_mod
+from repro.core import tasks as tasks_mod
+from repro.core import writes as writes_mod
+from repro.core.membership import Membership
 from repro.core.recovery import FastRestartCache
+from repro.core.replication import ObjectStore, ReplicationLog
 from repro.launch.serve import A1Server
 from repro.launch.transport import (MemoryChannel, WorkerClient,
                                     decode_write_op, encode_write_op,
@@ -82,19 +104,66 @@ class Coordinator:
     cached so a retransmit (duplicate frame after a lost response) returns
     the *original* answer instead of re-executing — at-least-once delivery
     with exactly-once effects, which is what makes result polling
-    idempotent under ``transport.drop`` chaos."""
+    idempotent under ``transport.drop`` chaos.
 
-    def __init__(self, cid: int, db, **server_kw):
+    Each coordinator also tracks the configuration ``epoch`` and its
+    ``role`` ("primary" commits write waves; "replica" refuses them).  A
+    frame stamped with an older epoch bounces ``STALE_EPOCH`` — the
+    fencing token of §2/FaRM — and a frame that proves a NEWER config in
+    which someone else is primary demotes this coordinator on the spot
+    (staged writes answer ``ABORTED_FAILOVER``; the store is untouched).
+    Promotion is only ever explicit (the ``promote`` op, which carries
+    the WAL tail this replica has not yet applied)."""
+
+    def __init__(self, cid: int, db, *, role: str = "primary",
+                 fence=None, **server_kw):
         self.cid = int(cid)
-        self.server = A1Server(db, **server_kw)
+        self.role = role
+        self.epoch = 1
+        self.fence = fence            # extra membership fence (inproc CM)
+        self.server = A1Server(db, write_fence=self._write_fence,
+                               **server_kw)
         self._rids: "collections.OrderedDict[str, dict]" = \
             collections.OrderedDict()
         import threading
         self._lock = threading.Lock()
 
+    def _write_fence(self) -> bool:
+        """Commit-time check: may this coordinator close a write wave?"""
+        if self.role != "primary":
+            return False
+        if self.fence is not None and not self.fence():
+            return False              # the CM's view says we were deposed
+        return True
+
+    def _demote(self) -> None:
+        self.role = "replica"
+        self.server.abort_staged_writes("primary deposed")
+
     # -- dispatch -------------------------------------------------------
     def handle(self, msg: dict) -> dict:
         with self._lock:
+            e = msg.get("epoch")
+            if e is not None:
+                e = int(e)
+                if e < self.epoch:
+                    # fencing: a frame from a configuration the fleet has
+                    # left.  Bounced, NOT rid-cached — the sender restamps
+                    # at the current epoch and retries under a fresh rid.
+                    s = self.server
+                    return {"status": "STALE_EPOCH", "epoch": self.epoch,
+                            "_load": {"wave_ms": s._wave_ms,
+                                      "inflight": (len(s._read_q)
+                                                   + len(s._write_q))}}
+                if e > self.epoch:
+                    self.epoch = e
+                    db = self.server.db
+                    db.config_epoch = max(
+                        getattr(db, "config_epoch", 0), e)
+                p = msg.get("primary")
+                if (p is not None and int(p) != self.cid
+                        and self.role == "primary"):
+                    self._demote()    # the new config elected someone else
             rid = msg.get("rid")
             if rid is not None and rid in self._rids:
                 return self._rids[rid]
@@ -145,18 +214,80 @@ class Coordinator:
         if op == "adopt":
             return self._adopt(msg)
         if op == "write":
+            if self.role != "primary":
+                # stale SLB view of the primaryship: bounce, never stage a
+                # write on a replica (it could only ever abort or fork)
+                return {"status": "NOT_PRIMARY", "epoch": self.epoch}
             wid = s.submit_write([decode_write_op(d) for d in msg["ops"]],
-                                 budget_ms=msg.get("budget_ms"))
+                                 budget_ms=msg.get("budget_ms"),
+                                 wid=msg.get("wid"))
             return {"status": "OK", "wid": wid}
         if op == "write_result":
             return {"status": "OK", "result": s.write_result(msg["wid"])}
+        if op == "write_by_rid":
+            # failover resolution: did a wave with this rid ever commit
+            # here (directly or via replay)?  Exactly-once by construction.
+            hit = getattr(s.db, "applied_rids", {}).get(msg["wid"])
+            if hit is None:
+                return {"status": "OK", "result": None}
+            return {"status": "OK",
+                    "result": {"status": "COMMITTED", "reason": None,
+                               "gids": list(hit["gids"]),
+                               "ts": int(hit["ts"])}}
+        if op == "heartbeat":
+            # lease renewal carrying the CM's pin-of-record (fleet pins
+            # hold MVCC GC on every replica) and returning how far this
+            # worker's replication frontier has advanced
+            if "pins" in msg:
+                s.db.fleet_pins = [int(t) for t in msg["pins"]]
+            return {"status": "OK", "role": self.role, "epoch": self.epoch,
+                    "applied_seq": int(getattr(s.db, "wave_seq", 0)),
+                    "gc_ts": int(s.db.gc_ts())}
+        if op == "ship":
+            # primary-side: hand the CM every committed wave record past
+            # the durable/replicated frontier (§4 replication log pull)
+            after = int(msg.get("after", 0))
+            return {"status": "OK",
+                    "waves": [r for r in getattr(s.db, "wave_log", ())
+                              if r["seq"] > after],
+                    "seq": int(getattr(s.db, "wave_seq", 0))}
+        if op == "replicate":
+            # replica-side: queue the shipped records on the wave inbox
+            # and drain them through the tail-replay task (idempotent by
+            # seq, applied at the ORIGINAL commit timestamps)
+            fresh = [r for r in msg.get("waves", ())
+                     if int(r["seq"]) > s.db.wave_seq]
+            if fresh:
+                s.db.wave_inbox.extend(fresh)
+                s.tasks.enqueue(tasks_mod.wave_replay_task())
+                guard = 0
+                while s.db.wave_inbox and guard < 10_000:
+                    s.tasks.pump()
+                    guard += 1
+            if "pins" in msg:
+                s.db.fleet_pins = [int(t) for t in msg["pins"]]
+            return {"status": "OK", "applied_seq": int(s.db.wave_seq)}
+        if op == "promote":
+            # failover: replay the WAL tail to the commit frontier, then
+            # take the primaryship at the new epoch
+            for rec in msg.get("waves", ()):
+                writes_mod.replay_wave(s.db, rec)
+            self.role = "primary"
+            self.epoch = max(self.epoch, int(msg["epoch"]))
+            s.db.config_epoch = max(
+                getattr(s.db, "config_epoch", 0), self.epoch)
+            return {"status": "OK", "applied_seq": int(s.db.wave_seq)}
         if op == "pump":
             return {"status": "OK", "n": s.pump()}
         if op == "flush":
             return {"status": "OK",
                     "n": s.flush_queries() + s.flush_writes()}
         if op == "stats":
-            return {"status": "OK", "stats": s.stats,
+            st = dict(s.stats)
+            st["role"] = self.role
+            st["epoch"] = self.epoch
+            st["wave_seq"] = int(getattr(s.db, "wave_seq", 0))
+            return {"status": "OK", "stats": st,
                     "latency": s.latency_report(),
                     "breakers": s.breaker_state()}
         return {"status": "ERROR", "reason": f"unknown op {op!r}"}
@@ -227,12 +358,18 @@ class _ProcWorker:
         self.client = client
         self.alive = True
 
+    @property
+    def suspect(self) -> bool:
+        """Hung (recv timeout), as opposed to dead: the membership layer
+        stops renewing its lease instead of evicting on the spot."""
+        return self.client.suspect
+
     def request(self, msg: dict) -> Optional[dict]:
         if not self.alive:
             return None
         resp = self.client.request(msg)
-        if resp is None:
-            self.alive = False
+        if resp is None and not self.client.suspect:
+            self.alive = False        # refused/reset: the process is gone
         return resp
 
     def kill(self) -> None:
@@ -242,7 +379,8 @@ class _ProcWorker:
         self.client.close()
 
 
-def _worker_main(cid: int, manifest: dict, conn, server_kw: dict) -> None:
+def _worker_main(cid: int, manifest: dict, conn, server_kw: dict,
+                 role: str = "replica") -> None:
     """Entry point of a spawned coordinator worker (process mode)."""
     from repro.core.query import planner
     from repro.core.recovery import attach_shared
@@ -253,7 +391,7 @@ def _worker_main(cid: int, manifest: dict, conn, server_kw: dict) -> None:
     # budget — restart time is §5.3's problem, not the client's
     planner.delta_window(db)
     planner.index_window(db)
-    coord = Coordinator(cid, db, **server_kw)
+    coord = Coordinator(cid, db, role=role, **server_kw)
     port, _shutdown = serve_worker(coord.handle)
     conn.send(port)
     conn.close()
@@ -276,7 +414,10 @@ class A1Frontend:
 
     def __init__(self, db, n_workers: int = 4, *, mode: str = "inproc",
                  name: str = "cluster", cache: Optional[FastRestartCache]
-                 = None, budget_ms: float = 100.0, **server_kw):
+                 = None, budget_ms: float = 100.0, lease_s: float = 2.0,
+                 membership_clock=None, recv_timeout_s: Optional[float]
+                 = None, objectstore: Optional[ObjectStore] = None,
+                 **server_kw):
         if mode not in ("inproc", "process"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
@@ -290,18 +431,35 @@ class A1Frontend:
                       "takeovers": 0, "rescued_queries": 0,
                       "retransmits": 0, "worker_kills": 0,
                       "budget_exhausted_frontend": 0,
-                      "frames_sent": 0, "frames_dropped": 0}
+                      "frames_sent": 0, "frames_dropped": 0,
+                      "failovers": 0, "replicated_waves": 0,
+                      "ship_drops": 0}
         self._load: dict[int, float] = {}
         self._rr = 0
         self._qidmeta: dict[str, dict] = {}     # pub qid -> routing meta
         self._tokmeta: dict[str, dict] = {}     # pub token -> routing meta
         self._local: dict[str, dict] = {}       # frontend-answered results
+        self._widmeta: dict[str, dict] = {}     # pub write id -> {cid, wid}
+        self._applied: dict[int, int] = {}      # cid -> replicated wave seq
+        self._shipped_seq = 0                   # durable/replicated frontier
+        self._waves: dict[int, dict] = {}       # CM-held WAL tail (process)
         if mode == "inproc":
             # ONE rehydrated GraphDB: every coordinator wraps the same
             # store object — zero array duplication, writes fleet-visible
             self.db = self.cache.restart(name)
+            self.rlog: Optional[ReplicationLog] = None
+            self.membership = Membership(
+                range(n_workers), lease_s=lease_s,
+                clock=membership_clock or time.monotonic, owner=self.db)
             for cid in range(n_workers):
-                coord = Coordinator(cid, self.db, **server_kw)
+                # cid 0 starts as write-primary; the commit-time fence is
+                # the CM's membership view — a deposed primary's wave
+                # close is refused even if it missed its demote frame
+                coord = Coordinator(
+                    cid, self.db,
+                    role="primary" if cid == 0 else "replica",
+                    fence=(lambda c=cid: self.membership.is_primary(c)),
+                    **server_kw)
                 self.workers[cid] = _InprocWorker(cid, coord, self.db)
         else:
             import multiprocessing as mp
@@ -309,24 +467,42 @@ class A1Frontend:
             # spawn, not fork: jax state does not survive a fork
             self._manifest = self.cache.export_shared(name)
             self.db = _PinBoard()               # pins + faults, no arrays
+            self.membership = Membership(
+                range(n_workers), lease_s=lease_s,
+                clock=membership_clock or time.monotonic, owner=self.db)
+            # the CM's durable replication log: committed wave records are
+            # pulled from the primary and shipped to the ObjectStore
+            # before a commit is acked (§4); the `{graph}.epoch` meta is
+            # the durable fence a deposed primary cannot get past
+            self.rlog = ReplicationLog(objectstore or ObjectStore(),
+                                       ship_waves=True)
+            self.rlog.epoch = self.membership.epoch
             ctx = mp.get_context("spawn")
             for cid in range(n_workers):
                 parent, child = ctx.Pipe()
                 proc = ctx.Process(
                     target=_worker_main,
-                    args=(cid, self._manifest, child, dict(server_kw)),
+                    args=(cid, self._manifest, child, dict(server_kw),
+                          "primary" if cid == 0 else "replica"),
                     daemon=True)
                 proc.start()
                 port = parent.recv()
                 parent.close()
                 self.workers[cid] = _ProcWorker(
-                    cid, proc, WorkerClient("127.0.0.1", port))
+                    cid, proc, WorkerClient(
+                        "127.0.0.1", port, recv_timeout=recv_timeout_s,
+                        seed=cid))
         for cid in self.workers:
             self._load[cid] = 0.0
+            self._applied[cid] = 0
 
     # -- routing --------------------------------------------------------
     def _alive(self) -> list[int]:
-        return [cid for cid, w in self.workers.items() if w.alive]
+        """Route-able workers: process up AND lease current (a suspect or
+        evicted member stops taking fresh traffic before it is dead)."""
+        routable = set(self.membership.routable())
+        return [cid for cid, w in self.workers.items()
+                if w.alive and cid in routable]
 
     def _least_loaded(self) -> int:
         """Least-loaded alive coordinator: wave-wall EWMA x queue depth,
@@ -338,25 +514,56 @@ class A1Frontend:
         return min(alive, key=lambda c: (self._load[c],
                                          (c + self._rr) % len(self.workers)))
 
+    def _raw_request(self, w, cid: int, msg: dict) -> Optional[dict]:
+        try:
+            return w.request(msg)
+        except faults_mod.InjectedFault:
+            # the worker "crashed" executing the frame (e.g. the
+            # primary.crash.midwave schedule): same outcome as a dead
+            # process — evict, fail over, let the caller re-route
+            self.kill_worker(cid)
+            return None
+
     def _rpc(self, cid: int, msg: dict, retries: int = 4) -> Optional[dict]:
         """One logical request: a fixed ``rid`` across retransmits, so a
         dropped frame is retried and a duplicate delivery is absorbed by
-        the coordinator's rid cache."""
+        the coordinator's rid cache.  Every frame is stamped with the
+        CM's configuration epoch and primary — the receiver adopts newer
+        configs, bounces stale senders, and demotes itself when the stamp
+        proves it lost the primaryship."""
         w = self.workers.get(cid)
         if w is None or not w.alive:
             return None
         msg.setdefault("rid", uuid.uuid4().hex)
-        resp = w.request(msg)
+        msg["epoch"] = self.membership.epoch
+        msg.setdefault("primary", self.membership.primary)
+        resp = self._raw_request(w, cid, msg)
         while resp is None and retries > 0 and w.alive:
+            if getattr(w, "suspect", False):
+                break                 # hung, not dead: don't hammer it
             self.stats["retransmits"] += 1
             retries -= 1
-            resp = w.request(msg)
+            resp = self._raw_request(w, cid, msg)
+        if resp is not None and resp.get("status") == "STALE_EPOCH":
+            # the config moved while this frame was in flight: restamp at
+            # the current epoch under a FRESH rid and retry once (the old
+            # rid's cached answer, if any, belongs to the old config)
+            msg = dict(msg)
+            msg["rid"] = uuid.uuid4().hex
+            msg["epoch"] = self.membership.epoch
+            msg["primary"] = self.membership.primary
+            resp = self._raw_request(w, cid, msg)
         if resp is not None:
             load = resp.pop("_load", None)
             if load is not None:
                 self._load[cid] = (max(load["wave_ms"], 0.01)
                                    * (1 + load["inflight"]))
-        return resp
+            return resp
+        if not w.alive:
+            self._on_worker_down(cid)     # idempotent (kill may have run)
+        elif getattr(w, "suspect", False):
+            self.membership.suspect(cid)  # lease stops renewing
+        return None
 
     def _maybe_crash_route_target(self, cid: int) -> bool:
         """``cluster.worker.crash``: the chaos site that kills the routing
@@ -576,56 +783,258 @@ class A1Frontend:
 
     # -- writes ---------------------------------------------------------
     def submit_write(self, ops, *, budget_ms: Optional[float] = None) -> str:
-        """Admit one write through the SLB (inproc fleets only).
+        """Admit one write through the SLB: routed to the elected
+        write-primary (both modes).
 
-        In process mode each worker's device arrays are private copies of
-        the shared host segment — a write there would be worker-local, so
-        the contract is explicit: writes need the inproc fleet."""
-        if self.mode == "process":
-            raise RuntimeError(
-                "process-mode workers are read-path scale-out over an "
-                "immutable shared segment; route writes to an inproc "
-                "fleet")
+        The frontend chooses the wid up front — it doubles as the
+        transaction's rid, so a retransmit to a freshly promoted primary
+        that already replayed the original wave resolves to the ORIGINAL
+        result instead of committing twice (exactly once, §4).  In
+        process mode the commit is not acked until the wave record is
+        durable in the ObjectStore and replayed on every alive replica —
+        read-your-write holds on any coordinator."""
         self.stats["routed_writes"] += 1
         encoded = [encode_write_op(o) for o in ops]
-        for _ in range(len(self.workers) + 1):
-            cid = self._least_loaded()
-            self._maybe_crash_route_target(cid)
-            resp = self._rpc(cid, {"op": "write", "ops": encoded,
-                                   "budget_ms": budget_ms})
-            if resp is not None and resp["status"] == "OK":
-                return f"{cid}:{resp['wid']}"
-            if resp is not None:
-                pub = f"{cid}:{uuid.uuid4().hex}"
-                self._local[pub] = {"status": "ABORTED",
-                                    "reason": resp.get("reason", "")}
+        wid = uuid.uuid4().hex
+        pub = f"w:{wid}"
+        for _ in range(len(self.workers) + 2):
+            p = self.membership.primary
+            if p is None:
+                raise RuntimeError("no alive coordinators")
+            self._maybe_crash_route_target(p)
+            p = self.membership.primary   # the crash may have failed over
+            if p is None:
+                raise RuntimeError("no alive coordinators")
+            resp = self._rpc(p, {"op": "write", "ops": encoded,
+                                 "budget_ms": budget_ms, "wid": wid})
+            if resp is None:
+                continue       # primary died mid-route; failover ran
+            if resp["status"] == "NOT_PRIMARY":
+                continue       # stale role view; re-read the membership
+            if resp["status"] == "OK":
+                self._widmeta[pub] = {"cid": p, "wid": wid}
                 return pub
+            self._local[pub] = {"status": "ABORTED",
+                                "reason": resp.get("reason", "")}
+            return pub
         raise RuntimeError("no alive coordinators")
 
     def write_result(self, pub: str) -> Optional[dict]:
+        """Outcome of a routed write; ``None`` while its wave is open.
+
+        The ack barrier: a COMMITTED result is only returned after
+        :meth:`_replicate` made the wave durable and fleet-visible
+        (process mode; inproc shares one store, so it is a no-op).  If
+        the owning primary died, the write resolves through the rid-
+        idempotent failover path — the original result when the commit
+        survived, ``ABORTED_FAILOVER`` with a retry hint otherwise."""
         local = self._local.pop(pub, None)
         if local is not None:
             return local
-        cid, wid = pub.split(":", 1)
-        resp = self._rpc(int(cid), {"op": "write_result", "wid": wid})
+        meta = self._widmeta.get(pub)
+        if meta is None:
+            if ":" in pub:                  # legacy "<cid>:<wid>" stamp
+                cid, wid = pub.split(":", 1)
+                resp = self._rpc(int(cid), {"op": "write_result",
+                                            "wid": wid})
+                if resp is None:
+                    return {"status": "ABORTED", "reason": "worker-lost"}
+                return resp.get("result")
+            return {"status": "UNKNOWN", "reason": "no such write id"}
+        w = self.workers.get(meta["cid"])
+        owner_lost = (w is None or not w.alive
+                      or meta["cid"] not in self.membership.admitted())
+        resp = None
+        if not owner_lost:
+            resp = self._rpc(meta["cid"], {"op": "write_result",
+                                           "wid": meta["wid"]})
+            owner_lost = resp is None and not self.workers[meta["cid"]].alive
+        if owner_lost:
+            self._on_worker_down(meta["cid"])   # idempotent
+            r = self._local.pop(pub, None)      # failover may have resolved
+            if r is None:
+                r = self._resolve_by_rid(meta)
+            self._widmeta.pop(pub, None)
+            if r.get("status") == "COMMITTED":
+                self._replicate()               # ack barrier still holds
+            return r
         if resp is None:
-            return {"status": "ABORTED", "reason": "worker-lost"}
-        return resp.get("result")
+            return None                         # hung owner: poll again
+        r = resp.get("result")
+        if r is None:
+            return None                         # wave still open
+        self._widmeta.pop(pub, None)
+        if r.get("status") == "COMMITTED":
+            self._replicate()                   # ack barrier
+        return r
+
+    def _resolve_by_rid(self, meta: dict) -> dict:
+        """Failover resolution for a write stranded on a dead primary:
+        ask the CURRENT primary whether that rid ever committed (directly
+        or via wave replay).  Found -> the original result, exactly once;
+        not found -> the txn died unacked and the client retries."""
+        p = self.membership.primary
+        if p is not None:
+            resp = self._rpc(p, {"op": "write_by_rid", "wid": meta["wid"]})
+            r = resp.get("result") if resp is not None else None
+            if r is not None:
+                return r
+        return {"status": "ABORTED_FAILOVER",
+                "reason": "primary failed before the commit replicated; "
+                          "safe to retry",
+                "retry_after_ms": 5.0}
+
+    # -- replication (process mode: §4 wave shipping) --------------------
+    def _pins(self) -> list[int]:
+        return [int(t) for t in self.db.active_query_ts]
+
+    def _replicate(self) -> None:
+        """Pull committed waves from the primary, make them durable, fan
+        them out to every alive replica.  Inproc fleets share one store
+        (replication is the identity); in process mode this is the ack
+        barrier and the replication-lag pump.  ``replication.ship.drop``
+        loses a whole round — lag grows, nothing is acked on top of it."""
+        if self.rlog is None:
+            return
+        p = self.membership.primary
+        if p is None:
+            return
+        if faults_mod.check(self.db, "replication.ship.drop"):
+            self.stats["ship_drops"] += 1
+            return
+        resp = self._rpc(p, {"op": "ship", "after": self._shipped_seq})
+        if resp is None or resp.get("status") != "OK":
+            return
+        waves = resp.get("waves", [])
+        if not waves:
+            return
+        for rec in waves:
+            self._waves[int(rec["seq"])] = rec
+            try:
+                self.rlog.append_wave(rec)      # durable point
+            except IOError:
+                pass                            # sweeper retries the ship
+        while len(self._waves) > 2048:          # ObjectStore holds the WAL
+            del self._waves[min(self._waves)]
+        self._shipped_seq = max(self._shipped_seq, int(waves[-1]["seq"]))
+        self._applied[p] = max(self._applied.get(p, 0), self._shipped_seq)
+        self.membership.heartbeat(p, applied_seq=self._shipped_seq)
+        self.stats["replicated_waves"] += len(waves)
+        pins = self._pins()
+        for cid in self._alive():
+            if cid == p:
+                continue
+            r = self._rpc(cid, {"op": "replicate", "waves": waves,
+                                "pins": pins})
+            if r is not None and r.get("status") == "OK":
+                seq = int(r.get("applied_seq", 0))
+                self._applied[cid] = max(self._applied.get(cid, 0), seq)
+                self.membership.heartbeat(cid, applied_seq=seq)
+
+    # -- membership / failover -------------------------------------------
+    def _on_worker_down(self, cid: int) -> None:
+        """A worker is gone for sure (dead process, killed inproc, grace
+        expired): evict it, complete any failover, re-route its work."""
+        events = self.membership.evict(cid, reason="crash")
+        if not events:
+            return                    # already out of the configuration
+        self._handle_events(events)
+        self._rescue(cid)
+
+    def _handle_events(self, events: list) -> None:
+        for ev in events:
+            if ev["type"] == "elect":
+                self._complete_failover(ev["epoch"], ev["primary"])
+
+    def _complete_failover(self, epoch: int, new_primary) -> None:
+        """Finish an election: durable epoch fence, WAL-tail replay on
+        the elected replica, explicit promotion, config broadcast, and
+        resolution of every write stranded on the dead primary."""
+        if new_primary is None:
+            return
+        self.stats["failovers"] += 1
+        tail = []
+        if self.rlog is not None:
+            # fence FIRST: once `{graph}.epoch` advances, a deposed
+            # primary's sweep can never reach durable state (Fenced).
+            # Monotonic — a nested failover may already have fenced higher
+            key = f"{self.rlog.graph}.epoch"
+            if int(epoch) > int(self.rlog.os.get_meta(key, 0)):
+                self.rlog.os.put_meta(key, int(epoch))
+            self.rlog.epoch = max(self.rlog.epoch or 0, int(epoch))
+            applied = self._applied.get(new_primary, 0)
+            tail = [self._waves[s]
+                    for s in range(applied + 1, self._shipped_seq + 1)
+                    if s in self._waves]
+        resp = self._rpc(new_primary, {"op": "promote", "epoch": int(epoch),
+                                       "waves": tail})
+        if resp is None or resp.get("status") != "OK":
+            return      # it died too: _rpc's down-path re-elected already
+        seq = int(resp.get("applied_seq", 0))
+        self._applied[new_primary] = max(
+            self._applied.get(new_primary, 0), seq)
+        self.membership.heartbeat(new_primary, applied_seq=seq)
+        # propagate the new configuration now: the epoch/primary stamp on
+        # the heartbeat demotes any coordinator that still thinks it is
+        # primary (its staged writes answer ABORTED_FAILOVER)
+        for cid in self._alive():
+            if cid != new_primary:
+                self._rpc(cid, {"op": "heartbeat"})
+        # resolve writes stranded on evicted owners: committed waves are
+        # found by rid on the new primary (exactly once); anything else
+        # aborts with a retry hint — never a silent drop
+        admitted = set(self.membership.admitted())
+        for pub, meta in list(self._widmeta.items()):
+            w = self.workers.get(meta["cid"])
+            if (w is not None and w.alive and meta["cid"] in admitted):
+                continue
+            self._local[pub] = self._resolve_by_rid(meta)
+            del self._widmeta[pub]
 
     # -- fleet control ---------------------------------------------------
     def kill_worker(self, cid: int) -> None:
         """Kill one coordinator (chaos/ops).  In-flight queries it owned
-        re-route; its continuations take over lazily at next_page."""
+        re-route; its continuations take over lazily at next_page; if it
+        was the write-primary, failover completes before this returns."""
         w = self.workers.get(cid)
-        if w is None or not w.alive:
+        if w is None:
             return
-        self.stats["worker_kills"] += 1
-        w.kill()
-        self._rescue(cid)
+        if w.alive:
+            self.stats["worker_kills"] += 1
+            w.kill()
+        self._on_worker_down(cid)
+
+    def _membership_quantum(self) -> None:
+        """One CM tick: renew leases (frames in process mode; liveness is
+        direct inproc — the worker IS this process), advance the lease
+        state machine, complete any resulting failover, pump replication."""
+        if self.mode == "inproc":
+            seq = int(getattr(self.db, "wave_seq", 0))
+            for cid in self.membership.admitted():
+                w = self.workers.get(cid)
+                if w is not None and w.alive:
+                    self._applied[cid] = seq    # shared store: zero lag
+                    self.membership.heartbeat(cid, applied_seq=seq)
+        else:
+            pins = self._pins()
+            for cid in list(self.membership.admitted()):
+                w = self.workers.get(cid)
+                if w is None or not w.alive:
+                    continue
+                resp = self._rpc(cid, {"op": "heartbeat", "pins": pins})
+                if resp is not None and resp.get("status") == "OK":
+                    seq = int(resp.get("applied_seq", 0))
+                    self._applied[cid] = max(
+                        self._applied.get(cid, 0), seq)
+                    self.membership.heartbeat(cid, applied_seq=seq)
+        self._handle_events(self.membership.tick())
+        self._replicate()
 
     def pump(self) -> int:
-        """One fleet quantum: close due waves on every coordinator."""
+        """One fleet quantum: membership/replication first, then close
+        due waves on every coordinator."""
         n = 0
+        self._membership_quantum()
         for cid in self._alive():
             resp = self._rpc(cid, {"op": "pump"})
             if resp is not None:
@@ -642,9 +1051,26 @@ class A1Frontend:
 
     def cluster_stats(self) -> dict:
         """Frontend counters + per-worker /stats (budget histograms
-        aggregated fleet-wide)."""
+        aggregated fleet-wide) + the membership view and per-replica
+        replication lag (waves shipped but not yet applied there)."""
         agg = {"frontend": dict(self.stats), "workers": {},
-               "budget_spend_ms": None}
+               "budget_spend_ms": None,
+               "membership": self.membership.view()}
+        if self.rlog is not None:
+            frontier = self._shipped_seq
+            applied = {c: self._applied.get(c, 0)
+                       for c in self.membership.admitted()}
+        else:           # one shared store: every alive worker is current
+            frontier = int(getattr(self.db, "wave_seq", 0))
+            applied = {c: frontier for c in self.membership.admitted()
+                       if self.workers[c].alive}
+        agg["replication"] = {
+            "shipped_seq": frontier,
+            "applied_seq": applied,
+            "lag": {c: max(0, frontier - s) for c, s in applied.items()},
+        }
+        agg["replication"]["max_lag"] = max(
+            agg["replication"]["lag"].values(), default=0)
         for w in self.workers.values():
             if isinstance(w, _InprocWorker):
                 agg["frontend"]["frames_sent"] += w.chan.sent

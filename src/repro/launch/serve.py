@@ -146,8 +146,14 @@ class A1Server:
                  result_ttl: Optional[float] = None,
                  shared_knee: int = 64,
                  breaker_window: int = 8, breaker_threshold: float = 0.5,
-                 breaker_cooldown: int = 4):
+                 breaker_cooldown: int = 4,
+                 write_fence: Optional[callable] = None):
         self.db = db
+        # commit-time fence: when set, every wave close consults it and a
+        # False answer aborts the whole wave ABORTED_FAILOVER — the last
+        # line against a deposed primary committing after its epoch moved
+        # on (the cluster front wires this to membership, §2/FaRM §3)
+        self.write_fence = write_fence
         self.caps = caps or QueryCaps()
         self.page = page_size
         self.ttl = continuation_ttl
@@ -226,6 +232,7 @@ class A1Server:
                       "continuation_flushes": 0, "cursor_refills": 0,
                       "write_waves": 0, "write_txns": 0,
                       "write_aborts": 0, "write_rejects": 0,
+                      "write_fenced": 0,
                       "admitted": 0, "served": 0, "sheds": 0,
                       "tenant_sheds": 0, "read_rejects": 0,
                       "read_waves": 0, "wave_faults": 0,
@@ -906,7 +913,8 @@ class A1Server:
     # ------------------------------------------------------------------
     # write admission (§3.4 grows its first write-side machinery)
     # ------------------------------------------------------------------
-    def submit_write(self, ops, *, budget_ms: Optional[float] = None) -> str:
+    def submit_write(self, ops, *, budget_ms: Optional[float] = None,
+                     wid: Optional[str] = None) -> str:
         """Admit one client write: a list of mutation-op records.
 
         The ops stage into their own transaction at the admission snapshot
@@ -921,12 +929,25 @@ class A1Server:
         wave never sees them.  Write budgets drive *scheduling* only: an
         admitted write always commits or aborts through its wave —
         truncating a half-applied transaction is not a thing.
+
+        ``wid=`` lets the cluster frontend pin the id (its rid): if that
+        rid already committed here — a retransmit to a freshly promoted
+        primary that replayed the original wave — the ORIGINAL result is
+        restored instead of committing twice (exactly-once, §4).
         """
-        wid = uuid.uuid4().hex
+        wid = wid or uuid.uuid4().hex
+        hit = getattr(self.db, "applied_rids", {}).get(wid)
+        if hit is not None:
+            self._write_results[wid] = {
+                "status": "COMMITTED", "reason": None,
+                "gids": list(hit["gids"]), "ts": hit["ts"]}
+            self._write_exp[wid] = time.monotonic() + self.result_ttl
+            return wid
         if budget_ms is None:
             budget_ms = (None if self.write_deadline_ms is not None
                          else self.budget_ms)
         t = self.db.create_transaction()
+        t.rid = wid
         try:
             staged = self.db.write(list(ops), txn=t)
         except ValueError as e:
@@ -955,6 +976,22 @@ class A1Server:
         """Close the open mutation wave now (deadline expiry, shutdown)."""
         return self._maybe_close_write_wave(force=True)
 
+    def abort_staged_writes(self, reason: str = "primary deposed") -> int:
+        """Demotion path: answer every staged (not yet waved) write
+        ABORTED_FAILOVER with a retry hint.  A replica must never commit,
+        and an admitted write must never vanish silently."""
+        wave, self._write_q = self._write_q, []
+        exp = time.monotonic() + self.result_ttl
+        for wid, _, gids, *_ in wave:
+            self._write_results[wid] = {
+                "status": "ABORTED_FAILOVER", "reason": reason,
+                "gids": [-1] * len(gids), "ts": -1,
+                "retry_after_ms": self._wwave_ms}
+            self._write_exp[wid] = exp
+        self.stats["write_fenced"] = (
+            self.stats.get("write_fenced", 0) + len(wave))
+        return len(wave)
+
     def _maybe_close_write_wave(self, force: bool = False) -> int:
         if not self._write_q:
             return 0
@@ -972,8 +1009,29 @@ class A1Server:
 
     def _close_write_wave(self) -> int:
         wave, self._write_q = self._write_q, []
+        if self.write_fence is not None and not self.write_fence():
+            # deposed between admission and commit: the store is untouched
+            # and every queued write answers ABORTED_FAILOVER (retryable
+            # through the new primary) — never a silent drop, never a
+            # split-brain commit
+            exp = time.monotonic() + self.result_ttl
+            for wid, _, gids, *_ in wave:
+                self._write_results[wid] = {
+                    "status": "ABORTED_FAILOVER",
+                    "reason": "primary deposed before wave close",
+                    "gids": [-1] * len(gids), "ts": -1,
+                    "retry_after_ms": self._wwave_ms}
+                self._write_exp[wid] = exp
+            self.stats["write_fenced"] = (
+                self.stats.get("write_fenced", 0) + len(wave))
+            return len(wave)
         t0 = time.monotonic()
         res = self.db.write([t for _, t, *_ in wave])
+        # the worst-moment crash: the wave COMMITTED (it is in the store
+        # and the wave log) but this primary dies before a single result
+        # is stored or acked — failover must surface those commits via
+        # rid-idempotent replay, exactly once
+        faults_mod.check(self.db, "primary.crash.midwave")
         wall = (time.monotonic() - t0) * 1e3
         if self._wwave_seeded:
             self._wwave_ms = 0.7 * self._wwave_ms + 0.3 * wall

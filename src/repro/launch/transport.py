@@ -177,30 +177,95 @@ def _recv_frame(sock: socket.socket) -> Optional[dict]:
 
 
 class WorkerClient:
-    """Blocking JSON-frame request/response client to one worker socket.
+    """JSON-frame request/response client to one worker socket.
 
     One in-flight request at a time per client (the frontend serializes
     per-worker traffic; cross-worker requests are concurrent because each
-    worker has its own client/socket)."""
+    worker has its own client/socket).
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
+    A worker that *hangs* (accepts the frame, never answers) must not
+    wedge the frontend: every recv is bounded by ``recv_timeout``.  A
+    timeout desynchronizes the frame stream — the late response would
+    misalign against the next request — so the socket is dropped and
+    rebuilt with a bounded, jitter-backed reconnect.  The outcome is
+    surfaced as ``suspect=True`` (hung, lease should stop renewing —
+    membership's problem) rather than ``dead`` (connection refused/reset:
+    the process is gone).  A clean round trip clears suspicion."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0, *,
+                 recv_timeout: Optional[float] = None,
+                 reconnect_attempts: int = 3,
+                 backoff_s: float = 0.05, seed: int = 0):
         self.addr = (host, port)
-        self._sock = socket.create_connection(self.addr, timeout=timeout)
+        self.connect_timeout = timeout
+        self.recv_timeout = timeout if recv_timeout is None else recv_timeout
+        self.reconnect_attempts = int(reconnect_attempts)
+        self.backoff_s = float(backoff_s)
+        self.suspect = False
+        self.timeouts = 0
+        self.reconnects = 0
+        import random
+        self._rng = random.Random((seed << 17) ^ port)
         self._lock = threading.Lock()
+        self._sock: Optional[socket.socket] = None
+        self._connect()
+
+    def _connect(self) -> None:
+        self._sock = socket.create_connection(
+            self.addr, timeout=self.connect_timeout)
+        self._sock.settimeout(self.recv_timeout)
+
+    def _drop_sock(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _reconnect(self) -> bool:
+        """Bounded reconnect with jittered exponential backoff: the fleet's
+        clients must not stampede a worker that is coming back up."""
+        import time as _time
+        self._drop_sock()
+        for attempt in range(self.reconnect_attempts):
+            _time.sleep(self.backoff_s * (2 ** attempt)
+                        * (0.5 + self._rng.random()))
+            try:
+                self._connect()
+                self.reconnects += 1
+                return True
+            except OSError:
+                continue
+        return False
 
     def request(self, msg: dict) -> Optional[dict]:
+        """One round trip; ``None`` means no answer — check ``suspect`` to
+        tell a hung worker (route around, don't bury) from a dead one."""
         with self._lock:
+            if self._sock is None and not self._reconnect():
+                return None                   # worker gone
             try:
                 self._sock.sendall(encode_frame(msg))
-                return _recv_frame(self._sock)
+                resp = _recv_frame(self._sock)
+                if resp is not None:
+                    self.suspect = False      # clean round trip
+                return resp
+            except socket.timeout:
+                # hung, not dead: the stream is now desynced — drop it,
+                # rebuild lazily, and flag the worker suspect so the
+                # frontend routes around it instead of blocking forever
+                self.timeouts += 1
+                self.suspect = True
+                self._drop_sock()
+                self._reconnect()
+                return None
             except OSError:
+                self._drop_sock()
                 return None                   # worker gone
 
     def close(self) -> None:
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        self._drop_sock()
 
 
 def serve_worker(handler: Callable[[dict], dict], host: str = "127.0.0.1",

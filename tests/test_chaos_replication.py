@@ -218,6 +218,69 @@ def test_fail_next_sweeper_backlog():
     assert cr.get_vertex("node", 1) is not None   # durable after drain
 
 
+def test_ship_drop_round_never_advances_watermarks():
+    """``replication.ship.drop`` loses a whole ship round: the durable
+    ``t_R`` must stay exactly where the last *successful* batch left it
+    (a watermark ahead of the rows would turn consistent recovery into a
+    lie), and the next round drains the backlog."""
+    from repro.core.faults import FaultInjector
+    db, log, store, cfg = make_db()
+    db.create_vertex("node", 0, {"w": 1.0})       # durable baseline
+    t_r0 = store.get_meta("g.t_R", 0)
+    db.faults = FaultInjector(1).inject(
+        "replication.ship.drop", action="race", times=(0,))
+    db.create_vertex("node", 1, {"w": 2.0})       # this ship round is lost
+    assert log.lag() > 0
+    assert store.get_meta("g.t_R", 0) == t_r0     # never ahead of the rows
+    cr = consistent_recover(store, db, cfg)
+    assert cr.get_vertex("node", 1) is None
+    log.sweep()                                   # retry round ships
+    assert log.lag() == 0
+    assert store.get_meta("g.t_R", 0) > t_r0
+    cr = consistent_recover(store, db, cfg)
+    assert cr.get_vertex("node", 1) is not None
+
+
+def test_wave_frontier_tracks_durable_waves_only():
+    """The WAL frontier (``wave_frontier``) obeys the same discipline as
+    ``t_R``: it advances only past wave records the store actually holds
+    — a failover reading the WAL tail must never skip an undurable wave."""
+    from repro.core.faults import FaultInjector
+    store = ObjectStore()
+    log = ReplicationLog(store, ship_waves=True)
+    log.faults = FaultInjector(1).inject(
+        "replication.ship.drop", action="race", times=(0,))
+    rec = {"seq": 1, "ts": 5, "epoch": 1,
+           "txns": [{"rid": "r1", "create_v": [[0, 0, 0, [1.0], [0]]],
+                     "update_v": [], "delete_v": [],
+                     "create_e": [], "delete_e": []}]}
+    log.append_wave(rec)                          # ship round dropped
+    assert store.get_meta("g.wave_frontier", 0) == 0
+    assert not store.scan("g.waves")
+    log.sweep()
+    assert store.get_meta("g.wave_frontier", 0) == 1
+    assert len(store.scan("g.waves")) == 1
+
+
+def test_sweep_fenced_by_durable_epoch():
+    """A deposed primary's log (epoch older than the store's durable
+    ``{g}.epoch`` meta) can never reach durable state: the sweep raises
+    ``Fenced`` before shipping a byte, and the watermarks stay put."""
+    from repro.core.replication import Fenced
+    db, log, store, cfg = make_db()
+    db.create_vertex("node", 0, {"w": 1.0})
+    t_r0 = store.get_meta("g.t_R", 0)
+    rows0 = len(store.scan("g.vertices"))
+    log.epoch = 1
+    store.put_meta("g.epoch", 2)                  # failover fenced epoch 2
+    db.create_vertex("node", 1, {"w": 2.0})       # fence blocks the ship
+    assert log.lag() > 0
+    with pytest.raises(Fenced):
+        log.sweep()
+    assert store.get_meta("g.t_R", 0) == t_r0
+    assert len(store.scan("g.vertices")) == rows0  # nothing leaked past it
+
+
 # ---------------------------------------------------------------------------
 # hypothesis sweep: random interleavings x random cut points
 # ---------------------------------------------------------------------------

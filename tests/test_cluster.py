@@ -162,6 +162,14 @@ def test_mixed_read_write_nearest_traffic_four_coordinators():
         st = fe.cluster_stats()
         assert sum(w["admitted"] for w in st["workers"].values()) == 8
         assert sum(st["budget_spend_ms"]["queue"]) >= 8
+        # membership/replication are /stats-visible: one primary at epoch
+        # 1, every lease alive, and a shared store is never behind itself
+        assert st["membership"]["epoch"] == 1
+        assert st["membership"]["primary"] == 0
+        assert all(l["state"] == "alive"
+                   for l in st["membership"]["leases"].values())
+        assert st["replication"]["shipped_seq"] >= 1
+        assert st["replication"]["max_lag"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -186,12 +194,67 @@ def test_wire_handle_dispatch_and_stats_aggregation():
 
 
 # ---------------------------------------------------------------------------
-# process mode: real workers over one shared segment (read scale-out)
+# transport resilience: a hung worker must not wedge the frontend (S1)
 # ---------------------------------------------------------------------------
+
+def test_worker_client_recv_timeout_suspect_then_recovers():
+    """A worker that accepts the frame but never answers: the client's
+    recv is bounded, the worker is flagged ``suspect`` (hung, not dead),
+    the desynced stream is rebuilt with a bounded jittered reconnect, and
+    the next clean round trip clears the suspicion."""
+    from repro.launch.transport import WorkerClient, serve_worker
+    state = {"n": 0}
+
+    def handler(msg):
+        state["n"] += 1
+        if state["n"] == 2:
+            time.sleep(0.6)                     # hang exactly one request
+        return {"status": "OK", "n": state["n"]}
+
+    port, shutdown = serve_worker(handler)
+    try:
+        c = WorkerClient("127.0.0.1", port, recv_timeout=0.15,
+                         reconnect_attempts=3, backoff_s=0.01)
+        assert c.request({"op": "x"})["status"] == "OK"
+        assert not c.suspect
+        t0 = time.monotonic()
+        assert c.request({"op": "x"}) is None   # hung: bounded wait
+        assert time.monotonic() - t0 < 0.5      # did not sit out the hang
+        assert c.suspect and c.timeouts == 1
+        assert c.reconnects >= 1                # stream rebuilt
+        r = c.request({"op": "x"})
+        assert r is not None and r["status"] == "OK"
+        assert not c.suspect                    # clean round trip clears it
+        c.close()
+    finally:
+        shutdown()
+
+
+# ---------------------------------------------------------------------------
+# process mode: real workers over one shared segment; writes are
+# fleet-visible through replicated waves, and failover keeps serving them
+# ---------------------------------------------------------------------------
+
+def _worker_query(fe, cid, doc, tries=500):
+    """Route one query to a SPECIFIC worker and poll its result there."""
+    resp = fe._rpc(cid, {"op": "query", "doc": doc, "budget_ms": 1e6})
+    assert resp["status"] == "OK"
+    fe._rpc(cid, {"op": "flush"})
+    for _ in range(tries):
+        r = fe._rpc(cid, {"op": "result", "qid": resp["qid"]})
+        if r is not None and r.get("result") is not None:
+            return r["result"]
+        time.sleep(0.02)
+    raise AssertionError(f"worker {cid} never answered")
+
 
 def test_process_mode_workers_map_one_segment():
     db = busy_db()
-    fe = A1Frontend(db, 2, mode="process", caps=CAPS, read_batch=1)
+    a_gid, found = db.lookup_vertex("actor", 323)
+    assert found
+    want = full_rows(db, SEL)
+    fe = A1Frontend(db, 2, mode="process", caps=CAPS, read_batch=1,
+                    write_batch=1)
     try:
         for i in range(4):
             pub = fe.submit_query(q_chain(i % 3), budget_ms=1e6)
@@ -204,15 +267,76 @@ def test_process_mode_workers_map_one_segment():
             solo = db.query([q_chain(i % 3)], caps=CAPS)
             assert row is not None and row["status"] == "OK"
             assert row["count"] == int(solo.counts[0])
-        # paged selects work over the wire too
+
+        # a write routed through the SLB commits on the primary, ships
+        # through the durable replication log, and replays on every
+        # replica BEFORE the client sees COMMITTED (the ack barrier)
+        wrow = fe.write_result(fe.submit_write([CreateVertex(
+            "film", 999, {"year": 2030, "genre": 0, "gross": 0.0})]))
+        assert wrow["status"] == "COMMITTED"
+        g999 = wrow["gids"][0]
+        wrow = fe.write_result(fe.submit_write([CreateEdge(
+            g999, a_gid, "film.actor")]))
+        assert wrow["status"] == "COMMITTED"
+        want_now = sorted(want + [g999])
+        # read-your-write on EVERY alive coordinator, no grace period
+        # (count form: unaffected by the fleet's results cap)
+        films_of_323 = q_chain(323, direction="in")
+        base = int(db.query([films_of_323], caps=CAPS).counts[0])
+        for cid in fe._alive():
+            res = _worker_query(fe, cid, films_of_323)
+            assert res["count"] == base + 1, f"worker {cid} stale"
+        st = fe.cluster_stats()
+        assert st["membership"]["epoch"] == 1
+        assert st["membership"]["primary"] == 0
+        assert st["replication"]["shipped_seq"] >= 2
+        assert st["replication"]["max_lag"] == 0      # acked => applied
+        assert fe.stats["replicated_waves"] >= 2
+        # the wave records are durable in the ObjectStore WAL table
+        assert len(fe.rlog.os.scan("g.waves")) >= 2
+        assert fe.rlog.os.get_meta("g.wave_frontier", 0) >= 2
+
+        # paged selects over the wire; the frontend is pin-of-record and
+        # pushes its pins to every worker (fleet_pins) via heartbeats
         page, tok = fe.select_paged(SEL)
+        owner = fe._tokmeta[tok]["cid"]
+        read_ts = fe._tokmeta[tok]["read_ts"]
+        fe.pump()                                     # pins reach workers
         got = list(page)
+
+        # S2: kill the owner mid-pagination.  The takeover serves the
+        # remaining pages; afterwards the released pin must actually
+        # unblock MVCC GC on the survivors (a dead worker's continuations
+        # must never wedge the fleet's garbage collection)
+        fe.kill_worker(owner)
         while tok is not None:
             page, tok = fe.next_page(tok)
             got.extend(page)
-        assert sorted(int(x) for x in got) == full_rows(db, SEL)
-        # writes are the inproc fleet's job: the segment is immutable
-        with pytest.raises(RuntimeError, match="inproc"):
-            fe.submit_write([CreateVertex("actor", 999)])
+        assert sorted(int(x) for x in got) == want_now
+        assert not fe.db.active_query_ts              # pin-of-record clear
+        fe.pump()                                     # empty pins fan out
+        survivor = fe._alive()[0]
+        hb = fe._rpc(survivor, {"op": "heartbeat", "pins": fe._pins()})
+        assert hb["gc_ts"] >= read_ts                 # pin no longer holds
+
+        # failover: the killed owner may have been the primary — either
+        # way the fleet still serves writes, exactly one primary exists,
+        # and the new commit is immediately readable on the survivor
+        st = fe.cluster_stats()
+        assert st["membership"]["epoch"] >= 2         # eviction fenced it
+        wrow = fe.write_result(fe.submit_write([CreateVertex(
+            "film", 998, {"year": 2031, "genre": 0, "gross": 0.0})]))
+        assert wrow["status"] == "COMMITTED"
+        res = _worker_query(fe, survivor, q_chain(0))
+        solo = db.query([q_chain(0)], caps=CAPS)
+        assert res["count"] == int(solo.counts[0])    # reads stay correct
+        # the commit advanced the survivor's clock PAST the dead owner's
+        # old pin: a dead coordinator's continuations never wedge MVCC GC
+        hb = fe._rpc(survivor, {"op": "heartbeat", "pins": fe._pins()})
+        assert hb["gc_ts"] > read_ts
+        if owner == 0:
+            assert fe.stats["failovers"] == 1
+            assert st["membership"]["primary"] == fe.membership.primary != 0
+            assert fe.rlog.os.get_meta("g.epoch", 0) >= 2   # durable fence
     finally:
         fe.close()
